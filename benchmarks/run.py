@@ -1,0 +1,47 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  python -m benchmarks.run [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV.  Mapping (DESIGN.md §6):
+  bench_jit_vs_aot        Table II   JIT vs AOT wall time
+  bench_codegen_overhead  Table IV   codegen overhead %
+  bench_strategies        Fig 9/10   3 workload-division strategies
+  bench_profile_counts    Fig 11     instruction/branch/bytes counters
+  bench_moe_dispatch      (§IV app)  MoE dispatch as SpMM
+  bench_roofline          (task)     roofline table from dry-run artifacts
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+MODULES = ("bench_jit_vs_aot", "bench_codegen_overhead",
+           "bench_strategies", "bench_profile_counts",
+           "bench_moe_dispatch", "bench_roofline")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failed = []
+    for mod_name in MODULES:
+        if args.only and args.only not in mod_name:
+            continue
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            for row in mod.run():
+                print(row, flush=True)
+        except Exception as e:
+            failed.append(mod_name)
+            print(f"{mod_name},0.0,ERROR:{type(e).__name__}:{e}",
+                  flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Graph convolution with JIT-planned SpMM — the paper's own application
+domain (GNNs; §I).  Trains a 2-layer GCN on a synthetic community graph
+for node classification; the neighborhood aggregation A_hat·H is our
+spmm with the structure planned once and cached across all steps.
+
+  PYTHONPATH=src python examples/gnn_graphconv.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CSRMatrix, compile_spmm
+from repro.core.jit_cache import JitCache
+
+# -- synthetic 2-community graph -------------------------------------------
+rng = np.random.default_rng(0)
+N, D_IN, D_H, CLASSES = 256, 16, 32, 2
+labels = (np.arange(N) >= N // 2).astype(np.int32)
+p_in, p_out = 0.08, 0.005
+rows, cols = [], []
+for i in range(N):
+    for j in range(i + 1, N):
+        p = p_in if labels[i] == labels[j] else p_out
+        if rng.random() < p:
+            rows += [i, j]
+            cols += [j, i]
+rows = np.array(rows + list(range(N)))          # + self loops
+cols = np.array(cols + list(range(N)))
+deg = np.bincount(rows, minlength=N).astype(np.float64)
+vals = 1.0 / np.sqrt(deg[rows] * deg[cols])     # sym-normalized A_hat
+a_hat = CSRMatrix.from_coo((N, N), rows, cols, vals.astype(np.float32))
+print(f"graph: {N} nodes, {a_hat.nnz} edges (incl self-loops)")
+
+# features: noisy community indicator
+feats = rng.standard_normal((N, D_IN)).astype(np.float32)
+feats[:, 0] += labels * 2.0
+X = jnp.asarray(feats)
+y = jnp.asarray(labels)
+
+# the JIT-planned aggregation operators (structure planned ONCE)
+cache = JitCache()
+agg_h = compile_spmm(a_hat, D_H, strategy="nnz_split", backend="ref",
+                     cache=cache)
+agg_out = compile_spmm(a_hat, CLASSES, strategy="nnz_split", backend="ref",
+                       cache=cache)
+a_vals = jnp.asarray(a_hat.vals)
+
+def init(rng_key):
+    k1, k2 = jax.random.split(rng_key)
+    return {"w1": jax.random.normal(k1, (D_IN, D_H)) * 0.2,
+            "w2": jax.random.normal(k2, (D_H, CLASSES)) * 0.2}
+
+def forward(params, x):
+    h = jax.nn.relu(agg_h(a_vals, x @ params["w1"]))    # A_hat (X W1)
+    return agg_out(a_vals, h @ params["w2"])            # A_hat (H W2)
+
+def loss_fn(params, x, yy):
+    logits = forward(params, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, yy[:, None], 1))
+
+@jax.jit
+def step(params, x, yy):
+    loss, g = jax.value_and_grad(loss_fn)(params, x, yy)
+    params = jax.tree.map(lambda p, gg: p - 0.5 * gg, params, g)
+    return params, loss
+
+params = init(jax.random.PRNGKey(0))
+for epoch in range(60):
+    params, loss = step(params, X, y)
+    if epoch % 10 == 0:
+        acc = float(jnp.mean(jnp.argmax(forward(params, X), -1) == y))
+        print(f"epoch {epoch:3d} loss {float(loss):.4f} acc {acc:.3f}")
+acc = float(jnp.mean(jnp.argmax(forward(params, X), -1) == y))
+print(f"final accuracy: {acc:.3f} (plan cached: {cache.stats()})")
+assert acc > 0.9, "GCN should separate the two communities"

@@ -1,0 +1,43 @@
+"""Batched serving example: prefill + greedy decode with KV/SSM caches,
+for an attention arch (ring-buffer SWA cache) and an attention-free one
+(O(1) state) — the two cache regimes of the serving stack.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.launch.serve import generate
+from repro.models.model import Model
+
+
+def demo(arch: str, batch=4, prompt_len=24, gen=12):
+    cfg = reduced(get_config(arch))
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(2, cfg.vocab_size, size=(batch, prompt_len)),
+        jnp.int32)
+    img = None
+    if cfg.family == "vlm":
+        img = jnp.asarray(rng.standard_normal(
+            (batch, cfg.num_image_tokens, cfg.d_model)) * 0.02, jnp.float32)
+    t0 = time.time()
+    out = generate(model, params, prompts, gen_len=gen,
+                   cache_len=prompt_len + gen + 1, image_embeds=img)
+    dt = time.time() - t0
+    assert out.shape == (batch, prompt_len + gen)
+    print(f"[serve_lm] {arch:24s} {batch}x({prompt_len}+{gen}) tokens "
+          f"in {dt:5.2f}s -> {batch*gen/dt:6.1f} tok/s; "
+          f"sample tail: {np.asarray(out[0, -6:])}")
+
+
+if __name__ == "__main__":
+    demo("mixtral-8x7b")        # SWA ring-buffer KV cache
+    demo("rwkv6-1.6b")          # O(1) recurrent state
+    demo("llama-3.2-vision-11b")  # cross-attn image cache

@@ -1,0 +1,121 @@
+"""Analytic per-chip HBM traffic model (the roofline memory term).
+
+XLA CPU's ``cost_analysis()['bytes accessed']`` is *unfused* — every HLO
+op's operands+outputs counted at full size — which overstates real HBM
+traffic by an order of magnitude (on TPU, fusion keeps elementwise
+chains in VMEM/VREGs).  The probes keep that number as an upper bound;
+the roofline memory term comes from this transparent component model
+(MaxText-style), which counts only true materialization points:
+
+  train:   params (FSDP-gathered, read fwd+recompute+bwd) + grad/opt
+           state traffic + per-layer activation boundaries (x6: w+r in
+           fwd, recompute, bwd) + flash-attention KV re-reads + SSM
+           chunk states + MoE dispatch buffers + logits/loss
+  prefill: the forward-only subset + KV cache writes
+  decode:  full param read (the classic decode floor) + KV cache read
+           + state read/write
+
+All quantities are per chip per step, in bytes.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+BF16 = 2
+F32 = 4
+
+
+def _axis_sizes(multi_pod: bool):
+    return {"dp": 32 if multi_pod else 16, "tp": 16,
+            "chips": 512 if multi_pod else 256}
+
+
+def hbm_traffic(cfg, shape, *, multi_pod: bool, remat: str = "full",
+                chunk_q: int = 512, ssm_chunk: int = 256) -> Dict[str, float]:
+    ax = _axis_sizes(multi_pod)
+    dp, tp = ax["dp"], ax["tp"]
+    kind = shape.kind
+    B = shape.global_batch
+    S = shape.seq_len
+    Bl = max(B // dp, 1)                     # per-chip batch
+    D, F, V = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    L = cfg.num_layers
+    n_params = cfg.param_count()
+    n_active = cfg.active_param_count()
+
+    t: Dict[str, float] = {}
+
+    if kind == "decode":
+        seq_tokens = 1
+        # decode floor: every (active) parameter is read once per token;
+        # TP splits the read across the model axis
+        t["params_read"] = n_active * BF16 / tp
+        # KV cache: read k+v fully, write one slot
+        n_attn = sum(1 for k in cfg.pattern if k == "attn") * cfg.num_periods
+        T = min(cfg.sliding_window or S, S)
+        kv_heads_l = max(cfg.num_kv_heads // tp, 1)
+        t["kv_cache"] = (n_attn * Bl * T * kv_heads_l * cfg.head_dim
+                         * BF16 * 2)
+        # SSM / rwkv states r+w
+        st = 0.0
+        for k in cfg.pattern:
+            if k == "mamba":
+                st += (cfg.mamba_d_inner / tp) * cfg.mamba_state * F32 * 2
+            if k == "rwkv":
+                st += (cfg.num_heads / tp) * cfg.head_dim ** 2 * F32 * 2
+        t["state"] = st * cfg.num_periods * Bl
+        t["activations"] = L * Bl * 1 * D * BF16 * 4
+        t["logits"] = Bl * 1 * (V / tp) * F32 * 2
+        return t
+
+    # train / prefill
+    reads = 3 if (kind == "train" and remat == "full") else \
+        (2 if kind == "train" else 1)
+    # FSDP all-gathered params land in HBM once per traversal per layer
+    t["params_read"] = n_params * BF16 / tp * reads
+    if kind == "train":
+        # grads f32 w+r, opt m/v read+write (f32), param update w
+        # (FSDP shards over the 16-wide data axis x TP; pod axis pure-DP)
+        n_local = n_params / (16 * tp)
+        t["optimizer"] = n_local * (F32 * 2 + F32 * 4 + BF16)
+    # activation boundaries: one residual tensor per layer
+    act_traffic = 6 if kind == "train" else 2
+    t["activations"] = L * Bl * S * D * BF16 * act_traffic
+    # flash attention: per q-chunk the full KV panel is re-read
+    n_attn = sum(1 for k in cfg.pattern if k == "attn") * cfg.num_periods
+    if n_attn and cfg.num_kv_heads:
+        nchunks = max(S // chunk_q, 1)
+        kv_heads_l = max(cfg.num_kv_heads // tp, 1)
+        kv_bytes = S * kv_heads_l * cfg.head_dim * BF16 * 2
+        eff = (min(cfg.sliding_window, S) / S if cfg.sliding_window else 0.5)
+        t["attention_kv"] = (n_attn * Bl * nchunks * kv_bytes * eff
+                             * (3 if kind == "train" else 1))
+    # mamba chunk states hit HBM (B,chunk,Di/tp,N) per chunk
+    n_mamba = sum(1 for k in cfg.pattern if k == "mamba") * cfg.num_periods
+    if n_mamba:
+        states = Bl * S * (cfg.mamba_d_inner / tp) * cfg.mamba_state * F32
+        t["mamba_states"] = n_mamba * states * (3 if kind == "train" else 1)
+    n_rwkv = sum(1 for k in cfg.pattern if k == "rwkv") * cfg.num_periods
+    if n_rwkv:
+        rkvw = Bl * S * (cfg.num_heads / tp) * cfg.head_dim * F32 * 4
+        t["rwkv_streams"] = n_rwkv * rkvw * (3 if kind == "train" else 1)
+    # MoE dispatch/combine buffers
+    if cfg.moe:
+        n_moe = sum(1 for i in range(cfg.period_len)
+                    if cfg.ffn_kind(i) == "moe") * cfg.num_periods
+        C = max(cfg.top_k, int(cfg.capacity_factor * S * cfg.top_k
+                               / cfg.num_experts))
+        e_l = max(cfg.num_experts // tp, 1)
+        buf = Bl * e_l * C * D * BF16 * 2
+        t["moe_buffers"] = n_moe * buf * (3 if kind == "train" else 1)
+    # logits + loss
+    t["logits"] = Bl * S * (V / tp) * F32 * (4 if kind == "train" else 2)
+    return t
+
+
+def memory_seconds(cfg, shape, *, multi_pod: bool, remat: str = "full",
+                   chunk_q: int = 512, hbm_bw: float = 819e9) -> float:
+    tr = hbm_traffic(cfg, shape, multi_pod=multi_pod, remat=remat,
+                     chunk_q=chunk_q)
+    return sum(tr.values()) / hbm_bw

@@ -1,0 +1,16 @@
+# The paper's primary contribution: JIT-specialized SpMM for TPU.
+from .csr import BCSRMatrix, CSRMatrix, random_csr
+from .ccm import ccm_register_decomposition, plan_d_tiles, DTiling
+from .plan import SpmmPlan, build_plan, partition_rows_for_chips, STRATEGIES
+from .jit_cache import GLOBAL_CACHE, JitCache, clear_global_cache
+from .spmm import CompiledSpmm, compile_spmm, spmm, BACKENDS
+from . import moe_spmm
+
+__all__ = [
+    "BCSRMatrix", "CSRMatrix", "random_csr",
+    "ccm_register_decomposition", "plan_d_tiles", "DTiling",
+    "SpmmPlan", "build_plan", "partition_rows_for_chips", "STRATEGIES",
+    "GLOBAL_CACHE", "JitCache", "clear_global_cache",
+    "CompiledSpmm", "compile_spmm", "spmm", "BACKENDS",
+    "moe_spmm",
+]

@@ -1,0 +1,238 @@
+"""Sparse matrix containers for the JITSPMM core.
+
+CSR is the host-facing format (same as the paper, Fig. 2).  Planning
+(workload division, CCM tiling) happens on the *host* copy of the
+structure arrays at dispatch time — this is the analogue of the paper's
+JIT codegen step, which also inspects ``row_ptr`` at runtime.  Values
+stay device arrays so gradients can flow through them (needed when the
+sparse matrix is a routing matrix whose values are learned gates).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Shape = Tuple[int, int]
+
+
+def _as_host(x) -> np.ndarray:
+    if isinstance(x, np.ndarray):
+        return x
+    return np.asarray(x)
+
+
+@dataclasses.dataclass
+class CSRMatrix:
+    """Compressed Sparse Row matrix (paper §II-A, Fig. 2).
+
+    ``row_ptr`` / ``col_indices`` are the *structure* (host numpy, used
+    by the planner); ``vals`` may be a traced jax array (learned
+    values).  ``m x n`` with ``nnz`` nonzeros.
+    """
+
+    shape: Shape
+    row_ptr: np.ndarray          # (m+1,) int64, host
+    col_indices: np.ndarray      # (nnz,) int32, host
+    vals: jax.Array              # (nnz,) float, device (or numpy)
+
+    _fingerprint: Optional[str] = dataclasses.field(default=None, repr=False)
+
+    def __post_init__(self):
+        self.row_ptr = _as_host(self.row_ptr).astype(np.int64)
+        self.col_indices = _as_host(self.col_indices).astype(np.int32)
+        m, n = self.shape
+        assert self.row_ptr.shape == (m + 1,), (self.row_ptr.shape, m)
+        assert self.row_ptr[0] == 0 and self.row_ptr[-1] == self.nnz
+
+    # -- basic properties ------------------------------------------------
+    @property
+    def m(self) -> int:
+        return self.shape[0]
+
+    @property
+    def n(self) -> int:
+        return self.shape[1]
+
+    @property
+    def nnz(self) -> int:
+        return int(self.col_indices.shape[0])
+
+    @property
+    def row_lengths(self) -> np.ndarray:
+        return np.diff(self.row_ptr)
+
+    # -- the JIT-cache key -----------------------------------------------
+    @property
+    def fingerprint(self) -> str:
+        """Structure fingerprint: the part of the instance the generated
+        code is specialized to.  Values are *not* part of the key — the
+        same compiled kernel serves any values with this structure
+        (exactly like the paper's jit-function, which embeds the
+        structure-derived control flow but loads values from memory)."""
+        if self._fingerprint is None:
+            h = hashlib.blake2b(digest_size=16)
+            h.update(np.int64(self.shape).tobytes())
+            h.update(self.row_ptr.tobytes())
+            h.update(self.col_indices.tobytes())
+            self._fingerprint = h.hexdigest()
+        return self._fingerprint
+
+    # -- conversions -------------------------------------------------------
+    def to_dense(self) -> jax.Array:
+        m, n = self.shape
+        dense = jnp.zeros((m, n), dtype=jnp.asarray(self.vals).dtype)
+        rows = np.repeat(np.arange(m), self.row_lengths)
+        return dense.at[rows, self.col_indices].set(jnp.asarray(self.vals))
+
+    @staticmethod
+    def from_dense(dense, tol: float = 0.0) -> "CSRMatrix":
+        d = np.asarray(dense)
+        mask = np.abs(d) > tol
+        row_lengths = mask.sum(axis=1)
+        row_ptr = np.zeros(d.shape[0] + 1, dtype=np.int64)
+        np.cumsum(row_lengths, out=row_ptr[1:])
+        rows, cols = np.nonzero(mask)
+        return CSRMatrix(
+            shape=d.shape,
+            row_ptr=row_ptr,
+            col_indices=cols.astype(np.int32),
+            vals=jnp.asarray(d[rows, cols]),
+        )
+
+    @staticmethod
+    def from_coo(shape: Shape, rows, cols, vals) -> "CSRMatrix":
+        rows = _as_host(rows)
+        cols = _as_host(cols)
+        order = np.lexsort((cols, rows))
+        rows, cols = rows[order], cols[order]
+        vals = jnp.asarray(vals)[jnp.asarray(order)]
+        row_ptr = np.zeros(shape[0] + 1, dtype=np.int64)
+        np.add.at(row_ptr[1:], rows, 1)
+        np.cumsum(row_ptr, out=row_ptr)
+        return CSRMatrix(shape=shape, row_ptr=row_ptr,
+                         col_indices=cols.astype(np.int32), vals=vals)
+
+    def transpose_structure(self) -> "CSRMatrix":
+        """Host-side CSR transpose (structure + value permutation).
+
+        Used by the backward pass: dX = Aᵀ·dY is another SpMM whose plan
+        is cached under the transposed fingerprint.
+        """
+        m, n = self.shape
+        rows = np.repeat(np.arange(m), self.row_lengths)
+        cols = self.col_indices
+        order = np.lexsort((rows, cols))
+        t_rows = cols[order]
+        t_cols = rows[order].astype(np.int32)
+        row_ptr = np.zeros(n + 1, dtype=np.int64)
+        np.add.at(row_ptr[1:], t_rows, 1)
+        np.cumsum(row_ptr, out=row_ptr)
+        vals = jnp.asarray(self.vals)[jnp.asarray(order)]
+        return CSRMatrix(shape=(n, m), row_ptr=row_ptr, col_indices=t_cols,
+                         vals=vals), order
+
+
+@dataclasses.dataclass
+class BCSRMatrix:
+    """Block-CSR: (bm x bk) dense blocks — the MXU-native format.
+
+    ``block_row_ptr``/``block_cols`` index *blocks*; ``block_vals`` is
+    (nblocks, bm, bk).  Produced from CSR at plan time (the "codegen"
+    step of the beyond-paper MXU path).
+    """
+
+    shape: Shape                  # logical (m, n), already padded to bm/bk
+    bm: int
+    bk: int
+    block_row_ptr: np.ndarray     # (m//bm + 1,) int64
+    block_cols: np.ndarray        # (nblocks,) int32   (block-column ids)
+    block_vals: jax.Array         # (nblocks, bm, bk)
+
+    @property
+    def n_block_rows(self) -> int:
+        return self.shape[0] // self.bm
+
+    @property
+    def nblocks(self) -> int:
+        return int(self.block_cols.shape[0])
+
+    @staticmethod
+    def from_csr(a: CSRMatrix, bm: int, bk: int) -> "BCSRMatrix":
+        m_pad = -(-a.m // bm) * bm
+        n_pad = -(-a.n // bk) * bk
+        rows = np.repeat(np.arange(a.m), a.row_lengths)
+        brow = rows // bm
+        bcol = a.col_indices // bk
+        keys = brow.astype(np.int64) * (n_pad // bk) + bcol
+        order = np.argsort(keys, kind="stable")
+        keys_s = keys[order]
+        uniq, starts = np.unique(keys_s, return_index=True)
+        nblocks = len(uniq)
+        block_vals = np.zeros((nblocks, bm, bk), dtype=np.float32)
+        vals_host = np.asarray(a.vals, dtype=np.float32)
+        # scatter each nnz into its block slot
+        block_of_nnz = np.searchsorted(uniq, keys)
+        r_in = rows % bm
+        c_in = a.col_indices % bk
+        block_vals[block_of_nnz, r_in, c_in] = vals_host
+        block_rows = (uniq // (n_pad // bk)).astype(np.int64)
+        block_cols = (uniq % (n_pad // bk)).astype(np.int32)
+        block_row_ptr = np.zeros(m_pad // bm + 1, dtype=np.int64)
+        np.add.at(block_row_ptr[1:], block_rows, 1)
+        np.cumsum(block_row_ptr, out=block_row_ptr)
+        return BCSRMatrix(shape=(m_pad, n_pad), bm=bm, bk=bk,
+                          block_row_ptr=block_row_ptr,
+                          block_cols=block_cols,
+                          block_vals=jnp.asarray(block_vals))
+
+
+# ---------------------------------------------------------------------------
+# Synthetic matrix generators (benchmark/test substrate — the paper uses
+# SuiteSparse graphs; we generate structurally similar families offline).
+# ---------------------------------------------------------------------------
+
+def random_csr(m: int, n: int, *, density: float = 0.05,
+               family: str = "uniform", seed: int = 0,
+               dtype=jnp.float32) -> CSRMatrix:
+    """Families:
+      uniform   — iid Bernoulli structure (GAP-urand-like)
+      powerlaw  — Zipf row lengths (twitter/web-graph-like; the skew that
+                  motivates nnz/merge-split in the paper)
+      banded    — diagonal band (mesh/stencil-like)
+    """
+    rng = np.random.default_rng(seed)
+    target_nnz = max(1, int(m * n * density))
+    if family == "uniform":
+        lengths = rng.binomial(n, density, size=m)
+    elif family == "powerlaw":
+        raw = rng.zipf(1.6, size=m).astype(np.float64)
+        raw = np.minimum(raw, n)
+        lengths = np.maximum((raw / raw.sum() * target_nnz), 0).astype(np.int64)
+        lengths = np.minimum(lengths, n)
+    elif family == "banded":
+        bw = max(1, int(n * density))
+        lengths = np.full(m, bw, dtype=np.int64)
+    else:
+        raise ValueError(f"unknown family {family!r}")
+    row_ptr = np.zeros(m + 1, dtype=np.int64)
+    np.cumsum(lengths, out=row_ptr[1:])
+    nnz = int(row_ptr[-1])
+    cols = np.empty(nnz, dtype=np.int32)
+    for i in range(m):
+        li = int(lengths[i])
+        if li == 0:
+            continue
+        if family == "banded":
+            start = max(0, min(n - li, i - li // 2))
+            cols[row_ptr[i]:row_ptr[i + 1]] = np.arange(start, start + li)
+        else:
+            cols[row_ptr[i]:row_ptr[i + 1]] = np.sort(
+                rng.choice(n, size=li, replace=False))
+    vals = jnp.asarray(rng.standard_normal(nnz), dtype=dtype)
+    return CSRMatrix(shape=(m, n), row_ptr=row_ptr, col_indices=cols,
+                     vals=vals)

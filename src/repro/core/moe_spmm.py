@@ -1,0 +1,136 @@
+"""MoE dispatch/combine expressed as JIT-planned SpMM.
+
+The routing matrix ``S`` (tokens x experts*capacity) is CSR-sparse with
+exactly top_k nonzeros per row (the gates):
+
+    dispatch:  X_e = Sᵀ · tokens        (E*C, D) -> reshape (E, C, D)
+    combine:   Y   = S  · expert_out
+
+Expert-capacity imbalance is *precisely* the paper's row-imbalance
+problem, and the nnz_split planner is its capacity-balancing fix.
+
+Two execution regimes (DESIGN.md §4.4):
+
+  * concrete routing (serving / offline / GNN-style workloads): build the
+    CSR on host, plan it, run the Pallas kernels — the faithful JIT path
+    (`routing_to_csr` + core.spmm).
+  * in-jit training: the structure is traced-dynamic, so the same math
+    runs via static-shape gather/scatter (`dispatch` / `combine`), which
+    is exactly the spmm `ref` backend evaluated with dynamic indices.
+    Tests assert both regimes agree bit-for-bit on the same routing.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .csr import CSRMatrix
+
+
+# ---------------------------------------------------------------------------
+# In-jit (dynamic-structure) path — used inside the model stack
+# ---------------------------------------------------------------------------
+
+def topk_routing(router_logits: jax.Array, top_k: int, capacity: int
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Compute top-k routing with per-expert capacity.
+
+    Returns (gates (T,k), expert_ids (T,k), slot_ids (T,k)); tokens over
+    capacity get slot == capacity (dropped — masked to slot 'capacity'
+    scratch row, the standard capacity-factor semantics).
+    """
+    T, E = router_logits.shape
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    gates, expert_ids = jax.lax.top_k(probs, top_k)         # (T, k)
+    # position of each (token, k) among assignments to the same expert
+    onehot = jax.nn.one_hot(expert_ids, E, dtype=jnp.int32)  # (T, k, E)
+    flat = onehot.reshape(T * top_k, E)
+    pos = jnp.cumsum(flat, axis=0) - flat                    # (T*k, E)
+    slot = jnp.sum(flat * pos, axis=-1).reshape(T, top_k)
+    slot = jnp.where(slot < capacity, slot, capacity)        # overflow
+    return gates, expert_ids, slot
+
+
+def dispatch(tokens: jax.Array, expert_ids: jax.Array, slot_ids: jax.Array,
+             num_experts: int, capacity: int) -> jax.Array:
+    """X_e = Sᵀ·tokens via scatter (spmm-ref semantics, static shapes).
+
+    tokens (T, D) -> (E, C, D); dropped tokens land in a scratch slot.
+    """
+    T, D = tokens.shape
+    k = expert_ids.shape[1]
+    flat_rows = (expert_ids * (capacity + 1) + slot_ids).reshape(-1)  # (T*k,)
+    buf = jnp.zeros((num_experts * (capacity + 1), D), tokens.dtype)
+    src = jnp.repeat(tokens, k, axis=0)
+    buf = buf.at[flat_rows].add(src)
+    buf = buf.reshape(num_experts, capacity + 1, D)
+    return buf[:, :capacity]
+
+def combine(expert_out: jax.Array, gates: jax.Array, expert_ids: jax.Array,
+            slot_ids: jax.Array) -> jax.Array:
+    """Y = S·expert_out via gather (spmm-ref semantics)."""
+    E, C, D = expert_out.shape
+    T, k = gates.shape
+    flat = jnp.concatenate(
+        [expert_out, jnp.zeros((E, 1, D), expert_out.dtype)], axis=1
+    ).reshape(E * (C + 1), D)
+    idx = (expert_ids * (C + 1) + slot_ids).reshape(-1)      # (T*k,)
+    picked = flat[idx].reshape(T, k, D)
+    return jnp.sum(gates[..., None].astype(picked.dtype) * picked, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Concrete-routing (host/JIT-planned) path — the faithful paper pipeline
+# ---------------------------------------------------------------------------
+
+def routing_to_csr(gates, expert_ids, slot_ids, num_experts: int,
+                   capacity: int) -> CSRMatrix:
+    """Materialize S (T x E*C) as CSR from a concrete routing decision.
+
+    Dropped tokens (slot == capacity) are omitted (their row has fewer
+    nonzeros) — the skewed-row case the workload planners handle.
+    """
+    g = np.asarray(gates, dtype=np.float32)
+    e = np.asarray(expert_ids)
+    s = np.asarray(slot_ids)
+    T, k = g.shape
+    keep = s < capacity
+    rows = np.repeat(np.arange(T), k)[keep.reshape(-1)]
+    cols = (e * capacity + s).reshape(-1)[keep.reshape(-1)].astype(np.int32)
+    vals = g.reshape(-1)[keep.reshape(-1)]
+    order = np.lexsort((cols, rows))
+    row_ptr = np.zeros(T + 1, dtype=np.int64)
+    np.add.at(row_ptr[1:], rows, 1)
+    np.cumsum(row_ptr, out=row_ptr)
+    return CSRMatrix(shape=(T, num_experts * capacity), row_ptr=row_ptr,
+                     col_indices=cols[order], vals=jnp.asarray(vals[order]))
+
+
+def moe_apply_concrete(tokens, router_logits, w_up, w_down, *, top_k: int,
+                       capacity: int, strategy: str = "nnz_split",
+                       backend: str = "ref", interpret=None):
+    """Full MoE layer on a concrete routing via JIT-planned SpMM:
+    combine(S, act(dispatch(Sᵀ, tokens) @ W_up) @ W_down).
+
+    w_up (E, D, F), w_down (E, F, D).  Used by examples/benchmarks and as
+    the oracle the in-jit gather path is tested against.
+    """
+    from .spmm import spmm
+    E = w_up.shape[0]
+    gates, expert_ids, slot = topk_routing(router_logits, top_k, capacity)
+    s_csr = routing_to_csr(gates, expert_ids, slot, E, capacity)
+    # dispatch uses unit values (gates apply once, at combine)
+    s_ones = CSRMatrix(s_csr.shape, s_csr.row_ptr, s_csr.col_indices,
+                       jnp.ones(s_csr.nnz, jnp.float32))
+    st, _ = s_ones.transpose_structure()
+    xe = spmm(st, tokens, strategy=strategy, backend=backend,
+              interpret=interpret)                       # (E*C, D)
+    xe = xe.reshape(E, capacity, -1)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, w_up.astype(jnp.float32)))
+    out_e = jnp.einsum("ecf,efd->ecd", h, w_down.astype(jnp.float32))
+    y = spmm(s_csr, out_e.reshape(E * capacity, -1), strategy=strategy,
+             backend=backend, interpret=interpret)       # (T, D)
+    return y

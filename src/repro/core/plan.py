@@ -1,0 +1,236 @@
+"""Workload division + instance specialization — paper §IV-B, at plan time.
+
+The paper divides SpMM work across CPU threads three ways (Fig. 6):
+row-split, nnz-split, merge-split, and JIT-generates a different binary
+for each.  On TPU the "threads" are Pallas grid programs, which are
+statically scheduled, so *all* balancing moves to plan time (DESIGN.md
+§7.2) where — unlike an AOT binary — we can see the full ``row_ptr``.
+
+A plan groups rows into **ELL segments**: each segment is a set of rows
+padded to a common nonzeros-per-row ``L`` and lowered as one
+``pallas_call`` with a fully static grid (the TPU analogue of "generated
+code with no data-dependent branches").  The three strategies differ in
+how rows are grouped, i.e. how much padding (wasted FLOPs) and how much
+locality they trade:
+
+  row_split    one segment, original row order, L = max row length.
+               Fastest to plan; faithful to Fig. 6(a) including its
+               weakness (skewed rows ⇒ huge padding).
+  nnz_split    rows bucketed by length (geometric buckets) ⇒ per-bucket
+               L is tight ⇒ near-equal real work per program.  The
+               plan-time realization of Fig. 6(b)'s equal-nnz goal.
+  merge_split  merge-path walk over (rows, nnz) cutting segments at
+               equal rows+nnz quotas, preserving row order (locality)
+               while bounding padding — Fig. 6(c).
+
+The padded-gather trick keeps *values* dynamic: ``gather_idx`` maps each
+ELL slot to an index in ``concat(vals, [0])`` so the same compiled plan
+serves any values with this structure (jit-function semantics).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from .ccm import DTiling, plan_d_tiles
+
+STRATEGIES = ("row_split", "nnz_split", "merge_split")
+
+
+@dataclasses.dataclass
+class EllSegment:
+    row_ids: np.ndarray      # (R,) original row indices (host)
+    L: int                   # padded nnz per row in this segment
+    R_pad: int               # rows padded up (multiple of row_block)
+    cols_pad: np.ndarray     # (R_pad, max(L,1)) int32, pad -> col 0
+    gather_idx: np.ndarray   # (R_pad, max(L,1)) int64 into concat(vals,[0])
+
+    @property
+    def R(self) -> int:
+        return int(self.row_ids.shape[0])
+
+    @property
+    def padded_nnz(self) -> int:
+        return self.R_pad * max(self.L, 1)
+
+
+@dataclasses.dataclass
+class SpmmPlan:
+    strategy: str
+    m: int
+    n: int
+    nnz: int
+    d_tiling: DTiling
+    segments: List[EllSegment]
+    row_block: int
+    plan_seconds: float
+    fingerprint: str
+
+    @property
+    def padded_nnz(self) -> int:
+        return sum(s.padded_nnz for s in self.segments)
+
+    @property
+    def efficiency(self) -> float:
+        """real work / padded work — the balance metric the three
+        strategies compete on (1.0 = perfectly balanced, no padding)."""
+        return self.nnz / max(self.padded_nnz, 1)
+
+    def stats(self) -> dict:
+        return {
+            "strategy": self.strategy,
+            "segments": len(self.segments),
+            "nnz": self.nnz,
+            "padded_nnz": self.padded_nnz,
+            "efficiency": round(self.efficiency, 4),
+            "d_pad": self.d_tiling.d_pad,
+            "dt": self.d_tiling.dt,
+            "plan_seconds": self.plan_seconds,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Row grouping per strategy
+# ---------------------------------------------------------------------------
+
+def _group_row_split(row_ptr: np.ndarray) -> List[np.ndarray]:
+    m = len(row_ptr) - 1
+    return [np.arange(m, dtype=np.int64)]
+
+
+def _group_nnz_split(row_ptr: np.ndarray, row_block: int = 8
+                     ) -> List[np.ndarray]:
+    lengths = np.diff(row_ptr)
+    m = len(lengths)
+    order = np.argsort(lengths, kind="stable")
+    sorted_len = lengths[order]
+    groups: List[np.ndarray] = []
+    start = 0
+    while start < m:
+        lo = max(int(sorted_len[start]), 1)
+        # geometric bucket: rows with length in [lo, 2*lo)
+        end = int(np.searchsorted(sorted_len, 2 * lo, side="left"))
+        end = max(end, start + 1)
+        groups.append(order[start:end])
+        start = end
+
+    def padded_cost(rows) -> int:
+        r_pad = -(-len(rows) // row_block) * row_block
+        return r_pad * max(int(lengths[rows].max(initial=0)), 1)
+
+    # coalesce: small buckets pay row_block padding; merge adjacent
+    # (length-sorted) buckets whenever the merged padding is no worse
+    merged = [groups[0]] if groups else []
+    for g in groups[1:]:
+        prev = merged[-1]
+        cat = np.concatenate([prev, g])
+        if padded_cost(cat) <= padded_cost(prev) + padded_cost(g):
+            merged[-1] = cat
+        else:
+            merged.append(g)
+    # guarantee: never worse than the single-segment (row_split) plan
+    if merged:
+        total = sum(padded_cost(g) for g in merged)
+        everything = np.concatenate(merged)
+        if padded_cost(everything) < total:
+            merged = [everything]
+    return merged
+
+
+def _group_merge_split(row_ptr: np.ndarray, target_segments: int = 16
+                       ) -> List[np.ndarray]:
+    lengths = np.diff(row_ptr)
+    m = len(lengths)
+    total = m + int(lengths.sum())         # rows + nnz (merge-path length)
+    quota = max(total // max(target_segments, 1), 1)
+    # cumulative rows+nnz at each row boundary; cut at quota multiples
+    cum = np.arange(1, m + 1) + np.cumsum(lengths)
+    cuts = np.searchsorted(cum, quota * np.arange(1, target_segments))
+    cuts = np.unique(np.clip(cuts, 0, m))
+    bounds = np.concatenate([[0], cuts, [m]])
+    bounds = np.unique(bounds)
+    return [np.arange(bounds[i], bounds[i + 1], dtype=np.int64)
+            for i in range(len(bounds) - 1) if bounds[i + 1] > bounds[i]]
+
+
+# ---------------------------------------------------------------------------
+# Plan construction
+# ---------------------------------------------------------------------------
+
+def build_plan(row_ptr: np.ndarray, col_indices: np.ndarray, shape,
+               d: int, *, strategy: str = "nnz_split", row_block: int = 8,
+               fingerprint: str = "", max_dt: int = 512,
+               merge_target_segments: int = 16) -> SpmmPlan:
+    t0 = time.perf_counter()
+    if strategy not in STRATEGIES:
+        raise ValueError(f"strategy must be one of {STRATEGIES}")
+    m, n = shape
+    nnz = int(col_indices.shape[0])
+    lengths = np.diff(row_ptr)
+
+    if strategy == "row_split":
+        groups = _group_row_split(row_ptr)
+    elif strategy == "nnz_split":
+        groups = _group_nnz_split(row_ptr, row_block)
+    else:
+        groups = _group_merge_split(row_ptr, merge_target_segments)
+
+    d_tiling = plan_d_tiles(d, rows_in_flight=row_block, max_dt=max_dt)
+
+    segments: List[EllSegment] = []
+    for rows in groups:
+        if rows.size == 0:
+            continue
+        L = int(lengths[rows].max(initial=0))
+        Lp = max(L, 1)
+        R = rows.size
+        R_pad = -(-R // row_block) * row_block
+        cols_pad = np.zeros((R_pad, Lp), dtype=np.int32)
+        gather_idx = np.full((R_pad, Lp), nnz, dtype=np.int64)  # nnz -> 0.0
+        # vectorized ELL packing (this is the measured "codegen" cost)
+        starts = row_ptr[rows][:, None]                    # (R, 1)
+        lens = lengths[rows][:, None]                      # (R, 1)
+        lane = np.arange(Lp, dtype=np.int64)[None, :]      # (1, Lp)
+        valid = lane < lens
+        idx = starts + lane
+        gather_idx[:R] = np.where(valid, idx, nnz)
+        if nnz > 0:
+            safe = np.minimum(idx, nnz - 1)
+            cols_pad[:R] = np.where(valid, col_indices[safe], 0)
+        segments.append(EllSegment(row_ids=rows, L=L, R_pad=R_pad,
+                                   cols_pad=cols_pad, gather_idx=gather_idx))
+
+    return SpmmPlan(strategy=strategy, m=m, n=n, nnz=nnz,
+                    d_tiling=d_tiling, segments=segments,
+                    row_block=row_block,
+                    plan_seconds=time.perf_counter() - t0,
+                    fingerprint=fingerprint)
+
+
+# ---------------------------------------------------------------------------
+# Chip-level partitioning (multi-chip SpMM; DESIGN.md §7.6) — the same
+# three strategies applied at the shard_map level: returns row boundaries
+# (row-aligned) assigning each chip a contiguous row range.
+# ---------------------------------------------------------------------------
+
+def partition_rows_for_chips(row_ptr: np.ndarray, n_chips: int,
+                             strategy: str = "nnz_split") -> np.ndarray:
+    m = len(row_ptr) - 1
+    nnz = int(row_ptr[-1])
+    if strategy == "row_split":
+        bounds = np.linspace(0, m, n_chips + 1).astype(np.int64)
+    elif strategy == "nnz_split":
+        targets = nnz * np.arange(1, n_chips) / n_chips
+        bounds = np.concatenate(
+            [[0], np.searchsorted(row_ptr[1:], targets, side="left") + 1, [m]])
+    elif strategy == "merge_split":
+        cum = np.arange(1, m + 1) + np.asarray(row_ptr[1:])
+        total = m + nnz
+        targets = total * np.arange(1, n_chips) / n_chips
+        bounds = np.concatenate([[0], np.searchsorted(cum, targets), [m]])
+    else:
+        raise ValueError(strategy)
+    return np.clip(bounds.astype(np.int64), 0, m)

@@ -1,0 +1,226 @@
+"""Public JIT-SpMM API: Y = A·X specialized to the runtime instance.
+
+``compile_spmm`` is the paper's "JIT code generator": given the concrete
+structure of A and the runtime-known d, it builds (or fetches from the
+jit cache) a ``CompiledSpmm`` — plan + device constants + differentiable
+callable.  ``spmm`` is the one-shot convenience wrapper.
+
+Backends:
+  pallas_ell   faithful CCM/VPU Pallas kernel (validated in interpret
+               mode on CPU; native on TPU)
+  pallas_bcsr  beyond-paper MXU block-sparse Pallas kernel
+  ref          pure-jnp gather/segment-sum (jit-friendly; used inside
+               the model stack and the 512-device dry-run)
+  dense        densified matmul (tiny tests only)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ccm
+from .csr import BCSRMatrix, CSRMatrix
+from .jit_cache import GLOBAL_CACHE, JitCache
+from .plan import SpmmPlan, build_plan
+
+BACKENDS = ("pallas_ell", "pallas_bcsr", "ref", "dense", "auto")
+
+
+def _resolve_backend(backend: str) -> str:
+    if backend != "auto":
+        return backend
+    return "pallas_ell" if jax.default_backend() == "tpu" else "ref"
+
+
+@dataclasses.dataclass
+class _SegmentConsts:
+    cols_flat: jax.Array     # (R_pad*L,) int32
+    gather_idx: jax.Array    # (R_pad, L) int32/int64
+    row_ids: jax.Array       # (R,) int32
+    R: int
+    L: int
+
+
+class CompiledSpmm:
+    """The "jit-function": structure-specialized, value-generic,
+    differentiable SpMM."""
+
+    def __init__(self, a: CSRMatrix, d: int, *, strategy: str,
+                 backend: str, bm: int = 8, interpret: Optional[bool] = None,
+                 cache: JitCache = GLOBAL_CACHE):
+        self.backend = _resolve_backend(backend)
+        self.strategy = strategy
+        self.bm = bm
+        self.interpret = interpret
+        self.cache = cache
+        self.d = d
+        self.shape = a.shape
+        # host structure retained for gradients / transpose
+        self._row_ptr = a.row_ptr
+        self._col_indices = a.col_indices
+        self._fingerprint = a.fingerprint
+        self._nnz = a.nnz
+
+        self.plan: SpmmPlan = build_plan(
+            a.row_ptr, a.col_indices, a.shape, d, strategy=strategy,
+            row_block=bm, fingerprint=a.fingerprint)
+
+        if self.backend == "pallas_ell":
+            self._segments = [
+                _SegmentConsts(
+                    cols_flat=jnp.asarray(s.cols_pad.reshape(-1)),
+                    gather_idx=jnp.asarray(s.gather_idx),
+                    row_ids=jnp.asarray(s.row_ids.astype(np.int32)),
+                    R=s.R, L=s.L)
+                for s in self.plan.segments]
+        elif self.backend == "pallas_bcsr":
+            bk = 8
+            # 1-based nnz ids as block "values": 0 == empty slot.  Exact
+            # in f32 up to 2^24 nonzeros (plan-time only; asserted).
+            assert a.nnz < (1 << 24), "bcsr planner id encoding limit"
+            struct_only = CSRMatrix(a.shape, a.row_ptr, a.col_indices,
+                                    np.arange(1, a.nnz + 1, dtype=np.float32))
+            bcsr = BCSRMatrix.from_csr(struct_only, bm=bm, bk=bk)
+            counts = np.diff(bcsr.block_row_ptr)
+            kmax = max(int(counts.max(initial=0)), 1)
+            nsteps = bcsr.n_block_rows * kmax
+            # slot -> nnz gather (value-generic block materialization);
+            # index a.nnz gathers the appended 0.0
+            slot = np.full((nsteps, bm, bk), a.nnz, dtype=np.int64)
+            bcols = np.zeros(nsteps, dtype=np.int32)
+            host_blocks = np.asarray(bcsr.block_vals)
+            occupied = host_blocks > 0
+            ids = np.where(occupied, host_blocks.astype(np.int64) - 1, a.nnz)
+            for i in range(bcsr.n_block_rows):
+                s, e = int(bcsr.block_row_ptr[i]), int(bcsr.block_row_ptr[i + 1])
+                for j, p in enumerate(range(s, e)):
+                    slot[i * kmax + j] = ids[p]
+                    bcols[i * kmax + j] = bcsr.block_cols[p]
+            self._bcsr_slot = jnp.asarray(slot)
+            self._bcsr_cols = jnp.asarray(bcols)
+            self._bcsr_kmax = kmax
+            self._bcsr_bk = bk
+            self._bcsr_m_pad = bcsr.shape[0]
+            self._bcsr_n_pad = bcsr.shape[1]
+        elif self.backend == "ref":
+            self._rows = jnp.asarray(
+                np.repeat(np.arange(a.m), a.row_lengths).astype(np.int32))
+            self._cols = jnp.asarray(a.col_indices)
+        # dense backend materializes on call
+
+        self._transpose: Optional[CompiledSpmm] = None
+        self._t_order: Optional[jax.Array] = None
+        self._grad_rows = None
+
+        fwd = self._forward
+
+        @jax.custom_vjp
+        def _apply(vals, x):
+            return fwd(vals, x)
+
+        def _apply_fwd(vals, x):
+            return fwd(vals, x), (vals, x)
+
+        def _apply_bwd(res, dy):
+            vals, x = res
+            dvals = self._sddmm(dy, x).astype(vals.dtype)
+            dx = self._transpose_apply(vals, dy).astype(x.dtype)
+            return dvals, dx
+
+        _apply.defvjp(_apply_fwd, _apply_bwd)
+        self._apply = _apply
+
+    # -- forward -----------------------------------------------------------
+    def _forward(self, vals, x):
+        m, n = self.shape
+        d = x.shape[1]
+        assert d == self.d, (d, self.d)
+        backend = self.backend
+        if backend == "dense":
+            dense = jnp.zeros((m, n), vals.dtype)
+            rows = np.repeat(np.arange(m), np.diff(self._row_ptr))
+            dense = dense.at[rows, self._col_indices].set(vals)
+            return dense.astype(jnp.float32) @ x.astype(jnp.float32)
+        if backend == "ref":
+            prod = (vals[:, None].astype(jnp.float32)
+                    * x[self._cols].astype(jnp.float32))
+            return jax.ops.segment_sum(prod, self._rows, num_segments=m)
+        vals_ext = jnp.concatenate(
+            [vals.astype(jnp.float32), jnp.zeros((1,), jnp.float32)])
+        x_pad = ccm.pad_cols(x, self.plan.d_tiling.d_pad)
+        if backend == "pallas_ell":
+            from ..kernels.ops import spmm_ell_segment_op
+            y = jnp.zeros((m, self.plan.d_tiling.d_pad), jnp.float32)
+            for seg in self._segments:
+                vals_pad = vals_ext[seg.gather_idx]
+                y_seg = spmm_ell_segment_op(
+                    seg.cols_flat, vals_pad, x_pad, bm=self.bm,
+                    interpret=self.interpret)
+                y = y.at[seg.row_ids].set(y_seg[: seg.R])
+            return y[:, :d]
+        if backend == "pallas_bcsr":
+            from ..kernels.ops import spmm_bcsr_op
+            block_vals = vals_ext[self._bcsr_slot]
+            n_pad = self._bcsr_n_pad
+            if x_pad.shape[0] < n_pad:
+                x_pad = jnp.pad(x_pad, ((0, n_pad - x_pad.shape[0]), (0, 0)))
+            y = spmm_bcsr_op(self._bcsr_cols, block_vals, x_pad,
+                             kmax=self._bcsr_kmax, interpret=self.interpret)
+            return y[:m, :d]
+        raise ValueError(self.backend)
+
+    # -- gradients ----------------------------------------------------------
+    def _sddmm(self, dy, x):
+        if self._grad_rows is None:
+            self._grad_rows = jnp.asarray(
+                np.repeat(np.arange(self.shape[0]),
+                          np.diff(self._row_ptr)).astype(np.int32))
+        cols = jnp.asarray(self._col_indices)
+        return jnp.sum(dy[self._grad_rows].astype(jnp.float32)
+                       * x[cols].astype(jnp.float32), axis=-1)
+
+    def _transpose_apply(self, vals, dy):
+        if self._transpose is None:
+            a = CSRMatrix(self.shape, self._row_ptr, self._col_indices,
+                          np.zeros(self._nnz, np.float32))
+            t_struct, order = a.transpose_structure()
+            key = ("spmmT", self._fingerprint, self.d, self.strategy,
+                   self.backend, self.bm)
+            self._transpose = self.cache.get_or_build(
+                key, lambda: CompiledSpmm(
+                    t_struct, self.d, strategy=self.strategy,
+                    backend=self.backend, bm=self.bm,
+                    interpret=self.interpret, cache=self.cache))
+            self._t_order = jnp.asarray(order.astype(np.int32))
+        vals_t = vals[self._t_order]
+        return self._transpose._forward(vals_t, dy)
+
+    def __call__(self, vals, x):
+        return self._apply(vals, x)
+
+
+def compile_spmm(a: CSRMatrix, d: int, *, strategy: str = "nnz_split",
+                 backend: str = "auto", bm: int = 8,
+                 interpret: Optional[bool] = None,
+                 cache: JitCache = GLOBAL_CACHE) -> CompiledSpmm:
+    backend = _resolve_backend(backend)
+    key = ("spmm", a.fingerprint, d, strategy, backend, bm)
+    return cache.get_or_build(
+        key, lambda: CompiledSpmm(a, d, strategy=strategy, backend=backend,
+                                  bm=bm, interpret=interpret, cache=cache))
+
+
+def spmm(a: CSRMatrix, x, *, strategy: str = "nnz_split",
+         backend: str = "auto", bm: int = 8,
+         interpret: Optional[bool] = None,
+         cache: JitCache = GLOBAL_CACHE) -> jax.Array:
+    """Y = A·X, specialized to A's structure and x's column count."""
+    compiled = compile_spmm(a, x.shape[1], strategy=strategy,
+                            backend=backend, bm=bm, interpret=interpret,
+                            cache=cache)
+    return compiled(jnp.asarray(a.vals), x)

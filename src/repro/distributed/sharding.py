@@ -1,0 +1,215 @@
+"""Logical-axis sharding rules: DP / FSDP(ZeRO) / TP / EP / SP.
+
+Physical meshes (launch/mesh.py): single-pod ("data","model") = (16,16);
+multi-pod ("pod","data","model") = (2,16,16).  Logical axes:
+
+  dp    batch                -> ("pod","data") | ("data",)
+        pod composes with data for batch sharding; the gradient
+        all-reduce over "pod" is the only cross-pod (DCN) collective.
+  fsdp  param d_model dims   -> ("data",)  (ZeRO-3: params/opt sharded
+        over the data axis, all-gathered per layer by GSPMD; kept
+        *intra-pod* so FSDP all-gathers ride ICI, not DCN)
+  tp    heads / d_ff / experts -> ("model",)  (Megatron pattern)
+  sp    long-context sequence -> ("pod","data") | ("data",)  (KV/state
+        sharded over sequence when batch can't use dp, e.g. batch=1)
+
+Every rule is divisibility-checked against the mesh; a dim that doesn't
+divide falls back down its candidate list and ultimately to replication
+(e.g. 40 heads on TP=16 -> attention weights FSDP-only; kv=8 heads on
+TP=16 -> KV replicated).  This is deliberate: correct-but-visible in the
+roofline rather than silently invalid.
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+class AxisEnv:
+    def __init__(self, mesh: Mesh):
+        self.mesh = mesh
+        self.multi_pod = "pod" in mesh.axis_names
+        self.sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def logical(self, name: str) -> Tuple[str, ...]:
+        if name in ("dp", "sp"):
+            return ("pod", "data") if self.multi_pod else ("data",)
+        if name == "fsdp":
+            return ("data",)
+        if name == "tp":
+            return ("model",)
+        raise KeyError(name)
+
+    def axis_prod(self, axes: Sequence[str]) -> int:
+        return math.prod(self.sizes[a] for a in axes)
+
+
+def resolve_spec(shape: Sequence[int], dim_rules: Dict[int, List[str]],
+                 env: AxisEnv) -> P:
+    """First candidate per dim that divides and doesn't reuse an axis."""
+    used: set = set()
+    spec: List = [None] * len(shape)
+    for dim in sorted(dim_rules):
+        if dim >= len(shape):
+            continue
+        for cand in dim_rules[dim]:
+            axes = env.logical(cand)
+            if any(a in used for a in axes):
+                continue
+            if shape[dim] > 0 and shape[dim] % env.axis_prod(axes) == 0:
+                spec[dim] = axes if len(axes) > 1 else axes[0]
+                used.update(axes)
+                break
+    return P(*spec)
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules: (path-suffix regex, dim -> logical-axis candidates).
+# Dims are indexed on the UNSTACKED shape; period-stacked leaves get +1.
+# First match wins.
+# ---------------------------------------------------------------------------
+_PARAM_RULES: List[Tuple[str, Dict[int, List[str]]]] = [
+    (r"\bembed$",                {0: ["tp"], 1: ["fsdp"]}),
+    (r"\blm_head$",              {1: ["tp"], 0: ["fsdp"]}),
+    (r"\bfinal_norm$",           {}),
+    # attention
+    (r"\bw[qkv]$",               {1: ["tp"], 0: ["fsdp"]}),
+    (r"\bwo$",                   {0: ["tp"], 2: ["fsdp"]}),
+    (r"\bb[qkv]$",               {0: ["tp"]}),
+    (r"\b[qk]_norm$",            {}),
+    (r"\bgate$",                 {}),
+    # MoE (E first -> EP when divisible; else F -> TP)
+    (r"\brouter$",               {}),
+    (r"ffn_moe.*\bw_(gate|up)$", {0: ["tp"], 2: ["tp"], 1: ["fsdp"]}),
+    (r"ffn_moe.*\bw_down$",      {0: ["tp"], 1: ["tp"], 2: ["fsdp"]}),
+    # dense FFN
+    (r"\bw_(gate|up)$",          {1: ["tp"], 0: ["fsdp"]}),
+    (r"\bw_down$",               {0: ["tp"], 1: ["fsdp"]}),
+    # mamba
+    (r"\bin_proj$",              {1: ["tp"], 0: ["fsdp"]}),
+    (r"\bconv_w$",               {1: ["tp"]}),
+    (r"\b(conv_b|dt_bias|D)$",   {0: ["tp"]}),
+    (r"\bx_proj$",               {0: ["tp"]}),
+    (r"\bdt_proj$",              {1: ["tp"]}),
+    (r"\bA_log$",                {0: ["tp"]}),
+    (r"\bout_proj$",             {0: ["tp"], 1: ["fsdp"]}),
+    # rwkv time-mix / channel-mix
+    (r"tm.*\bw_[rkvg]$",         {1: ["tp"], 0: ["fsdp"]}),
+    (r"tm.*\bw_o$",              {0: ["tp"], 2: ["fsdp"]}),
+    (r"tm.*\b(u|w0|gn_w|gn_b)$", {0: ["tp"]}),
+    (r"lora_\w+_a$",             {0: ["fsdp"]}),
+    (r"lora_\w+_b$",             {1: ["fsdp"]}),
+    (r"\bmu_\w+$",               {}),
+    (r"cm.*\bw_k$",              {1: ["tp"], 0: ["fsdp"]}),
+    (r"cm.*\bw_v$",              {0: ["tp"], 1: ["fsdp"]}),
+    (r"cm.*\bw_r$",              {1: ["tp"], 0: ["fsdp"]}),
+    # norms and anything else small
+    (r"\bln(_w|_b|_kv)?$",       {}),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_pspec(path, shape, env: AxisEnv) -> P:
+    ps = _path_str(path)
+    stacked = "period" in ps
+    for pattern, rules in _PARAM_RULES:
+        if re.search(pattern, ps):
+            if stacked:
+                rules = {d + 1: c for d, c in rules.items()}
+            rules = {d: c for d, c in rules.items() if d < len(shape)}
+            return resolve_spec(shape, rules, env)
+    return P()   # replicate unknown leaves
+
+
+def param_shardings(param_shapes, mesh: Mesh, *, mode: str = "train"):
+    """Pytree of NamedSharding matching a pytree of ShapeDtypeStructs.
+
+    mode="train": FSDP(data) x TP(model) per _PARAM_RULES.
+    mode="serve_replicated": TP-only — drop the fsdp axis so weights are
+    replicated across `data` and decode never all-gathers parameter
+    shards over ICI (use when param_bytes/TP fits HBM; the classic
+    weight-stationary serving layout)."""
+    env = AxisEnv(mesh)
+
+    def leaf(path, x):
+        spec = param_pspec(path, x.shape, env)
+        if mode == "serve_replicated":
+            spec = P(*[None if s in ("data", ("data",)) else s
+                       for s in spec])
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(leaf, param_shapes)
+
+
+# ---------------------------------------------------------------------------
+# Activation / input rules
+# ---------------------------------------------------------------------------
+_CACHE_RULES: List[Tuple[str, Dict[int, List[str]]]] = [
+    # attn cache (P,B,T,KV,hd): batch -> dp; else sequence -> sp (flash-
+    # decoding style); kv heads -> tp when divisible
+    (r"\bk(pos)?$|\bv$",   {1: ["dp"], 2: ["sp"], 3: ["tp"]}),
+    (r"\bx[kv]$",          {1: ["dp"], 3: ["tp"]}),
+    (r"\bssm$",            {1: ["dp"], 2: ["tp"]}),
+    (r"\bconv$",           {1: ["dp"], 3: ["tp"]}),
+    (r"\bwkv$",            {1: ["dp"], 2: ["tp"]}),
+    (r"\bx_prev_\w+$",     {1: ["dp"]}),
+]
+
+
+def cache_pspec(path, shape, env: AxisEnv) -> P:
+    ps = _path_str(path)
+    for pattern, rules in _CACHE_RULES:
+        if re.search(pattern, ps):
+            return resolve_spec(shape, rules, env)
+    return P()
+
+
+def batch_shardings(batch_shapes, mesh: Mesh):
+    """tokens/labels (B,S) B->dp; image_embeds (B,I,D) B->dp."""
+    env = AxisEnv(mesh)
+
+    def leaf_spec(path, leaf):
+        return NamedSharding(mesh,
+                             resolve_spec(leaf.shape, {0: ["dp"]}, env))
+    return jax.tree_util.tree_map_with_path(leaf_spec, batch_shapes)
+
+
+def decode_shardings(decode_shapes, mesh: Mesh):
+    """{token, caches, pos} input tree for serve_step."""
+    env = AxisEnv(mesh)
+
+    def leaf_spec(path, leaf):
+        ps = _path_str(path)
+        if ps.startswith("token"):
+            return NamedSharding(mesh,
+                                 resolve_spec(leaf.shape, {0: ["dp"]}, env))
+        if ps.startswith("pos"):
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, cache_pspec(path, leaf.shape, env))
+    return jax.tree_util.tree_map_with_path(leaf_spec, decode_shapes)
+
+
+def logits_sharding(mesh: Mesh, batch: int, vocab: int):
+    """(B, S, V) logits: B->dp when divisible, V->tp when divisible."""
+    env = AxisEnv(mesh)
+    return NamedSharding(mesh, resolve_spec(
+        (batch, 1, vocab), {0: ["dp"], 2: ["tp"]}, env))
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

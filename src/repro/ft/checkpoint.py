@@ -1,0 +1,121 @@
+"""Checkpoint/restart: atomic, step-tagged, mesh-portable.
+
+Layout:  <dir>/step_<k>/  { manifest.json, shard_<host>.npz }
+- writes go to a tmp dir + os.replace (atomic on POSIX) so a crash
+  mid-save never corrupts the latest checkpoint;
+- the manifest stores the flattened pytree structure + per-leaf dtype/
+  shape, so a restore can re-shard onto ANY mesh (elastic re-mesh path:
+  ft/elastic.py calls restore with new shardings);
+- keep_last trims old steps after a successful save.
+
+On a multi-host deployment each host writes its own addressable shards;
+in this container there is one host, which is the degenerate case of
+the same layout.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy can't round-trip ml_dtypes (bf16, fp8) through savez: store the
+# raw bytes as uint views and record the logical dtype in the manifest
+_BYTE_VIEWS = {2: np.uint16, 1: np.uint8, 4: np.uint32}
+
+
+def _encode(x: np.ndarray):
+    if x.dtype.kind == "V" or x.dtype.name not in np.sctypeDict:
+        view = _BYTE_VIEWS[x.dtype.itemsize]
+        return x.view(view), x.dtype.name
+    return x, x.dtype.name
+
+
+def _decode(raw: np.ndarray, dtype_name: str) -> np.ndarray:
+    if raw.dtype.name != dtype_name:
+        return raw.view(np.dtype(getattr(ml_dtypes, dtype_name)))
+    return raw
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(ckpt_dir, step: int, tree: Any, *, keep_last: int = 3,
+                    host_index: int = 0) -> Path:
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    final = ckpt_dir / f"step_{step:08d}"
+    tmp = Path(tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_save_"))
+    try:
+        encoded = [_encode(np.asarray(x)) for x in leaves]
+        arrays = {f"leaf_{i}": e[0] for i, e in enumerate(encoded)}
+        np.savez(tmp / f"shard_{host_index}.npz", **arrays)
+        manifest = {
+            "step": step,
+            "num_leaves": len(leaves),
+            "treedef": str(treedef),
+            "leaves": [{"dtype": e[1],
+                        "shape": list(e[0].shape)}
+                       for e in encoded],
+        }
+        (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)                 # atomic publish
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    _trim(ckpt_dir, keep_last)
+    return final
+
+
+def _trim(ckpt_dir: Path, keep_last: int):
+    steps = sorted(p for p in ckpt_dir.iterdir()
+                   if p.name.startswith("step_"))
+    for p in steps[:-keep_last]:
+        shutil.rmtree(p, ignore_errors=True)
+
+
+def latest_step(ckpt_dir) -> Optional[int]:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = sorted(int(p.name.split("_")[1]) for p in ckpt_dir.iterdir()
+                   if p.name.startswith("step_"))
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(ckpt_dir, tree_like: Any, *, step: Optional[int]
+                       = None, shardings: Any = None,
+                       host_index: int = 0) -> Any:
+    """Restore into the structure of ``tree_like``; optionally placing
+    each leaf with ``shardings`` (a matching pytree of NamedSharding) —
+    this is what makes checkpoints mesh-portable."""
+    ckpt_dir = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    d = ckpt_dir / f"step_{step:08d}"
+    data = np.load(d / f"shard_{host_index}.npz")
+    manifest = json.loads((d / "manifest.json").read_text())
+    leaves_like, treedef = _flatten(tree_like)
+    n = len(leaves_like)
+    leaves = [_decode(data[f"leaf_{i}"], manifest["leaves"][i]["dtype"])
+              for i in range(n)]
+    if shardings is not None:
+        shard_leaves, _ = _flatten(shardings)
+        leaves = [jax.device_put(x, s)
+                  for x, s in zip(leaves, shard_leaves)]
+    else:
+        leaves = [jax.numpy.asarray(x) for x in leaves]
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,63 @@
+"""Elastic re-meshing: resume training on a different device count.
+
+When a pod (or host) is lost, the controller:
+  1. picks the largest supported mesh from the surviving device count
+     (shrinking the *data* axis first — TP groups must stay intact
+     because param shards on the model axis are co-located);
+  2. re-resolves every sharding rule against the new mesh (the rules in
+     distributed/sharding.py are divisibility-checked, so they degrade
+     gracefully);
+  3. restores the latest checkpoint with the new shardings
+     (ft/checkpoint.py checkpoints are mesh-portable) and re-lowers the
+     step function.
+
+Tested in-process by re-meshing a toy model between step ranges
+(tests/test_ft.py) — the loss curve must continue seamlessly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+@dataclasses.dataclass
+class ElasticPlan:
+    mesh_shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+    dropped_devices: int
+
+
+def plan_remesh(available_devices: int, *, model_parallel: int,
+                prefer_pods: bool = True) -> ElasticPlan:
+    """Largest (data, model) mesh with model axis preserved."""
+    if available_devices < model_parallel:
+        raise RuntimeError(
+            f"cannot keep TP={model_parallel} with only "
+            f"{available_devices} devices")
+    data = available_devices // model_parallel
+    # data axis must be a power-of-two divisor chain for batch division
+    d = 1
+    while d * 2 <= data:
+        d *= 2
+    used = d * model_parallel
+    return ElasticPlan(mesh_shape=(d, model_parallel),
+                       axis_names=("data", "model"),
+                       dropped_devices=available_devices - used)
+
+
+def build_mesh(plan: ElasticPlan, devices=None) -> Mesh:
+    devices = devices if devices is not None else jax.devices()
+    n = int(np.prod(plan.mesh_shape))
+    dev = np.asarray(devices[:n]).reshape(plan.mesh_shape)
+    return Mesh(dev, plan.axis_names)
+
+
+def remesh_state(state_tree, new_shardings):
+    """Move a live (or restored) pytree onto a new mesh's shardings."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(np.asarray(x), s),
+        state_tree, new_shardings)

@@ -1,0 +1,55 @@
+"""Straggler / hang mitigation for the training driver.
+
+Production semantics on a pod: every step has a deadline derived from a
+trailing-median step time; a blown deadline marks the step failed, the
+driver restores from the last checkpoint and (in a real deployment)
+re-admits or cordons the slow host.  Here the deadline logic is real
+and the failure is injected by tests (CPU has no independent pods to
+lose), which exercises the same code path the production controller
+would take.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Deque, Optional
+
+
+class StepTimeout(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class Watchdog:
+    factor: float = 3.0            # deadline = factor * median step time
+    min_deadline_s: float = 1.0
+    window: int = 20
+    _times: Deque[float] = dataclasses.field(
+        default_factory=lambda: deque(maxlen=20))
+
+    def deadline(self) -> float:
+        if not self._times:
+            return float("inf")     # no data yet: first steps unbounded
+        med = sorted(self._times)[len(self._times) // 2]
+        return max(self.factor * med, self.min_deadline_s)
+
+    def observe(self, seconds: float):
+        self._times.append(seconds)
+
+    def run_step(self, fn: Callable, *args, fault_injector: Optional[
+            Callable[[], float]] = None):
+        """Run one step under the deadline.  fault_injector (tests)
+        returns extra simulated seconds for this step."""
+        deadline = self.deadline()
+        t0 = time.perf_counter()
+        out = fn(*args)
+        elapsed = time.perf_counter() - t0
+        if fault_injector is not None:
+            elapsed += fault_injector()
+        if elapsed > deadline:
+            raise StepTimeout(
+                f"step took {elapsed:.3f}s > deadline {deadline:.3f}s "
+                f"(straggler suspected)")
+        self.observe(elapsed)
+        return out

@@ -1,0 +1,32 @@
+"""jit'd wrappers around the Pallas kernels.
+
+``interpret`` defaults to True on CPU (this container) and False when a
+real TPU backend is present — the kernels themselves are written for the
+TPU target and only *validated* in interpret mode here.
+"""
+from __future__ import annotations
+
+import jax
+
+from .spmm_csr import spmm_ell_segment
+from .spmm_bcsr import spmm_bcsr
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def spmm_ell_segment_op(cols_pad_flat, vals_pad, x, *, bm: int = 8,
+                        interpret=None):
+    if interpret is None:
+        interpret = default_interpret()
+    return spmm_ell_segment(cols_pad_flat, vals_pad, x, bm=bm,
+                            interpret=interpret)
+
+
+def spmm_bcsr_op(block_cols_pad, block_vals_pad, x, *, kmax: int,
+                 interpret=None):
+    if interpret is None:
+        interpret = default_interpret()
+    return spmm_bcsr(block_cols_pad, block_vals_pad, x, kmax=kmax,
+                     interpret=interpret)

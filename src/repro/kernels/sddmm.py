@@ -1,0 +1,94 @@
+"""SDDMM Pallas kernel: dA.vals[p] = <dY[row_p], X[col_p]>.
+
+The structure-restricted gradient of SpMM w.r.t. the nonzero values —
+the backward-pass twin of the CCM forward kernel.  Same specialization
+story: the (row, col) pairs are the runtime-known structure, scalar-
+prefetched so each grid step gathers exactly the two rows it needs; the
+d-reduction runs over the same lane tiles the forward CCM plan chose.
+
+Grid: (nnz_pad / T,).  Each program computes T output values with a
+static inner loop (no data-dependent branches); padding pairs point at
+row/col 0 and are sliced off by the wrapper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(rows_ref, cols_ref, dy_ref, x_ref, out_ref, *, T: int,
+            d_pad: int, dt: int):
+    b = pl.program_id(0)
+
+    def one(i, _):
+        r = rows_ref[b * T + i]
+        c = cols_ref[b * T + i]
+        acc = jnp.zeros((), jnp.float32)
+
+        def dtile(j, acc):
+            dy = dy_ref[pl.ds(r, 1), pl.ds(j * dt, dt)]
+            xv = x_ref[pl.ds(c, 1), pl.ds(j * dt, dt)]
+            return acc + jnp.sum(dy.astype(jnp.float32)
+                                 * xv.astype(jnp.float32))
+
+        acc = jax.lax.fori_loop(0, d_pad // dt, dtile, acc)
+        out_ref[0, i] = acc
+        return 0
+
+    jax.lax.fori_loop(0, T, one, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("T", "interpret"))
+def sddmm(rows_pad: jax.Array, cols_pad: jax.Array, dy: jax.Array,
+          x: jax.Array, *, T: int = 128, interpret: bool = True
+          ) -> jax.Array:
+    """rows_pad/cols_pad (nnz_pad,) int32 with nnz_pad % T == 0;
+    dy (m, d_pad); x (n, d_pad).  Returns (nnz_pad,) f32."""
+    nnz_pad = rows_pad.shape[0]
+    assert nnz_pad % T == 0
+    m, d_pad = dy.shape
+    n, _ = x.shape
+    dt = min(d_pad, 512)
+    while d_pad % dt:
+        dt //= 2
+    grid = (nnz_pad // T,)
+    out = pl.pallas_call(
+        functools.partial(_kernel, T=T, d_pad=d_pad, dt=dt),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((m, d_pad), lambda b, rows, cols: (0, 0)),
+                pl.BlockSpec((n, d_pad), lambda b, rows, cols: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, T), lambda b, rows, cols: (b, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((nnz_pad // T, T), jnp.float32),
+        interpret=interpret,
+    )(rows_pad, cols_pad, dy, x)
+    return out.reshape(-1)
+
+
+def sddmm_csr(a, dy, x, *, T: int = 128, interpret: bool = True):
+    """Convenience wrapper: CSRMatrix structure -> dvals (nnz,)."""
+    import numpy as np
+    from ..core import ccm
+    rows = np.repeat(np.arange(a.m), a.row_lengths).astype(np.int32)
+    cols = a.col_indices.astype(np.int32)
+    nnz = rows.shape[0]
+    nnz_pad = -(-max(nnz, 1) // T) * T
+    rows_p = np.zeros(nnz_pad, np.int32)
+    cols_p = np.zeros(nnz_pad, np.int32)
+    rows_p[:nnz] = rows
+    cols_p[:nnz] = cols
+    d = dy.shape[1]
+    tiling = ccm.plan_d_tiles(d)
+    dy_p = ccm.pad_cols(dy, tiling.d_pad)
+    x_p = ccm.pad_cols(x, tiling.d_pad)
+    out = sddmm(jnp.asarray(rows_p), jnp.asarray(cols_p), dy_p, x_p,
+                T=T, interpret=interpret)
+    return out[:nnz]

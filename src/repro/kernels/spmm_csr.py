@@ -1,0 +1,91 @@
+"""Faithful CCM SpMM kernel (VPU path) — paper Listing 2 on TPU.
+
+One Pallas program owns a block of ``bm`` rows of one ELL segment and one
+lane tile of the merged columns.  The correspondence to the paper's
+generated x86 (Listing 2):
+
+  x86 generated code                      this kernel
+  ------------------------------------    ---------------------------------
+  vxorps zmm0..xmm4 (zero ret tiles)      acc = jnp.zeros((bm, dt)) in VREGs
+  mov r10/r11 (row nnz bounds)            static L baked into the fori_loop
+                                          trip count (no bounds registers —
+                                          padding removed the branch)
+  .nnzloop: cmp/jge (boundary check)      none: static trip count == the
+                                          eliminated data-dependent branch
+  mov r12, col_indices[r10]               k = cols_ref[...] (SMEM scalar
+                                          prefetch — the scalar register file)
+  vbroadcastss zmm31, vals[r12]           v = vals_ref[rr, l] broadcast by
+                                          the VPU across dt lanes
+  vfmadd231ps zmm0.., zmm31, X[r12,..]    acc += v * x_ref[ds(k,1), :]
+                                          (sequential d-access = CCM)
+  vmovups Y[rdi,..] (store once)          y_ref[...] = acc (one store per
+                                          row-block per tile)
+
+``bm`` rows are processed as independent FMA chains per nnz step — the
+ILP the paper gets from multiple accumulator registers.
+
+The X operand is staged as an (n, dt) column panel in VMEM; for matrices
+whose panel exceeds VMEM the planner splits d (and, in production, n)
+into panels — the HBM→VMEM→VREG re-think of the paper's
+memory-hierarchy argument (DESIGN.md §7.3/§7.5).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(cols_ref, vals_ref, x_ref, y_ref, *, bm: int, L: int, dt: int):
+    r = pl.program_id(0)
+
+    def nnz_step(l, acc):
+        # bm independent gather+FMA chains (static unroll == ILP)
+        rows = []
+        for rr in range(bm):
+            k = cols_ref[(r * bm + rr) * L + l]          # SMEM scalar read
+            rows.append(x_ref[pl.ds(k, 1), :])           # (1, dt) CCM row
+        xg = jnp.concatenate(rows, axis=0)               # (bm, dt)
+        v = vals_ref[:, l]                               # (bm,) broadcast
+        return acc + v[:, None].astype(jnp.float32) * xg.astype(jnp.float32)
+
+    acc = jnp.zeros((bm, dt), dtype=jnp.float32)         # vxorps analogue
+    acc = jax.lax.fori_loop(0, L, nnz_step, acc)         # static trip count
+    y_ref[...] = acc.astype(y_ref.dtype)                 # vmovups analogue
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def spmm_ell_segment(cols_pad_flat: jax.Array, vals_pad: jax.Array,
+                     x: jax.Array, *, bm: int = 8,
+                     interpret: bool = True) -> jax.Array:
+    """Compute one ELL segment: Y_seg (R_pad, d_pad) = segment · X.
+
+    cols_pad_flat : (R_pad * L,) int32 — scalar-prefetched structure
+    vals_pad      : (R_pad, L) float   — zero on padding slots
+    x             : (n, d_pad) float   — d already padded to the lane tile
+    """
+    R_pad, L = vals_pad.shape
+    n, d_pad = x.shape
+    assert R_pad % bm == 0, (R_pad, bm)
+    dt = min(d_pad, 512)
+    while d_pad % dt:
+        dt //= 2
+    grid = (R_pad // bm, d_pad // dt)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, bm=bm, L=L, dt=dt),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, L), lambda r, j, cols: (r, 0)),
+                pl.BlockSpec((n, dt), lambda r, j, cols: (0, j)),
+            ],
+            out_specs=pl.BlockSpec((bm, dt), lambda r, j, cols: (r, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((R_pad, d_pad), jnp.float32),
+        interpret=interpret,
+    )(cols_pad_flat, vals_pad, x)

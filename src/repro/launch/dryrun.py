@@ -1,0 +1,329 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is how the distribution config is proven coherent without hardware:
+512 placeholder host devices let ``jax.make_mesh`` build the production
+meshes; ``jit(step).lower(...).compile()`` must succeed for every cell,
+and the compiled artifact yields memory_analysis / cost_analysis /
+collective schedule for EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch mixtral-8x7b --shape train_4k \
+      --mesh multi --out artifacts/
+  python -m repro.launch.dryrun --all --out artifacts/   # every cell
+"""
+import argparse     # noqa: E402
+import dataclasses  # noqa: E402
+import json         # noqa: E402
+import time         # noqa: E402
+import traceback    # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax          # noqa: E402
+import numpy as np  # noqa: E402
+
+from ..analysis import roofline as rf                      # noqa: E402
+from ..configs import SHAPES, all_arch_names, cell_supported, get_config  # noqa: E402
+from ..distributed.sharding import (AxisEnv, batch_shardings,      # noqa: E402
+                                    decode_shardings, logits_sharding,
+                                    param_shardings, replicated)
+from ..models.model import Model                           # noqa: E402
+from ..optim.adamw import AdamW, warmup_cosine             # noqa: E402
+from ..train.train_step import (make_prefill_step, make_serve_step,  # noqa: E402
+                                make_train_step)
+from .mesh import make_production_mesh                     # noqa: E402
+
+
+def _mem_analysis_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:                                  # pragma: no cover
+        return {"error": str(e)}
+    out = {}
+    for attr in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "temp_size_in_bytes",
+                 "alias_size_in_bytes"):
+        v = getattr(ma, attr, None)
+        if v is not None:
+            out[attr] = int(v)
+    if not out:
+        out["repr"] = repr(ma)
+    return out
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, *,
+               remat: str = "full", microbatches: int = 1,
+               chunk_q: int = 512, donate: bool = True,
+               cfg_override=None, fwd_opts=None, variant: str = ""):
+    """Build and lower the step function for one cell. Returns
+    (lowered, mesh, model, shape)."""
+    cfg = cfg_override if cfg_override is not None else get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = Model(cfg)
+    fwd_opts = dict(fwd_opts or {})
+    variants = set(v for v in variant.split(",") if v)
+    # activation sharding constraints (batch -> dp axes); without these
+    # GSPMD follows parameter shardings into the residual stream
+    fwd_opts.setdefault("shard_ctx", {
+        "mesh": mesh,
+        "dp": ("pod", "data") if multi_pod else ("data",),
+        "gather_fsdp": "fsdp_gather" in variants,
+        "moe_shard": "moe_shard" in variants,
+        "bf16_ar": "bf16_ar" in variants})
+    if "causal_skip" in variants:
+        fwd_opts.setdefault("causal_skip", True)
+    rng = jax.random.PRNGKey(0)
+    param_sds = jax.eval_shape(model.init, rng)
+    param_mode = ("serve_replicated"
+                  if "serve_repl" in variants and shape_name != "train_4k"
+                  else "train")
+    p_shard = param_shardings(param_sds, mesh, mode=param_mode)
+
+    if shape.kind == "train":
+        opt = AdamW(learning_rate=warmup_cosine(3e-4, 200, 20000))
+        opt_sds = jax.eval_shape(opt.init, param_sds)
+        o_shard = param_shardings(opt_sds, mesh)
+        step = make_train_step(
+            model, opt, remat=remat, microbatches=microbatches,
+            chunk_q=chunk_q,
+            grad_shardings=p_shard if "grad_rs" in variants else None,
+            **fwd_opts)
+        batch_sds = model.input_specs(shape)
+        b_shard = batch_shardings(batch_sds, mesh)
+        metrics_shard = {"loss": replicated(mesh),
+                         "grad_norm": replicated(mesh),
+                         "nll": replicated(mesh)}
+        jitted = jax.jit(step,
+                         in_shardings=(p_shard, o_shard, b_shard),
+                         out_shardings=(p_shard, o_shard, metrics_shard),
+                         donate_argnums=(0, 1) if donate else ())
+        lowered = jitted.lower(param_sds, opt_sds, batch_sds)
+    elif shape.kind == "prefill":
+        step = make_prefill_step(model, cache_len=shape.seq_len,
+                                 **fwd_opts)
+        batch_sds = model.input_specs(shape)
+        b_shard = batch_shardings(batch_sds, mesh)
+        cache_sds = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len))
+        c_shard = decode_shardings(cache_sds, mesh)
+        if "image_embeds" in batch_sds:
+            jitted = jax.jit(step, in_shardings=(p_shard,
+                                                 b_shard["tokens"],
+                                                 b_shard["image_embeds"]),
+                             out_shardings=(logits_sharding(
+                                 mesh, shape.global_batch, cfg.vocab_size),
+                                 c_shard))
+            lowered = jitted.lower(param_sds, batch_sds["tokens"],
+                                   batch_sds["image_embeds"])
+        else:
+            jitted = jax.jit(step, in_shardings=(p_shard, b_shard["tokens"]),
+                             out_shardings=(logits_sharding(
+                                 mesh, shape.global_batch, cfg.vocab_size),
+                                 c_shard))
+            lowered = jitted.lower(param_sds, batch_sds["tokens"])
+    elif shape.kind == "decode":
+        step = make_serve_step(
+            model, scan_unroll=fwd_opts.get("scan_unroll", False),
+            shard_ctx=fwd_opts["shard_ctx"])
+        specs = model.input_specs(shape)
+        d_shard = decode_shardings(specs, mesh)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_shard, d_shard["token"], d_shard["caches"],
+                          d_shard["pos"]),
+            out_shardings=(logits_sharding(
+                mesh, shape.global_batch, cfg.vocab_size),
+                d_shard["caches"]),
+            donate_argnums=(2,) if donate else ())
+        lowered = jitted.lower(param_sds, specs["token"], specs["caches"],
+                               specs["pos"])
+    else:
+        raise ValueError(shape.kind)
+    return lowered, mesh, model, shape
+
+
+def _cost_summary(compiled) -> dict:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "transcendentals": float(cost.get("transcendentals", 0.0))}
+
+
+def probe_costs(arch: str, shape_name: str, multi_pod: bool, *,
+                remat: str = "full", microbatches: int = 1,
+                variant: str = "", chunk_q: int = 512) -> dict:
+    """Exact per-period cost extrapolation.
+
+    XLA's cost_analysis counts while-loop bodies ONCE (scan trip counts
+    are ignored), so the full-depth module wildly undercounts.  We lower
+    1-period and 2-period variants with every scan fully unrolled
+    (identical math, loop-free HLO), take the delta as the exact
+    per-period cost, and extrapolate: total(P) = boundary + P * delta.
+    The rwkv wkv recurrence remains a loop (counted once); its FLOPs are
+    ~1% of the block (projections dominate) — noted in EXPERIMENTS.md.
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    seq = shape.seq_len
+    fwd_opts = {"scan_unroll": True, "unroll_chunks": True,
+                "ssm_chunk": seq}
+    probes = {}
+    for k in (1, 2):
+        cfg_k = dataclasses.replace(cfg, name=f"{cfg.name}-p{k}",
+                                    num_layers=k * cfg.period_len)
+        lowered, mesh, _, _ = lower_cell(
+            arch, shape_name, multi_pod, remat=remat,
+            microbatches=microbatches,
+            chunk_q=min(seq, chunk_q if "causal_skip" in variant
+                        else 4096),
+            donate=False, cfg_override=cfg_k, fwd_opts=fwd_opts,
+            variant=variant)
+        compiled = lowered.compile()
+        summ = _cost_summary(compiled)
+        summ["collectives"] = rf.parse_collective_bytes(compiled.as_text())
+        probes[k] = summ
+
+    P = cfg.num_periods
+
+    def extrap(v1, v2):
+        return max(v1 + (v2 - v1) * (P - 1), 0.0)
+
+    total = {
+        "flops": extrap(probes[1]["flops"], probes[2]["flops"]),
+        "bytes": extrap(probes[1]["bytes"], probes[2]["bytes"]),
+        "transcendentals": extrap(probes[1]["transcendentals"],
+                                  probes[2]["transcendentals"]),
+        "collectives": {
+            kind: extrap(probes[1]["collectives"][kind],
+                         probes[2]["collectives"][kind])
+            for kind in probes[1]["collectives"]},
+        "probe_1": probes[1], "probe_2": probes[2], "periods": P,
+    }
+    return total
+
+
+def dryrun_cell(arch: str, shape_name: str, multi_pod: bool, *,
+                remat: str = "full", microbatches: int = 1,
+                chunk_q: int = 512, out_dir=None, tag: str = "",
+                variant: str = "", collect_roofline: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell_id = f"{arch}__{shape_name}__{mesh_name}" + (f"__{tag}" if tag else "")
+    supported, reason = cell_supported(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "tag": tag, "variant": variant, "status": "", "remat": remat,
+           "microbatches": microbatches}
+    if not supported:
+        rec.update(status="skip", reason=reason)
+        _write(rec, out_dir, cell_id)
+        return rec
+    t0 = time.perf_counter()
+    try:
+        lowered, mesh, model, shape = lower_cell(
+            arch, shape_name, multi_pod, remat=remat,
+            microbatches=microbatches, chunk_q=chunk_q, variant=variant)
+        t_lower = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t1
+        chips = int(np.prod(mesh.devices.shape))
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        mem = _mem_analysis_dict(compiled)
+        rec.update(status="ok", lower_s=round(t_lower, 2),
+                   compile_s=round(t_compile, 2), chips=chips,
+                   memory_analysis=mem,
+                   cost={k: float(v) for k, v in cost.items()
+                         if isinstance(v, (int, float))})
+        if collect_roofline:
+            hlo = compiled.as_text()
+            coll_raw = rf.parse_collective_bytes(hlo)
+            rec["collective_bytes_per_chip_loop_body"] = coll_raw
+            rec["hlo_collective_counts"] = {
+                k: hlo.count(f" {k}(") + hlo.count(f" {k}-start(")
+                for k in ("all-gather", "all-reduce", "reduce-scatter",
+                          "all-to-all", "collective-permute")}
+            del hlo
+            # exact per-period extrapolated costs (see probe_costs)
+            probe = probe_costs(arch, shape_name, multi_pod,
+                                remat=remat, microbatches=microbatches,
+                                variant=variant, chunk_q=chunk_q)
+            rec["cost_extrapolated_per_chip"] = {
+                k: probe[k] for k in ("flops", "bytes", "transcendentals",
+                                      "collectives", "periods")}
+            mf = rf.model_flops_for_cell(cfg, shape)
+            terms = rf.analyze({"flops": probe["flops"],
+                                "bytes accessed": probe["bytes"]},
+                               probe["collectives"], chips, model_flops=mf)
+            rec["roofline"] = terms.to_dict()
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    _write(rec, out_dir, cell_id)
+    return rec
+
+
+def _write(rec: dict, out_dir, cell_id: str):
+    if out_dir is None:
+        return
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    (out / f"{cell_id}.json").write_text(json.dumps(rec, indent=1))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=("single", "multi",
+                                                         "both"))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--chunk-q", type=int, default=512)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--variant", default="",
+                    help="comma list: grad_rs,serve_repl")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = all_arch_names() if args.arch is None else [args.arch]
+    shapes = list(SHAPES) if args.shape is None else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "pod2x16x16" if mp else "pod16x16"
+                cell = f"{arch}__{shape}__{mesh_name}" + (
+                    f"__{args.tag}" if args.tag else "")
+                if args.skip_existing and (Path(args.out) /
+                                           f"{cell}.json").exists():
+                    print(f"[dryrun] {cell}: exists, skip", flush=True)
+                    continue
+                rec = dryrun_cell(arch, shape, mp, remat=args.remat,
+                                  microbatches=args.microbatches,
+                                  chunk_q=args.chunk_q, out_dir=args.out,
+                                  tag=args.tag, variant=args.variant)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    extra = (f" lower={rec['lower_s']}s "
+                             f"compile={rec['compile_s']}s "
+                             f"bottleneck={rec['roofline']['bottleneck']}")
+                elif status == "error":
+                    extra = " " + rec["error"][:200]
+                print(f"[dryrun] {cell}: {status}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

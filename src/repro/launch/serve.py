@@ -1,0 +1,80 @@
+"""Batched serving driver: prefill a batch of prompts, then greedy
+decode with the KV/state caches — the serving-side end-to-end path.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --smoke \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config, reduced
+from ..models.model import Model
+
+
+def generate(model: Model, params, prompts: jax.Array, *, gen_len: int,
+             cache_len: int, image_embeds=None, greedy: bool = True,
+             rng=None):
+    """prompts (B, S) -> (B, S+gen_len) token ids."""
+    B, S = prompts.shape
+    logits, caches = jax.jit(
+        lambda p, t: model.prefill(p, t, cache_len,
+                                   image_embeds=image_embeds)
+    )(params, prompts)
+    step = jax.jit(model.decode_step)
+    last = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    out = [prompts, last]
+    pos = S
+    for i in range(gen_len - 1):
+        logits, caches = step(params, last, caches, jnp.int32(pos))
+        if greedy:
+            last = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            rng, sub = jax.random.split(rng)
+            last = jax.random.categorical(sub, logits).astype(jnp.int32)
+        out.append(last)
+        pos += 1
+    return jnp.concatenate(out, axis=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = reduced(cfg)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(
+        2, cfg.vocab_size, size=(args.batch, args.prompt_len)), jnp.int32)
+    img = None
+    if cfg.family == "vlm":
+        img = jnp.asarray(rng.standard_normal(
+            (args.batch, cfg.num_image_tokens, cfg.d_model)) * 0.02,
+            jnp.dtype(cfg.dtype))
+    t0 = time.time()
+    out = generate(model, params, prompts,
+                   gen_len=args.gen,
+                   cache_len=args.prompt_len + args.gen + 1,
+                   image_embeds=img)
+    dt = time.time() - t0
+    tok_s = args.batch * args.gen / dt
+    print(f"[serve] generated {out.shape} in {dt:.2f}s "
+          f"({tok_s:.1f} tok/s batched)")
+    print("[serve] sample:", np.asarray(out[0, -args.gen:]))
+
+
+if __name__ == "__main__":
+    main()

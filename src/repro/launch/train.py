@@ -1,0 +1,151 @@
+"""End-to-end training driver: data pipeline -> jit'd train step ->
+checkpoint/restart + watchdog straggler mitigation.
+
+Runs real steps on whatever devices exist (CPU here: use --smoke for the
+reduced configs; the full configs are exercised by the dry-run).
+
+  PYTHONPATH=src python -m repro.launch.train --arch mixtral-8x7b \
+      --smoke --steps 50 --batch 8 --seq 64 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config, reduced
+from ..data.pipeline import PipelineConfig, TokenPipeline
+from ..distributed.sharding import batch_shardings, param_shardings, replicated
+from ..ft import checkpoint as ckpt
+from ..ft.watchdog import StepTimeout, Watchdog
+from ..models.model import Model
+from ..optim.adamw import AdamW, warmup_cosine
+from ..train.train_step import make_train_step
+from .mesh import make_host_mesh
+
+
+def run_training(cfg, *, steps: int, global_batch: int, seq_len: int,
+                 ckpt_dir=None, ckpt_every: int = 20, lr: float = 3e-4,
+                 microbatches: int = 1, remat: str = "full",
+                 data_parallel: int = 1, model_parallel: int = 1,
+                 log_every: int = 10, fault_injector=None,
+                 watchdog: Watchdog = None, seed: int = 0,
+                 stop_at: int = None):
+    model = Model(cfg)
+    mesh = make_host_mesh(data=data_parallel, model=model_parallel)
+    opt = AdamW(learning_rate=warmup_cosine(lr, min(20, steps // 10 + 1),
+                                            steps))
+
+    param_sds = jax.eval_shape(model.init, jax.random.PRNGKey(seed))
+    p_shard = param_shardings(param_sds, mesh)
+    opt_sds = jax.eval_shape(opt.init, param_sds)
+    o_shard = param_shardings(opt_sds, mesh)
+
+    step_fn = make_train_step(
+        model, opt, remat=remat, microbatches=microbatches,
+        chunk_q=max(64, seq_len // 4),
+        shard_ctx={"mesh": mesh, "dp": ("data",)})
+
+    pipe_cfg = PipelineConfig(
+        vocab_size=cfg.vocab_size, seq_len=seq_len,
+        global_batch=global_batch, seed=seed,
+        num_image_tokens=cfg.num_image_tokens
+        if cfg.family == "vlm" else 0, d_model=cfg.d_model)
+    pipe = TokenPipeline(pipe_cfg)
+
+    batch_sds = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), pipe.batch_at(0))
+    b_shard = batch_shardings(batch_sds, mesh)
+    metrics_shard = {k: replicated(mesh)
+                     for k in ("loss", "grad_norm", "nll")}
+    jitted = jax.jit(step_fn, in_shardings=(p_shard, o_shard, b_shard),
+                     out_shardings=(p_shard, o_shard, metrics_shard),
+                     donate_argnums=(0, 1))
+
+    # init or resume
+    start_step = 0
+    params = jax.jit(model.init, out_shardings=p_shard)(
+        jax.random.PRNGKey(seed))
+    opt_state = jax.jit(opt.init, out_shardings=o_shard)(params)
+    if ckpt_dir is not None and ckpt.latest_step(ckpt_dir) is not None:
+        start_step = ckpt.latest_step(ckpt_dir)
+        params = ckpt.restore_checkpoint(ckpt_dir, param_sds,
+                                         shardings=p_shard)
+        opt_state = ckpt.restore_checkpoint(
+            Path(ckpt_dir) / "opt", opt_sds, shardings=o_shard)
+        print(f"[train] resumed from step {start_step}", flush=True)
+
+    wd = watchdog or Watchdog()
+    losses = []
+    step = start_step
+    end_step = min(steps, stop_at) if stop_at is not None else steps
+    while step < end_step:
+        batch = jax.tree.map(
+            lambda x, s: jax.device_put(x, s), pipe.batch_at(step), b_shard)
+        try:
+            params, opt_state, metrics = wd.run_step(
+                jitted, params, opt_state, batch,
+                fault_injector=fault_injector)
+        except StepTimeout as e:
+            print(f"[train] step {step}: {e}; restoring last checkpoint",
+                  flush=True)
+            if ckpt_dir is None or ckpt.latest_step(ckpt_dir) is None:
+                # nothing to restore; re-init optimizer step only
+                continue
+            step = ckpt.latest_step(ckpt_dir)
+            params = ckpt.restore_checkpoint(ckpt_dir, param_sds,
+                                             shardings=p_shard)
+            opt_state = ckpt.restore_checkpoint(
+                Path(ckpt_dir) / "opt", opt_sds, shardings=o_shard)
+            continue
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if step % log_every == 0:
+            print(f"[train] step {step} loss {loss:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f}", flush=True)
+        step += 1
+        if ckpt_dir is not None and step % ckpt_every == 0:
+            ckpt.save_checkpoint(ckpt_dir, step, params)
+            ckpt.save_checkpoint(Path(ckpt_dir) / "opt", step, opt_state)
+    if ckpt_dir is not None:
+        ckpt.save_checkpoint(ckpt_dir, step, params)
+        ckpt.save_checkpoint(Path(ckpt_dir) / "opt", step, opt_state)
+    return params, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--dp", type=int, default=1)
+    ap.add_argument("--tp", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = reduced(cfg)
+    t0 = time.time()
+    _, losses = run_training(
+        cfg, steps=args.steps, global_batch=args.batch, seq_len=args.seq,
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every, lr=args.lr,
+        microbatches=args.microbatches, remat=args.remat,
+        data_parallel=args.dp, model_parallel=args.tp)
+    print(f"[train] done: first loss {losses[0]:.4f} "
+          f"last loss {losses[-1]:.4f} ({time.time()-t0:.1f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from .model import Model, cross_entropy_loss
+from . import layers, mamba, moe, rwkv6, transformer
+
+__all__ = ["Model", "cross_entropy_loss", "layers", "mamba", "moe",
+           "rwkv6", "transformer"]

@@ -1,0 +1,120 @@
+"""Mamba-1 selective SSM block (jamba's mamba layers).
+
+Chunked selective scan: outer ``lax.scan`` over sequence chunks carrying
+the (B, d_inner, state) SSM state; within a chunk the linear recurrence
+    h_t = a_t * h_{t-1} + b_t,  a_t = exp(dt_t·A),  b_t = dt_t·B_t⊗x_t
+is evaluated with ``lax.associative_scan`` (affine recurrences compose:
+(a2,b2)∘(a1,b1) = (a1·a2, a2·b1+b2)).  The (B, chunk, d_inner, N) state
+tensor is transient per chunk — the working-set discipline that makes
+the train_4k cells fit HBM.  Decode is the O(1) single-step update.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rms_norm
+
+
+def _ssm_chunk(h0, a, b):
+    """h0 (B,Di,N); a,b (B,C,Di,N) -> (states (B,C,Di,N), h_last)."""
+    def comb(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+    a_cum, b_cum = jax.lax.associative_scan(comb, (a, b), axis=1)
+    states = a_cum * h0[:, None] + b_cum
+    return states, states[:, -1]
+
+
+def _conv_step(conv_buf, x_t, w, bias):
+    """Causal depthwise conv decode step. conv_buf (B,K-1,Di), x_t (B,Di)."""
+    window = jnp.concatenate([conv_buf, x_t[:, None]], axis=1)  # (B,K,Di)
+    y = jnp.einsum("bkd,kd->bd", window, w) + bias
+    return window[:, 1:], y
+
+
+def mamba_block(p: Dict, x: jax.Array, *, state_dim: int, conv_width: int,
+                chunk: int = 256, norm_eps: float = 1e-5,
+                init_state: Optional[Dict] = None,
+                return_state: bool = False):
+    """Pre-norm Mamba block: x + out_proj(ssm(conv(in_proj(norm(x))))).
+
+    p: ln (D,), in_proj (D, 2*Di), conv_w (K, Di), conv_b (Di,),
+       x_proj (Di, R+2N), dt_proj (R, Di), dt_bias (Di,),
+       A_log (Di, N), D (Di,), out_proj (Di, D)
+    """
+    B, S, D = x.shape
+    Di = p["in_proj"].shape[1] // 2
+    N = state_dim
+    R = p["dt_proj"].shape[0]
+
+    h = rms_norm(x, p["ln"], norm_eps)
+    xz = jnp.einsum("bsd,de->bse", h, p["in_proj"].astype(h.dtype))
+    xi, z = jnp.split(xz, 2, axis=-1)                   # (B,S,Di) each
+
+    # causal depthwise conv (width K)
+    if init_state is not None and S == 1:
+        conv_buf, xc = _conv_step(init_state["conv"], xi[:, 0],
+                                  p["conv_w"].astype(xi.dtype),
+                                  p["conv_b"].astype(xi.dtype))
+        xc = xc[:, None]
+    else:
+        pad = jnp.zeros((B, conv_width - 1, Di), xi.dtype)
+        xp = jnp.concatenate([pad, xi], axis=1)
+        idx = (jnp.arange(S)[:, None] + jnp.arange(conv_width)[None, :])
+        windows = xp[:, idx]                            # (B,S,K,Di)
+        xc = jnp.einsum("bskd,kd->bsd", windows,
+                        p["conv_w"].astype(xi.dtype)) + p["conv_b"].astype(xi.dtype)
+        conv_buf = xp[:, S:][:, -(conv_width - 1):] if S >= conv_width - 1 \
+            else xp[:, -(conv_width - 1):]
+        conv_buf = xp[:, -(conv_width - 1):]
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(xi.dtype)
+
+    # input-dependent SSM parameters
+    proj = jnp.einsum("bsd,dr->bsr", xc, p["x_proj"].astype(xc.dtype))
+    dt_low, Bm, Cm = jnp.split(proj, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt_low, p["dt_proj"].astype(xc.dtype)
+                   ).astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))        # (Di,N)
+    a = jnp.exp(dt[..., None] * A)                      # (B,S,Di,N)
+    b = (dt[..., None] * Bm[:, :, None, :].astype(jnp.float32)
+         * xc[..., None].astype(jnp.float32))           # (B,S,Di,N)
+
+    h0 = (init_state["ssm"] if init_state is not None
+          else jnp.zeros((B, Di, N), jnp.float32))
+
+    if S == 1:
+        states = a[:, 0] * h0 + b[:, 0]
+        y = jnp.einsum("bdn,bn->bd", states, Cm[:, 0].astype(jnp.float32))
+        y = y[:, None]
+        h_last = states
+    elif S <= chunk:
+        states, h_last = _ssm_chunk(h0, a, b)
+        y = jnp.einsum("bsdn,bsn->bsd", states, Cm.astype(jnp.float32))
+    else:
+        assert S % chunk == 0, (S, chunk)
+        nch = S // chunk
+        a_c = a.reshape(B, nch, chunk, Di, N).swapaxes(0, 1)
+        b_c = b.reshape(B, nch, chunk, Di, N).swapaxes(0, 1)
+        c_c = Cm.reshape(B, nch, chunk, N).swapaxes(0, 1)
+
+        def step(hc, inp):
+            ac, bc, cc = inp
+            states, h_next = _ssm_chunk(hc, ac, bc)
+            yc = jnp.einsum("bsdn,bsn->bsd", states, cc.astype(jnp.float32))
+            return h_next, yc
+
+        h_last, y = jax.lax.scan(step, h0, (a_c, b_c, c_c))
+        y = y.swapaxes(0, 1).reshape(B, S, Di)
+
+    y = y + xc.astype(jnp.float32) * p["D"].astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(y.dtype))
+    res = x + out
+    if return_state:
+        return res, {"ssm": h_last, "conv": conv_buf}
+    return res

@@ -1,0 +1,102 @@
+"""Model facade: config -> init / loss / serve entry points + input specs."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeSpec
+from . import transformer
+
+
+def cross_entropy_loss(logits, labels, mask=None):
+    """logits (B,S,V) f32, labels (B,S) int32. Mean NLL over tokens."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.clip(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+
+    # -- params ----------------------------------------------------------
+    def init(self, rng) -> Dict[str, Any]:
+        return transformer.init_params(self.cfg, rng)
+
+    def param_shapes(self, rng=None) -> Any:
+        rng = jax.random.PRNGKey(0) if rng is None else rng
+        return jax.eval_shape(transformer.init_params,
+                              dataclasses.replace(self.cfg), rng)
+
+    # -- training --------------------------------------------------------
+    def loss_fn(self, params, batch, *, remat: str = "full",
+                chunk_q: int = 512, ssm_chunk: int = 256,
+                scan_unroll: bool = False, unroll_chunks: bool = False,
+                shard_ctx=None, causal_skip: bool = False):
+        logits, aux = transformer.forward_train(
+            self.cfg, params, batch["tokens"],
+            image_embeds=batch.get("image_embeds"), remat=remat,
+            chunk_q=chunk_q, ssm_chunk=ssm_chunk, scan_unroll=scan_unroll,
+            unroll_chunks=unroll_chunks, shard_ctx=shard_ctx,
+            causal_skip=causal_skip)
+        loss = cross_entropy_loss(logits, batch["labels"],
+                                  batch.get("loss_mask"))
+        total = loss + 1e-2 * aux.get("moe_aux", 0.0)
+        return total, {"nll": loss, **aux}
+
+    # -- serving ---------------------------------------------------------
+    def prefill(self, params, tokens, cache_len: int, image_embeds=None,
+                **fwd_opts):
+        return transformer.prefill(self.cfg, params, tokens, cache_len,
+                                   image_embeds=image_embeds, **fwd_opts)
+
+    def decode_step(self, params, token, caches, pos, *,
+                    scan_unroll: bool = False, shard_ctx=None):
+        return transformer.forward_decode(self.cfg, params, token, caches,
+                                          pos, scan_unroll=scan_unroll,
+                                          shard_ctx=shard_ctx)
+
+    def init_cache(self, batch: int, cache_len: int):
+        return transformer.init_decode_cache(self.cfg, batch, cache_len)
+
+    # -- dry-run input specs ----------------------------------------------
+    def input_specs(self, shape: ShapeSpec, *, per_pod_batch: Optional[int]
+                    = None) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input of this cell
+        (no allocation).  Modality frontends are stubs per task spec:
+        the VLM's image embeddings arrive as precomputed (B, I, D)."""
+        cfg = self.cfg
+        B = per_pod_batch if per_pod_batch is not None else shape.global_batch
+        dt = jnp.dtype(cfg.dtype)
+        f = jax.ShapeDtypeStruct
+        if shape.kind == "train":
+            specs = {
+                "tokens": f((B, shape.seq_len), jnp.int32),
+                "labels": f((B, shape.seq_len), jnp.int32),
+            }
+            if cfg.family == "vlm":
+                specs["image_embeds"] = f(
+                    (B, cfg.num_image_tokens, cfg.d_model), dt)
+            return specs
+        if shape.kind == "prefill":
+            specs = {"tokens": f((B, shape.seq_len), jnp.int32)}
+            if cfg.family == "vlm":
+                specs["image_embeds"] = f(
+                    (B, cfg.num_image_tokens, cfg.d_model), dt)
+            return specs
+        if shape.kind == "decode":
+            cache_shapes = jax.eval_shape(
+                lambda: transformer.init_decode_cache(cfg, B, shape.seq_len))
+            return {
+                "token": f((B, 1), jnp.int32),
+                "caches": cache_shapes,
+                "pos": f((), jnp.int32),
+            }
+        raise ValueError(shape.kind)

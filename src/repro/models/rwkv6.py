@@ -1,0 +1,144 @@
+"""RWKV-6 "Finch" block: time-mix with data-dependent decay + channel-mix.
+
+The wkv recurrence per head (state S ∈ R^{N x N}):
+    out_t = r_t · (S_{t-1} + diag(u) k_tᵀ v_t)
+    S_t   = diag(w_t) S_{t-1} + k_tᵀ v_t
+with w_t data-dependent (the Finch contribution).  Sequence evaluation
+is chunked: outer scan carries the (B,H,N,N) state; the chunk body is
+``jax.checkpoint``-ed so backward recomputes in-chunk states instead of
+storing S per position.  Decode is the O(1) single-step update.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import layer_norm
+
+
+def _lora(x, a, b):
+    """Low-rank data-dependent modulation: tanh(x A) B."""
+    return jnp.einsum("...r,rd->...d",
+                      jnp.tanh(jnp.einsum("...d,dr->...r", x, a)), b)
+
+
+def _token_shift(x, x_prev_last):
+    """(B,S,D) -> previous-token stream; x_prev_last (B,D) seeds t=0."""
+    return jnp.concatenate([x_prev_last[:, None], x[:, :-1]], axis=1)
+
+
+def _wkv_chunk(state, r, k, v, w, u):
+    """Sequential wkv over a chunk.
+    state (B,H,N,N); r,k,v,w (B,C,H,N); u (H,N)."""
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                       # (B,H,N)
+        kv = kt[..., :, None] * vt[..., None, :]   # (B,H,N,N)
+        out = jnp.einsum("bhn,bhnm->bhm", rt, s + u[..., :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, out
+
+    rs, ks, vs, ws = (t.swapaxes(0, 1) for t in (r, k, v, w))
+    state, outs = jax.lax.scan(step, state, (rs, ks, vs, ws))
+    return state, outs.swapaxes(0, 1)              # (B,C,H,N)
+
+
+def time_mix(p: Dict, x, *, num_heads: int, head_dim: int,
+             chunk: int = 256, norm_eps: float = 1e-5,
+             init_state: Optional[Dict] = None, return_state: bool = False):
+    B, S, D = x.shape
+    H, N = num_heads, head_dim
+    h = layer_norm(x, p["ln_w"], p["ln_b"], norm_eps)
+
+    x_prev_last = (init_state["x_prev_tm"] if init_state is not None
+                   else jnp.zeros((B, D), h.dtype))
+    hp = _token_shift(h, x_prev_last)
+    dx = hp - h
+
+    def mixed(name):
+        mu = p[f"mu_{name}"].astype(h.dtype)
+        lora = _lora(h.astype(jnp.float32), p[f"lora_{name}_a"],
+                     p[f"lora_{name}_b"]).astype(h.dtype)
+        return h + dx * (mu + lora)
+
+    r = jnp.einsum("bsd,dhn->bshn", mixed("r"), p["w_r"].astype(h.dtype))
+    k = jnp.einsum("bsd,dhn->bshn", mixed("k"), p["w_k"].astype(h.dtype))
+    v = jnp.einsum("bsd,dhn->bshn", mixed("v"), p["w_v"].astype(h.dtype))
+    g = jnp.einsum("bsd,dhn->bshn", mixed("g"), p["w_g"].astype(h.dtype))
+    # data-dependent decay (the Finch mechanism)
+    wraw = (p["w0"].astype(jnp.float32)
+            + _lora(mixed("w").astype(jnp.float32), p["lora_w_a"],
+                    p["lora_w_b"]).reshape(B, S, H, N))
+    w = jnp.exp(-jnp.exp(wraw))                    # (B,S,H,N) in (0,1)
+
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    u = p["u"].astype(jnp.float32)                 # (H,N)
+    state = (init_state["wkv"] if init_state is not None
+             else jnp.zeros((B, H, N, N), jnp.float32))
+
+    if S <= chunk:
+        state, out = _wkv_chunk(state, rf, kf, vf, w, u)
+    else:
+        assert S % chunk == 0
+        nch = S // chunk
+        resh = lambda t: t.reshape(B, nch, chunk, H, N).swapaxes(0, 1)
+        body = jax.checkpoint(
+            lambda s, inp: _wkv_chunk(s, *inp, u))
+        state, out = jax.lax.scan(body, state,
+                                  (resh(rf), resh(kf), resh(vf), resh(w)))
+        out = out.swapaxes(0, 1).reshape(B, nch * chunk, H, N)
+
+    # per-head group norm, then gate
+    mu = jnp.mean(out, axis=-1, keepdims=True)
+    var = jnp.var(out, axis=-1, keepdims=True)
+    out = (out - mu) * jax.lax.rsqrt(var + norm_eps)
+    out = out * p["gn_w"].astype(jnp.float32) + p["gn_b"].astype(jnp.float32)
+    out = out.astype(x.dtype) * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bshn,hnd->bsd", out, p["w_o"].astype(x.dtype))
+    res = x + out
+    if return_state:
+        return res, {"wkv": state, "x_prev_tm": h[:, -1]}
+    return res
+
+
+def channel_mix(p: Dict, x, *, norm_eps: float = 1e-5,
+                init_state: Optional[Dict] = None,
+                return_state: bool = False):
+    B, S, D = x.shape
+    h = layer_norm(x, p["ln_w"], p["ln_b"], norm_eps)
+    x_prev_last = (init_state["x_prev_cm"] if init_state is not None
+                   else jnp.zeros((B, D), h.dtype))
+    hp = _token_shift(h, x_prev_last)
+    dx = hp - h
+    hk = h + dx * p["mu_k"].astype(h.dtype)
+    hr = h + dx * p["mu_r"].astype(h.dtype)
+    kk = jnp.einsum("bsd,df->bsf", hk, p["w_k"].astype(h.dtype))
+    kk = jnp.square(jax.nn.relu(kk.astype(jnp.float32))).astype(h.dtype)
+    vv = jnp.einsum("bsf,fd->bsd", kk, p["w_v"].astype(h.dtype))
+    rr = jax.nn.sigmoid(
+        jnp.einsum("bsd,de->bse", hr, p["w_r"].astype(h.dtype)
+                   ).astype(jnp.float32)).astype(h.dtype)
+    res = x + rr * vv
+    if return_state:
+        return res, {"x_prev_cm": h[:, -1]}
+    return res
+
+
+def rwkv_block(p: Dict, x, *, num_heads: int, head_dim: int,
+               chunk: int = 256, norm_eps: float = 1e-5,
+               init_state: Optional[Dict] = None,
+               return_state: bool = False):
+    if return_state:
+        x, st_tm = time_mix(p["tm"], x, num_heads=num_heads,
+                            head_dim=head_dim, chunk=chunk,
+                            norm_eps=norm_eps, init_state=init_state,
+                            return_state=True)
+        x, st_cm = channel_mix(p["cm"], x, norm_eps=norm_eps,
+                               init_state=init_state, return_state=True)
+        return x, {**st_tm, **st_cm}
+    x = time_mix(p["tm"], x, num_heads=num_heads, head_dim=head_dim,
+                 chunk=chunk, norm_eps=norm_eps, init_state=init_state)
+    x = channel_mix(p["cm"], x, norm_eps=norm_eps, init_state=init_state)
+    return x

@@ -1,0 +1,83 @@
+"""AdamW with f32 master accumulators, global-norm clipping and a
+warmup+cosine schedule.  States mirror param sharding (ZeRO-3: the
+optimizer shards exactly like the params it tracks).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    count: jax.Array          # ()
+    mu: Any                   # f32 pytree like params
+    nu: Any                   # f32 pytree like params
+
+
+def warmup_cosine(base_lr: float, warmup: int, total: int,
+                  min_frac: float = 0.1) -> Callable:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: Callable | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+
+    def _lr(self, step):
+        if callable(self.learning_rate):
+            return self.learning_rate(step)
+        return jnp.asarray(self.learning_rate, jnp.float32)
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(count=jnp.zeros((), jnp.int32),
+                          mu=jax.tree.map(zeros, params),
+                          nu=jax.tree.map(zeros, params))
+
+    def update(self, grads, state: AdamWState, params):
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if self.clip_norm is not None:
+            gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                                 for g in jax.tree.leaves(grads)))
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        else:
+            gnorm = jnp.zeros((), jnp.float32)
+        count = state.count + 1
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g,
+                          state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                          state.nu, grads)
+        c = count.astype(jnp.float32)
+        bc1 = 1 - b1 ** c
+        bc2 = 1 - b2 ** c
+        lr = self._lr(count)
+
+        def upd(m, v, p):
+            step = (m / bc1) / (jnp.sqrt(v / bc2) + self.eps)
+            if self.weight_decay:
+                step = step + self.weight_decay * p.astype(jnp.float32)
+            return (-lr * step).astype(p.dtype)
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, AdamWState(count=count, mu=mu, nu=nu), gnorm
+
+    @staticmethod
+    def apply_updates(params, updates):
+        return jax.tree.map(lambda p, u: p + u, params, updates)

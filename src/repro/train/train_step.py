@@ -1,0 +1,102 @@
+"""Training / serving step builders (the functions the launcher jits).
+
+Microbatch gradient accumulation: the global batch is split along its
+leading dim and grads accumulate in f32 over a ``lax.scan`` — combined
+with per-microbatch reduce-scatter this is the standard
+compute/communication overlap lever (hillclimbed in EXPERIMENTS.md
+§Perf).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.model import Model
+from ..optim.adamw import AdamW, AdamWState
+
+
+def make_train_step(model: Model, optimizer: AdamW, *,
+                    remat: str = "full", microbatches: int = 1,
+                    chunk_q: int = 512, ssm_chunk: int = 256,
+                    scan_unroll: bool = False, unroll_chunks: bool = False,
+                    shard_ctx=None, causal_skip: bool = False,
+                    grad_shardings=None, grad_transform=None):
+    """Returns train_step(params, opt_state, batch) ->
+    (params, opt_state, metrics).  grad_transform (optional): e.g. the
+    int8 compression wrapper from optim/compression.py."""
+
+    def loss_fn(params, batch):
+        return model.loss_fn(params, batch, remat=remat, chunk_q=chunk_q,
+                             ssm_chunk=ssm_chunk, scan_unroll=scan_unroll,
+                             unroll_chunks=unroll_chunks,
+                             shard_ctx=shard_ctx, causal_skip=causal_skip)
+
+    def compute_grads(params, batch):
+        if microbatches == 1:
+            (loss, aux), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            return loss, aux, grads
+
+        def resh(x):
+            return x.reshape((microbatches, x.shape[0] // microbatches)
+                             + x.shape[1:])
+        mb = jax.tree.map(resh, batch)
+
+        def body(carry, mbatch):
+            acc, loss_acc = carry
+            (loss, aux), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mbatch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+            acc = jax.tree.map(jnp.add, acc, grads)
+            return (acc, loss_acc + loss), aux
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)
+        (gsum, loss_sum), aux = jax.lax.scan(body, (zeros, 0.0), mb,
+                                             unroll=scan_unroll)
+        grads = jax.tree.map(lambda g: g / microbatches, gsum)
+        last_aux = jax.tree.map(lambda a: a[-1], aux)
+        return loss_sum / microbatches, last_aux, grads
+
+    def train_step(params, opt_state: AdamWState, batch):
+        loss, aux, grads = compute_grads(params, batch)
+        if grad_shardings is not None:
+            # pin each grad to its param's sharding BEFORE the optimizer:
+            # GSPMD then reduce-scatters partial grads to the FSDP shard
+            # instead of all-reducing the full layer gradient (16x bytes)
+            grads = jax.tree.map(jax.lax.with_sharding_constraint, grads,
+                                 grad_shardings)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        updates, opt_state, gnorm = optimizer.update(grads, opt_state,
+                                                     params)
+        params = AdamW.apply_updates(params, updates)
+        metrics = {"loss": loss.astype(jnp.float32),
+                   "grad_norm": gnorm,
+                   "nll": aux["nll"].astype(jnp.float32)}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_serve_step(model: Model, *, scan_unroll: bool = False,
+                    shard_ctx=None):
+    """decode serve_step(params, token, caches, pos) ->
+    (logits, new caches) — one new token against a seq_len cache."""
+
+    def serve_step(params, token, caches, pos):
+        return model.decode_step(params, token, caches, pos,
+                                 scan_unroll=scan_unroll,
+                                 shard_ctx=shard_ctx)
+
+    return serve_step
+
+
+def make_prefill_step(model: Model, cache_len: int, **fwd_opts):
+    def prefill_step(params, tokens, image_embeds=None):
+        return model.prefill(params, tokens, cache_len,
+                             image_embeds=image_embeds, **fwd_opts)
+    return prefill_step

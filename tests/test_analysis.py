@@ -1,0 +1,86 @@
+"""Roofline math + analytic memory model sanity."""
+import numpy as np
+import pytest
+
+from repro.analysis import memmodel
+from repro.analysis.roofline import (RooflineTerms, analyze,
+                                     model_flops_for_cell,
+                                     parse_collective_bytes)
+from repro.configs import SHAPES, get_config
+
+
+def test_roofline_terms_and_bottleneck():
+    t = RooflineTerms(flops=197e12 * 256, hbm_bytes=0.0,
+                      collective_bytes=0.0, chips=256,
+                      model_flops=197e12 * 128).finalize()
+    assert t.compute_s == pytest.approx(1.0)
+    assert t.bottleneck == "compute"
+    assert t.useful_flops_ratio == pytest.approx(0.5)
+    assert t.roofline_fraction == pytest.approx(0.5)
+
+
+def test_analyze_scales_per_chip_to_fleet():
+    t = analyze({"flops": 1e12, "bytes accessed": 1e9},
+                {"all-reduce": 1e8}, chips=4, model_flops=2e12)
+    assert t.flops == 4e12
+    assert t.collective_bytes == 4e8
+
+
+def test_model_flops_train_vs_decode():
+    cfg = get_config("mixtral-8x7b")
+    tr = model_flops_for_cell(cfg, SHAPES["train_4k"])
+    de = model_flops_for_cell(cfg, SHAPES["decode_32k"])
+    n_act = cfg.active_param_count()
+    assert tr == pytest.approx(6 * n_act * 4096 * 256)
+    assert de == pytest.approx(2 * n_act * 128)
+    # MoE: active < total
+    assert cfg.active_param_count() < cfg.param_count()
+
+
+def test_parse_collectives_ignores_done_and_halves_start():
+    hlo = """
+  %a = f32[100]{0} all-reduce(%x)
+  %b = (f32[100]{0}, f32[100]{0}) all-reduce-start(%y)
+  %c = f32[100]{0} all-reduce-done(%b)
+"""
+    got = parse_collective_bytes(hlo)
+    assert got["all-reduce"] == 400 + 400   # sync + half of start tuple
+
+
+def test_memmodel_decode_dominated_by_params():
+    cfg = get_config("llama3-405b")
+    tr = memmodel.hbm_traffic(cfg, SHAPES["decode_32k"], multi_pod=False)
+    assert tr["params_read"] > 0.5 * sum(tr.values())
+    # decode params_read ~= active params * 2 bytes / TP
+    assert tr["params_read"] == pytest.approx(
+        cfg.active_param_count() * 2 / 16)
+
+
+def test_memmodel_train_scales_with_batch():
+    cfg = get_config("qwen3-14b")
+    t1 = memmodel.memory_seconds(cfg, SHAPES["train_4k"], multi_pod=False)
+    t2 = memmodel.memory_seconds(cfg, SHAPES["train_4k"], multi_pod=True)
+    # doubling chips at fixed global batch: per-chip activations halve,
+    # param traffic constant -> per-chip time strictly decreases
+    assert t2 < t1
+
+
+def test_memmodel_swa_cheaper_than_full_kv():
+    mix = get_config("mixtral-8x7b")
+    tr = memmodel.hbm_traffic(mix, SHAPES["decode_32k"], multi_pod=False)
+    # ring buffer: KV cache traffic bounded by window, not seq_len
+    full_kv_like = (32 * 128 / 16) * 32768 * (8 / 16 if False else 1)
+    assert tr["kv_cache"] < tr["params_read"]
+
+
+def test_param_counts_match_live_init():
+    """Analytic param_count (used for 6ND) must track the real tree."""
+    import jax
+    from repro.configs import reduced
+    from repro.models.model import Model
+    for name in ("qwen2.5-32b", "mixtral-8x7b", "rwkv6-1.6b",
+                 "jamba-1.5-large-398b"):
+        cfg = reduced(get_config(name))
+        params = Model(cfg).init(jax.random.PRNGKey(0))
+        real = sum(x.size for x in jax.tree.leaves(params))
+        assert abs(real - cfg.param_count()) / real < 0.02, name

@@ -1,0 +1,150 @@
+"""Per-architecture smoke tests (reduced configs, CPU): one forward +
+one train step asserting output shapes and no NaNs, plus train/prefill/
+decode consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, all_arch_names, cell_supported, \
+    get_config, reduced
+from repro.models import Model, transformer
+from repro.optim.adamw import AdamW
+from repro.train.train_step import make_train_step
+
+ARCHS = all_arch_names()
+
+
+def _batch(cfg, B=2, S=16, seed=0):
+    rng = np.random.default_rng(seed)
+    tok = rng.integers(2, cfg.vocab_size, size=(B, S + 1)).astype(np.int32)
+    batch = {"tokens": jnp.asarray(tok[:, :-1]),
+             "labels": jnp.asarray(tok[:, 1:])}
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jnp.asarray(
+            rng.standard_normal((B, cfg.num_image_tokens, cfg.d_model))
+            * 0.02, jnp.dtype(cfg.dtype))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_shapes_no_nans(arch):
+    cfg = reduced(get_config(arch))
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    logits, aux = transformer.forward_train(
+        cfg, params, batch["tokens"],
+        image_embeds=batch.get("image_embeds"), remat="none")
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    cfg = reduced(get_config(arch))
+    model = Model(cfg)
+    opt = AdamW(learning_rate=1e-3)
+    step = make_train_step(model, opt, remat="full", chunk_q=8)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = opt.init(params)
+    batch = _batch(cfg)
+    params2, opt_state2, metrics = jax.jit(step)(params, opt_state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params must actually change
+    delta = sum(float(jnp.sum(jnp.abs(a.astype(jnp.float32)
+                                      - b.astype(jnp.float32))))
+                for a, b in zip(jax.tree.leaves(params),
+                                jax.tree.leaves(params2)))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_consistency(arch):
+    """prefill(S) + decode(S) must reproduce forward_train logits."""
+    cfg = reduced(get_config(arch))
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    B, S = 2, 8
+    rng = np.random.default_rng(2)
+    toks = jnp.asarray(rng.integers(2, cfg.vocab_size, size=(B, S + 1)),
+                       jnp.int32)
+    img = None
+    if cfg.family == "vlm":
+        img = jnp.asarray(rng.standard_normal(
+            (B, cfg.num_image_tokens, cfg.d_model)) * 0.02, jnp.float32)
+    full, _ = transformer.forward_train(cfg, params, toks,
+                                        image_embeds=img, remat="none")
+    pre, caches = model.prefill(params, toks[:, :S], cache_len=S + 4,
+                                image_embeds=img)
+    np.testing.assert_allclose(np.asarray(pre), np.asarray(full[:, :S]),
+                               rtol=2e-3, atol=2e-3)
+    dec, _ = model.decode_step(params, toks[:, S:S + 1], caches,
+                               jnp.int32(S))
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full[:, S:S + 1]),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_remat_invariance(arch):
+    """Checkpointing must not change the math."""
+    cfg = reduced(get_config(arch))
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(3))
+    batch = _batch(cfg, seed=3)
+    l1, _ = model.loss_fn(params, batch, remat="none")
+    l2, _ = model.loss_fn(params, batch, remat="full")
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_scan_unroll_invariance(arch):
+    """The dry-run cost probes rely on unroll == loop math identity."""
+    cfg = reduced(get_config(arch))
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(4))
+    batch = _batch(cfg, seed=4)
+    l1, _ = model.loss_fn(params, batch, remat="none")
+    l2, _ = model.loss_fn(params, batch, remat="none", scan_unroll=True,
+                          unroll_chunks=True, ssm_chunk=16, chunk_q=16)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+
+
+def test_sliding_window_masks_old_positions():
+    cfg = reduced(get_config("mixtral-8x7b"))
+    assert cfg.sliding_window == 8
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(5))
+    rng = np.random.default_rng(5)
+    S = 24
+    t1 = rng.integers(2, cfg.vocab_size, size=(1, S)).astype(np.int32)
+    t2 = t1.copy()
+    t2[0, :4] = rng.integers(2, cfg.vocab_size, size=4)  # outside window
+    l1, _ = transformer.forward_train(cfg, params, jnp.asarray(t1),
+                                      remat="none")
+    l2, _ = transformer.forward_train(cfg, params, jnp.asarray(t2),
+                                      remat="none")
+    # within one layer the last position can only see the window; with
+    # 2 layers receptive field doubles -> check the very last position
+    # of a 1-layer slice is insensitive: use logits at position S-1 of
+    # layer-limited model? (full model: receptive field 2*window >= 16
+    # still < 24-4... last position must be unaffected)
+    np.testing.assert_allclose(np.asarray(l1[0, -1]), np.asarray(l2[0, -1]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_moe_router_gradients_flow():
+    cfg = reduced(get_config("mixtral-8x7b"))
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(6))
+    batch = _batch(cfg, seed=6)
+
+    def loss(p):
+        return model.loss_fn(p, batch, remat="none")[0]
+
+    g = jax.grad(loss)(params)
+    router_g = [np.asarray(x, np.float32) for path, x in
+                jax.tree_util.tree_flatten_with_path(g)[0]
+                if "router" in str(path[-2:])]
+    assert router_g and any(np.abs(x).sum() > 0 for x in router_g)

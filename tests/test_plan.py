@@ -1,0 +1,110 @@
+"""Property-based tests (hypothesis) for the JIT planner invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import build_plan, partition_rows_for_chips, random_csr
+from repro.core.ccm import (ccm_register_decomposition, plan_d_tiles,
+                            x86_instruction_estimate)
+from repro.core.jit_cache import JitCache
+from repro.core.plan import STRATEGIES
+
+
+@st.composite
+def csr_cases(draw):
+    m = draw(st.integers(1, 60))
+    n = draw(st.integers(1, 60))
+    density = draw(st.floats(0.0, 0.5))
+    family = draw(st.sampled_from(("uniform", "powerlaw", "banded")))
+    seed = draw(st.integers(0, 10_000))
+    return random_csr(m, n, density=density, family=family, seed=seed)
+
+
+@settings(max_examples=40, deadline=None)
+@given(a=csr_cases(), d=st.integers(1, 300),
+       strategy=st.sampled_from(STRATEGIES))
+def test_plan_covers_every_row_exactly_once(a, d, strategy):
+    plan = build_plan(a.row_ptr, a.col_indices, a.shape, d,
+                      strategy=strategy)
+    all_rows = np.concatenate([s.row_ids for s in plan.segments]) \
+        if plan.segments else np.array([], np.int64)
+    assert sorted(all_rows.tolist()) == list(range(a.m))
+
+
+@settings(max_examples=40, deadline=None)
+@given(a=csr_cases(), d=st.integers(1, 300),
+       strategy=st.sampled_from(STRATEGIES))
+def test_plan_gather_indices_reconstruct_structure(a, d, strategy):
+    plan = build_plan(a.row_ptr, a.col_indices, a.shape, d,
+                      strategy=strategy)
+    nnz_seen = 0
+    for seg in plan.segments:
+        valid = seg.gather_idx < a.nnz
+        nnz_seen += int(valid.sum())
+        # each valid slot's column must match the CSR structure
+        got_cols = seg.cols_pad[valid]
+        want_cols = a.col_indices[seg.gather_idx[valid]]
+        assert np.array_equal(got_cols, want_cols)
+        # padding slots point at the zero sentinel and column 0
+        assert np.all(seg.cols_pad[~valid] == 0)
+    assert nnz_seen == a.nnz
+
+
+@settings(max_examples=40, deadline=None)
+@given(a=csr_cases(), d=st.integers(1, 300))
+def test_nnz_split_never_less_efficient_than_row_split(a, d):
+    """The whole point of nnz_split bucketing: padding efficiency >=
+    row_split's on every instance (equal when rows are uniform)."""
+    p_row = build_plan(a.row_ptr, a.col_indices, a.shape, d,
+                       strategy="row_split")
+    p_nnz = build_plan(a.row_ptr, a.col_indices, a.shape, d,
+                       strategy="nnz_split")
+    assert p_nnz.efficiency >= p_row.efficiency - 1e-9
+
+
+@settings(max_examples=60, deadline=None)
+@given(d=st.integers(1, 4096))
+def test_ccm_register_decomposition_exact(d):
+    tiles = ccm_register_decomposition(d)
+    assert sum(w for _, w in tiles) == d
+    # greedy: never more than needed of any class below the largest
+    widths = [w for _, w in tiles]
+    assert widths == sorted(widths, reverse=True)
+
+
+@settings(max_examples=60, deadline=None)
+@given(d=st.integers(1, 8192))
+def test_lane_tiling_covers_d(d):
+    t = plan_d_tiles(d)
+    assert t.d_pad >= d
+    assert t.d_pad % t.dt == 0
+    assert t.dt % 128 == 0
+    assert (t.num_tiles - 1) * t.dt < d <= t.num_tiles * t.dt
+    assert 0 < t.mask_width <= t.dt
+
+
+@settings(max_examples=30, deadline=None)
+@given(a=csr_cases(), chips=st.integers(1, 64),
+       strategy=st.sampled_from(STRATEGIES))
+def test_chip_partition_monotone_and_complete(a, chips, strategy):
+    bounds = partition_rows_for_chips(a.row_ptr, chips, strategy)
+    assert bounds[0] == 0 and bounds[-1] == a.m
+    assert np.all(np.diff(bounds) >= 0)
+
+
+def test_jit_cache_hit_semantics():
+    cache = JitCache()
+    calls = []
+    v1 = cache.get_or_build(("k", 1), lambda: calls.append(1) or "a")
+    v2 = cache.get_or_build(("k", 1), lambda: calls.append(2) or "b")
+    assert v1 == v2 == "a" and calls == [1]
+    assert cache.hits == 1 and cache.misses == 1
+
+
+def test_x86_instruction_model_d45():
+    """Paper §IV-D: d=45 -> ZMM+ZMM+YMM+XMM+scalar (5 tiles)."""
+    tiles = ccm_register_decomposition(45)
+    assert tiles == [("zmm", 16), ("zmm", 16), ("ymm", 8), ("xmm", 4),
+                     ("scalar", 1)]
+    est = x86_instruction_estimate(45, nnz=1000, m=10)
+    assert est["tiles"] == 5

@@ -1,0 +1,229 @@
+"""Regenerate the §Dry-run and §Roofline sections of EXPERIMENTS.md from
+artifacts/dryrun/*.json.  §Perf is maintained by hand (the hypothesis ->
+change -> measure log) and preserved across regenerations.
+
+  PYTHONPATH=src:. python tools/make_experiments.py
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+from benchmarks.bench_roofline import cell_summary  # noqa: E402
+from repro.analysis import memmodel                  # noqa: E402
+from repro.configs import SHAPES, get_config         # noqa: E402
+
+ART = Path("artifacts/dryrun")
+OUT = Path("EXPERIMENTS.md")
+PERF_MARK = "## §Perf"
+
+
+def fmt_bytes(b):
+    for unit in ("B", "KB", "MB", "GB", "TB", "PB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}EB"
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def load(tag=""):
+    recs = []
+    for f in sorted(ART.glob("*.json")):
+        r = json.loads(f.read_text())
+        if r.get("tag", "") == tag:
+            recs.append(r)
+    return recs
+
+
+def load_all_tagged():
+    recs = []
+    for f in sorted(ART.glob("*.json")):
+        r = json.loads(f.read_text())
+        if r.get("tag"):
+            recs.append(r)
+    return recs
+
+
+def perf_table():
+    """Baseline vs tagged-variant comparison for every hillclimbed cell."""
+    base = {(r["arch"], r["shape"], r["mesh"]): r for r in load("")}
+    lines = [
+        "### Variant measurements (baseline vs optimized, per-chip terms)",
+        "",
+        "| cell | variant | compute | collective | memory(model) | lower-bound | roofline_frac | Δ bound |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load_all_tagged():
+        key = (r["arch"], r["shape"], r["mesh"])
+        if r["status"] != "ok" or key not in base or \
+                base[key]["status"] != "ok":
+            continue
+        b = cell_summary(base[key])
+        v = cell_summary(r)
+        for label, srec in (("baseline", b), (r["tag"], v)):
+            lines.append(
+                f"| {key[0]}.{key[1]}.{key[2]} | {label} "
+                f"| {fmt_s(srec['compute_s'])} "
+                f"| {fmt_s(srec['collective_s'])} "
+                f"| {fmt_s(srec['memory_s'])} "
+                f"| {fmt_s(srec['step_lower_bound_s'])} "
+                f"| {srec['roofline_fraction']:.4f} "
+                f"| {b['step_lower_bound_s']/srec['step_lower_bound_s']:.2f}x |")
+    lines.append("")
+    return lines
+
+
+def dryrun_section(recs):
+    lines = [
+        "## §Dry-run",
+        "",
+        "Every (architecture x input-shape) cell lowered **and compiled**",
+        "for the single-pod 16x16 (256-chip) and multi-pod 2x16x16",
+        "(512-chip) production meshes on 512 placeholder host devices.",
+        "`train_*` cells lower the full `train_step` (fwd+bwd+AdamW,",
+        "remat=full, FSDP+TP sharded, donated buffers); `decode_*`/",
+        "`long_*` lower `serve_step` (1 token vs a seq_len KV/state",
+        "cache); `prefill_*` lowers the cache-building forward.",
+        "",
+        "| arch | shape | mesh | status | compile | args/device | temps/device* | collectives (ag/ar/rs/aa/cp) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    n_ok = n_skip = n_err = 0
+    for r in recs:
+        cell = f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+        if r["status"] == "skip":
+            n_skip += 1
+            lines.append(cell + f"| SKIP | — | — | — | {r['reason'][:58]} |")
+            continue
+        if r["status"] != "ok":
+            n_err += 1
+            lines.append(cell + f"| **ERROR** | — | — | — | "
+                         f"{r.get('error','')[:58]} |")
+            continue
+        n_ok += 1
+        ma = r.get("memory_analysis", {})
+        args = fmt_bytes(ma.get("argument_size_in_bytes", 0))
+        temps = fmt_bytes(ma.get("temp_size_in_bytes", 0))
+        cc = r.get("hlo_collective_counts", {})
+        cstr = "/".join(str(cc.get(k, 0)) for k in
+                        ("all-gather", "all-reduce", "reduce-scatter",
+                         "all-to-all", "collective-permute"))
+        lines.append(cell + f"| ok | {r['compile_s']}s | {args} | {temps} "
+                     f"| {cstr} |")
+    lines += [
+        "",
+        f"**{n_ok} compiled, {n_skip} documented skips, {n_err} errors.**",
+        "Skips are the `long_500k` cells of pure full-attention archs",
+        "(sub-quadratic attention required; DESIGN.md §9).",
+        "",
+        "\\* `memory_analysis()` on the CPU backend reports the",
+        "per-participant program buffer sizes; argument bytes are the",
+        "donated param+opt shards per device.",
+        "",
+    ]
+    return lines
+
+
+def roofline_section(recs):
+    lines = [
+        "## §Roofline",
+        "",
+        "Terms per chip per step (TPU v5e: 197 TFLOP/s bf16, 819 GB/s",
+        "HBM, 50 GB/s/link ICI):",
+        "",
+        "- **compute** = HLO_FLOPs / (chips x peak) — from probe-",
+        "  extrapolated `cost_analysis` (exact per-period deltas from",
+        "  unrolled 1/2-period compiles; XLA ignores loop trip counts);",
+        "- **memory** = analytic HBM traffic / (chips x HBM bw)",
+        "  (`analysis/memmodel.py`: params+opt+activation boundaries+KV/",
+        "  state/MoE buffers; XLA's unfused 'bytes accessed' kept as an",
+        "  upper bound, not the term);",
+        "- **collective** = collective bytes / (chips x link bw), parsed",
+        "  from the partitioned HLO of the probes (result-shape bytes of",
+        "  all-gather/all-reduce/reduce-scatter/all-to-all/",
+        "  collective-permute), extrapolated per period.",
+        "",
+        "MODEL_FLOPS = 6·N_active·D for train, 2·N_active·D for",
+        "prefill/decode (forward-only).  `useful` = MODEL_FLOPS /",
+        "HLO_FLOPs (remat recompute + attention + padding show up here).",
+        "`roofline_frac` = ideal-MODEL_FLOPS-time / max(term) — the",
+        "fraction of roofline the step achieves; the score.",
+        "",
+        "| arch | shape | mesh | compute | memory | collective | bottleneck | useful | roofline_frac | what would move the dominant term |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    hints = {
+        ("train", "memory"): "fewer activation boundaries: fuse periods /"
+                             " wider remat blocks",
+        ("train", "compute"): "cut remat recompute (dots-only policy) or"
+                              " pad-free MoE capacity",
+        ("train", "collective"): "reduce-scatter grads + overlap via"
+                                 " microbatching; int8 compression",
+        ("prefill", "memory"): "larger q-chunks (fewer KV re-reads)",
+        ("prefill", "collective"): "shard KV heads not seq; defer logits"
+                                   " all-gather",
+        ("prefill", "compute"): "causal-aware attention (skip masked"
+                                " blocks)",
+        ("decode", "memory"): "params dominate: int8/fp8 weights or"
+                              " larger serve batch",
+        ("decode", "collective"): "batch decode steps; keep logits"
+                                  " sharded; avoid re-gather of params",
+        ("decode", "compute"): "decode is bandwidth-bound by design",
+    }
+    for r in recs:
+        if r["status"] != "ok":
+            continue
+        s = cell_summary(r)
+        kind = SHAPES[r["shape"]].kind
+        hint = hints.get((kind, s["bottleneck"]), "")
+        lines.append(
+            f"| {s['arch']} | {s['shape']} | {s['mesh']} "
+            f"| {fmt_s(s['compute_s'])} | {fmt_s(s['memory_s'])} "
+            f"| {fmt_s(s['collective_s'])} | {s['bottleneck']} "
+            f"| {s['useful_flops_ratio']:.3f} "
+            f"| {s['roofline_fraction']:.4f} | {hint} |")
+    lines += [""]
+    return lines
+
+
+def main():
+    recs = load()
+    doc = [
+        "# EXPERIMENTS",
+        "",
+        "Reproduction artifacts for JITSPMM-on-TPU.  Paper-table",
+        "benchmarks: `python -m benchmarks.run` (see bench_output.txt).",
+        "Dry-run artifacts: `artifacts/dryrun/*.json` (regenerate with",
+        "`python -m repro.launch.dryrun --mesh both --out",
+        "artifacts/dryrun`).  This file's §Dry-run/§Roofline tables are",
+        "generated by `tools/make_experiments.py`; §Perf is the",
+        "hand-maintained hypothesis→change→measure log.",
+        "",
+    ]
+    doc += dryrun_section(recs)
+    doc += roofline_section(recs)
+    perf_tail = ""
+    if OUT.exists() and PERF_MARK in OUT.read_text():
+        perf_tail = OUT.read_text().split(PERF_MARK, 1)[1]
+        doc.append(PERF_MARK + perf_tail)
+        doc += perf_table()
+    else:
+        doc += [PERF_MARK, "", "(hillclimb iterations appended here)", ""]
+    OUT.write_text("\n".join(doc))
+    print(f"wrote {OUT} with {len(recs)} cells")
+
+
+if __name__ == "__main__":
+    main()
