@@ -5,6 +5,12 @@ Reported per cell: wall time, plan padding efficiency (the balance
 metric the strategies compete on), and speedup vs the AOT dense
 baseline.  The skewed (powerlaw) family is where nnz/merge-split beat
 row-split — the paper's motivating case.
+
+A second sweep times the fused pallas_ell hot path (interpret mode, so
+a smaller matrix) and reports the Table IV dispatch invariant: one
+pallas_call per instance, whatever the plan's segment count — the
+single-segment row_split cell is the no-regression baseline the fused
+refactor is held to.
 """
 from __future__ import annotations
 
@@ -14,6 +20,7 @@ import numpy as np
 
 from repro.core import build_plan, compile_spmm, random_csr
 from repro.core.jit_cache import JitCache
+from repro.kernels import ops
 
 from .common import csv_row, time_fn
 
@@ -39,4 +46,20 @@ def run() -> list:
                     f"efficiency={plan.efficiency:.3f};"
                     f"segments={len(plan.segments)};"
                     f"speedup_vs_dense={us_dense/us:.2f}x"))
+
+    # fused pallas_ell dispatch sweep (interpret mode => small instance)
+    a = random_csr(256, 256, density=0.03, family="powerlaw", seed=7)
+    x = jnp.asarray(rng.standard_normal((256, 16)), jnp.float32)
+    vals = jnp.asarray(a.vals)
+    for strategy in ("row_split", "nnz_split", "merge_split"):
+        c = compile_spmm(a, 16, strategy=strategy, backend="pallas_ell",
+                         interpret=True, cache=JitCache())
+        ops.reset_dispatch_counts()
+        us = time_fn(c, vals, x, warmup=1, iters=3)
+        calls = 1 + 3  # warmup + iters
+        rows.append(csv_row(
+            f"fused_ell_{strategy}_m256_d16", us,
+            f"segments={len(c.plan.segments)};"
+            f"launches_per_call="
+            f"{ops.DISPATCH_COUNTS['ell_fused'] / calls:.0f}"))
     return rows

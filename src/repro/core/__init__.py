@@ -1,7 +1,8 @@
 # The paper's primary contribution: JIT-specialized SpMM for TPU.
 from .csr import BCSRMatrix, CSRMatrix, random_csr
 from .ccm import ccm_register_decomposition, plan_d_tiles, DTiling
-from .plan import SpmmPlan, build_plan, partition_rows_for_chips, STRATEGIES
+from .plan import (SpmmPlan, FusedEllWorkspace, build_fused_workspace,
+                   build_plan, partition_rows_for_chips, STRATEGIES)
 from .jit_cache import GLOBAL_CACHE, JitCache, clear_global_cache
 from .spmm import CompiledSpmm, compile_spmm, spmm, BACKENDS
 from . import moe_spmm
@@ -9,7 +10,8 @@ from . import moe_spmm
 __all__ = [
     "BCSRMatrix", "CSRMatrix", "random_csr",
     "ccm_register_decomposition", "plan_d_tiles", "DTiling",
-    "SpmmPlan", "build_plan", "partition_rows_for_chips", "STRATEGIES",
+    "SpmmPlan", "FusedEllWorkspace", "build_fused_workspace",
+    "build_plan", "partition_rows_for_chips", "STRATEGIES",
     "GLOBAL_CACHE", "JitCache", "clear_global_cache",
     "CompiledSpmm", "compile_spmm", "spmm", "BACKENDS",
     "moe_spmm",

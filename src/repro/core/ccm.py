@@ -104,6 +104,19 @@ def plan_d_tiles(d: int, *, rows_in_flight: int = 1, bytes_per_el: int = 4,
                    mask_width=rem if rem > 0 else dt)
 
 
+def kernel_lane_tile(d_pad: int, max_dt: int = 512) -> int:
+    """Lane-tile width a kernel uses for an already-padded d_pad: the
+    widest power-of-two-halving of max_dt that divides d_pad.  Agrees
+    with ``plan_d_tiles`` on planner-padded inputs (d_pad is a multiple
+    of dt there by construction) and degrades gracefully on direct
+    kernel calls with unplanned widths.  One definition, shared by the
+    Pallas kernels, so a CCM tiling-policy change lands everywhere."""
+    dt = min(d_pad, max_dt)
+    while d_pad % dt:
+        dt //= 2
+    return dt
+
+
 def pad_cols(x, d_pad: int):
     """Pad the dense operand X (n, d) to (n, d_pad) — the masked
     remainder tile of DESIGN.md §7.3."""

@@ -4,15 +4,22 @@ The paper generates assembly once per SpMM instance and reuses it for
 subsequent calls; the generation cost is the "codegen overhead" of
 Table IV (≤0.02% of execution).  Here the generated artifact is a
 ``CompiledSpmm``: the plan (segments, tilings, gather maps) plus the
-segment constants already materialized as device arrays, closed over by
-a jit-compiled callable.  The cache key is everything the specialization
-depends on — structure fingerprint, d, dtype, strategy, backend — and
-explicitly NOT the values (same semantics as the paper's jit-function,
-which reloads values from memory on every call).
+fused-workspace constants already materialized as device arrays, closed
+over by a jit-compiled callable.  The cache key is everything the
+specialization depends on — structure fingerprint, d, dtype, strategy,
+backend, interpret — and explicitly NOT the values (same semantics as
+the paper's jit-function, which reloads values from memory on every
+call).
+
+``GLOBAL_CACHE`` sits on the serving path and is shared across request
+threads, so ``get_or_build`` is thread-safe with single-flight builds:
+concurrent requests for the same key block on one builder instead of
+racing N redundant (and expensive) plan+lower passes.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Any, Callable, Dict, Optional, Tuple
 
@@ -29,37 +36,72 @@ class CacheEntry:
 class JitCache:
     def __init__(self):
         self._entries: Dict[Key, CacheEntry] = {}
+        self._lock = threading.Lock()
+        self._inflight: Dict[Key, threading.Event] = {}
         self.misses = 0
         self.hits = 0
 
     def get_or_build(self, key: Key, builder: Callable[[], Any]) -> Any:
-        ent = self._entries.get(key)
-        if ent is not None:
-            ent.hits += 1
-            self.hits += 1
-            return ent.value
-        self.misses += 1
-        t0 = time.perf_counter()
-        value = builder()
-        self._entries[key] = CacheEntry(value, time.perf_counter() - t0)
-        return value
+        """Return the cached value for ``key``, building it at most once
+        even under concurrent callers (single-flight).  Waiters of a
+        successful build count as hits; if the builder raises, exactly
+        one waiter at a time retries."""
+        while True:
+            with self._lock:
+                ent = self._entries.get(key)
+                if ent is not None:
+                    ent.hits += 1
+                    self.hits += 1
+                    return ent.value
+                event = self._inflight.get(key)
+                if event is None:
+                    event = threading.Event()
+                    self._inflight[key] = event
+                    self.misses += 1
+                    we_build = True
+                else:
+                    we_build = False
+            if not we_build:
+                # builder in flight on another thread: wait, then re-check
+                # (re-loop handles the builder-raised case)
+                event.wait()
+                continue
+            t0 = time.perf_counter()
+            try:
+                value = builder()
+            except BaseException:
+                with self._lock:
+                    self._inflight.pop(key, None)
+                event.set()
+                raise
+            with self._lock:
+                self._entries[key] = CacheEntry(
+                    value, time.perf_counter() - t0)
+                self._inflight.pop(key, None)
+            event.set()
+            return value
 
     def build_seconds(self, key: Key) -> Optional[float]:
-        ent = self._entries.get(key)
-        return None if ent is None else ent.build_seconds
+        with self._lock:
+            ent = self._entries.get(key)
+            return None if ent is None else ent.build_seconds
 
     @property
     def total_build_seconds(self) -> float:
-        return sum(e.build_seconds for e in self._entries.values())
+        with self._lock:
+            return sum(e.build_seconds for e in self._entries.values())
 
     def stats(self) -> dict:
-        return {"entries": len(self._entries), "hits": self.hits,
-                "misses": self.misses,
-                "total_build_seconds": self.total_build_seconds}
+        with self._lock:
+            return {"entries": len(self._entries), "hits": self.hits,
+                    "misses": self.misses,
+                    "total_build_seconds": sum(
+                        e.build_seconds for e in self._entries.values())}
 
     def clear(self):
-        self._entries.clear()
-        self.hits = self.misses = 0
+        with self._lock:
+            self._entries.clear()
+            self.hits = self.misses = 0
 
 
 GLOBAL_CACHE = JitCache()

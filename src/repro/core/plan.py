@@ -211,6 +211,83 @@ def build_plan(row_ptr: np.ndarray, col_indices: np.ndarray, shape,
 
 
 # ---------------------------------------------------------------------------
+# Fused workspace: all segments packed into ONE flat ELL buffer with a
+# per-row-block descriptor table, so the whole plan lowers as a single
+# pallas_call (the paper's one-artifact-per-instance claim, Table IV)
+# instead of one dispatch per segment.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FusedEllWorkspace:
+    """Descriptor-table packing of an :class:`SpmmPlan`.
+
+    Every segment's ``(R_pad, L)`` ELL panel is flattened row-major and
+    concatenated into one slot array; each row-block of ``row_block``
+    rows gets a descriptor ``(blk_off, blk_L)`` locating its slots.  The
+    kernel reads the descriptor from SMEM (scalar prefetch) — the TPU
+    analogue of the paper baking per-instance bounds into the generated
+    code — so one static grid covers blocks with heterogeneous ``L``.
+
+    Workspace rows are ordered segment-by-segment (plan order), i.e. a
+    permutation (plus padding rows) of the output rows; ``inv_perm``
+    undoes it with a single gather: ``y = y_ws[inv_perm]``.
+    """
+    cols_flat: np.ndarray    # (S,) int32 — slot -> column of X
+    gather_flat: np.ndarray  # (S,) int64 — slot -> index in concat(vals,[0])
+    blk_off: np.ndarray      # (B,) int32 — first slot of each row-block
+    blk_L: np.ndarray        # (B,) int32 — padded nnz/row of each block
+    inv_perm: np.ndarray     # (m,) int32 — y[i] = y_ws[inv_perm[i]]
+    ws_rows: int             # total workspace rows == B * row_block
+    row_block: int
+
+    @property
+    def num_blocks(self) -> int:
+        return int(self.blk_off.shape[0])
+
+
+def build_fused_workspace(plan: SpmmPlan) -> FusedEllWorkspace:
+    bm = plan.row_block
+    cols_parts: List[np.ndarray] = []
+    gather_parts: List[np.ndarray] = []
+    offs: List[np.ndarray] = []
+    Ls: List[np.ndarray] = []
+    inv_perm = np.zeros(plan.m, dtype=np.int32)
+    ws_row = 0
+    slot = 0
+    for seg in plan.segments:
+        Lp = max(seg.L, 1)
+        assert seg.cols_pad.shape == (seg.R_pad, Lp)
+        cols_parts.append(seg.cols_pad.reshape(-1))
+        gather_parts.append(seg.gather_idx.reshape(-1))
+        nblk = seg.R_pad // bm
+        offs.append(slot + np.arange(nblk, dtype=np.int64) * (bm * Lp))
+        Ls.append(np.full(nblk, Lp, dtype=np.int32))
+        inv_perm[seg.row_ids] = ws_row + np.arange(seg.R, dtype=np.int32)
+        ws_row += seg.R_pad
+        slot += seg.R_pad * Lp
+
+    # slot indices travel as int32 (SMEM descriptors + cols_flat): the
+    # padded slot space must fit, or offsets would wrap silently
+    assert slot < (1 << 31), ("fused workspace exceeds int32 slot space; "
+                              "padded_nnz too large", slot)
+
+    def cat(parts, dtype):
+        return (np.concatenate(parts).astype(dtype) if parts
+                else np.zeros(0, dtype))
+
+    ws = FusedEllWorkspace(
+        cols_flat=cat(cols_parts, np.int32),
+        gather_flat=cat(gather_parts, np.int64),
+        blk_off=cat(offs, np.int32),
+        blk_L=cat(Ls, np.int32),
+        inv_perm=inv_perm,
+        ws_rows=ws_row,
+        row_block=bm)
+    assert ws.ws_rows == ws.num_blocks * bm
+    return ws
+
+
+# ---------------------------------------------------------------------------
 # Chip-level partitioning (multi-chip SpMM; DESIGN.md §7.6) — the same
 # three strategies applied at the shard_map level: returns row boundaries
 # (row-aligned) assigning each chip a contiguous row range.

@@ -6,8 +6,10 @@ jit cache) a ``CompiledSpmm`` — plan + device constants + differentiable
 callable.  ``spmm`` is the one-shot convenience wrapper.
 
 Backends:
-  pallas_ell   faithful CCM/VPU Pallas kernel (validated in interpret
-               mode on CPU; native on TPU)
+  pallas_ell   faithful CCM/VPU Pallas kernel, fused: the whole
+               multi-segment plan is ONE pallas_call via a descriptor
+               table + one inverse-permutation gather (validated in
+               interpret mode on CPU; native on TPU)
   pallas_bcsr  beyond-paper MXU block-sparse Pallas kernel
   ref          pure-jnp gather/segment-sum (jit-friendly; used inside
                the model stack and the 512-device dry-run)
@@ -26,7 +28,8 @@ import numpy as np
 from . import ccm
 from .csr import BCSRMatrix, CSRMatrix
 from .jit_cache import GLOBAL_CACHE, JitCache
-from .plan import SpmmPlan, build_plan
+from .plan import SpmmPlan, build_fused_workspace, build_plan
+from ..kernels.ops import resolve_interpret
 
 BACKENDS = ("pallas_ell", "pallas_bcsr", "ref", "dense", "auto")
 
@@ -38,12 +41,17 @@ def _resolve_backend(backend: str) -> str:
 
 
 @dataclasses.dataclass
-class _SegmentConsts:
-    cols_flat: jax.Array     # (R_pad*L,) int32
-    gather_idx: jax.Array    # (R_pad, L) int32/int64
-    row_ids: jax.Array       # (R,) int32
-    R: int
-    L: int
+class _FusedConsts:
+    """Device-resident fused-plan constants: ONE descriptor table + flat
+    slot arrays for all segments, so the forward pass is a single
+    pallas_call plus one inverse-permutation gather (no per-segment
+    dispatch loop, no scatters)."""
+    blk_off: jax.Array       # (B,) int32 — first slot per row-block
+    blk_L: jax.Array         # (B,) int32 — padded nnz/row per row-block
+    cols_flat: jax.Array     # (S,) int32 — slot -> X row
+    gather_flat: jax.Array   # (S,) int   — slot -> concat(vals,[0]) index
+    inv_perm: jax.Array      # (m,) int32 — output row -> workspace row
+    num_blocks: int
 
 
 class CompiledSpmm:
@@ -56,7 +64,9 @@ class CompiledSpmm:
         self.backend = _resolve_backend(backend)
         self.strategy = strategy
         self.bm = bm
-        self.interpret = interpret
+        # resolved ONCE: the effective flag is part of the compiled
+        # artifact's identity (and of every jit-cache key touching it)
+        self.interpret = resolve_interpret(interpret)
         self.cache = cache
         self.d = d
         self.shape = a.shape
@@ -71,13 +81,14 @@ class CompiledSpmm:
             row_block=bm, fingerprint=a.fingerprint)
 
         if self.backend == "pallas_ell":
-            self._segments = [
-                _SegmentConsts(
-                    cols_flat=jnp.asarray(s.cols_pad.reshape(-1)),
-                    gather_idx=jnp.asarray(s.gather_idx),
-                    row_ids=jnp.asarray(s.row_ids.astype(np.int32)),
-                    R=s.R, L=s.L)
-                for s in self.plan.segments]
+            ws = build_fused_workspace(self.plan)
+            self._fused = _FusedConsts(
+                blk_off=jnp.asarray(ws.blk_off),
+                blk_L=jnp.asarray(ws.blk_L),
+                cols_flat=jnp.asarray(ws.cols_flat),
+                gather_flat=jnp.asarray(ws.gather_flat),
+                inv_perm=jnp.asarray(ws.inv_perm),
+                num_blocks=ws.num_blocks)
         elif self.backend == "pallas_bcsr":
             bk = 8
             # 1-based nnz ids as block "values": 0 == empty slot.  Exact
@@ -108,14 +119,16 @@ class CompiledSpmm:
             self._bcsr_m_pad = bcsr.shape[0]
             self._bcsr_n_pad = bcsr.shape[1]
         elif self.backend == "ref":
-            self._rows = jnp.asarray(
-                np.repeat(np.arange(a.m), a.row_lengths).astype(np.int32))
             self._cols = jnp.asarray(a.col_indices)
-        # dense backend materializes on call
+
+        self._erows: Optional[jax.Array] = None
+        if self.backend in ("ref", "dense"):
+            # the row expansion is pure structure — precompute it so the
+            # serving path never repeats the host-side np.repeat
+            self._expanded_rows()
 
         self._transpose: Optional[CompiledSpmm] = None
         self._t_order: Optional[jax.Array] = None
-        self._grad_rows = None
 
         fwd = self._forward
 
@@ -135,6 +148,15 @@ class CompiledSpmm:
         _apply.defvjp(_apply_fwd, _apply_bwd)
         self._apply = _apply
 
+    def _expanded_rows(self) -> jax.Array:
+        """(nnz,) int32 row id per nonzero — shared by the ref/dense
+        forward paths and the sddmm gradient (built once, cached)."""
+        if self._erows is None:
+            self._erows = jnp.asarray(
+                np.repeat(np.arange(self.shape[0]),
+                          np.diff(self._row_ptr)).astype(np.int32))
+        return self._erows
+
     # -- forward -----------------------------------------------------------
     def _forward(self, vals, x):
         m, n = self.shape
@@ -143,26 +165,29 @@ class CompiledSpmm:
         backend = self.backend
         if backend == "dense":
             dense = jnp.zeros((m, n), vals.dtype)
-            rows = np.repeat(np.arange(m), np.diff(self._row_ptr))
-            dense = dense.at[rows, self._col_indices].set(vals)
+            dense = dense.at[self._expanded_rows(),
+                             self._col_indices].set(vals)
             return dense.astype(jnp.float32) @ x.astype(jnp.float32)
         if backend == "ref":
             prod = (vals[:, None].astype(jnp.float32)
                     * x[self._cols].astype(jnp.float32))
-            return jax.ops.segment_sum(prod, self._rows, num_segments=m)
+            return jax.ops.segment_sum(prod, self._expanded_rows(),
+                                       num_segments=m)
         vals_ext = jnp.concatenate(
             [vals.astype(jnp.float32), jnp.zeros((1,), jnp.float32)])
         x_pad = ccm.pad_cols(x, self.plan.d_tiling.d_pad)
         if backend == "pallas_ell":
-            from ..kernels.ops import spmm_ell_segment_op
-            y = jnp.zeros((m, self.plan.d_tiling.d_pad), jnp.float32)
-            for seg in self._segments:
-                vals_pad = vals_ext[seg.gather_idx]
-                y_seg = spmm_ell_segment_op(
-                    seg.cols_flat, vals_pad, x_pad, bm=self.bm,
-                    interpret=self.interpret)
-                y = y.at[seg.row_ids].set(y_seg[: seg.R])
-            return y[:, :d]
+            from ..kernels.ops import spmm_ell_fused_op
+            fw = self._fused
+            if fw.num_blocks == 0:
+                return jnp.zeros((m, d), jnp.float32)
+            # one dispatch for the whole plan, whatever the segment count
+            vals_flat = vals_ext[fw.gather_flat]
+            y_ws = spmm_ell_fused_op(
+                fw.blk_off, fw.blk_L, fw.cols_flat, vals_flat, x_pad,
+                bm=self.bm, interpret=self.interpret)
+            # single inverse-permutation gather replaces N scatters
+            return y_ws[fw.inv_perm, :d]
         if backend == "pallas_bcsr":
             from ..kernels.ops import spmm_bcsr_op
             block_vals = vals_ext[self._bcsr_slot]
@@ -176,12 +201,8 @@ class CompiledSpmm:
 
     # -- gradients ----------------------------------------------------------
     def _sddmm(self, dy, x):
-        if self._grad_rows is None:
-            self._grad_rows = jnp.asarray(
-                np.repeat(np.arange(self.shape[0]),
-                          np.diff(self._row_ptr)).astype(np.int32))
         cols = jnp.asarray(self._col_indices)
-        return jnp.sum(dy[self._grad_rows].astype(jnp.float32)
+        return jnp.sum(dy[self._expanded_rows()].astype(jnp.float32)
                        * x[cols].astype(jnp.float32), axis=-1)
 
     def _transpose_apply(self, vals, dy):
@@ -190,7 +211,7 @@ class CompiledSpmm:
                           np.zeros(self._nnz, np.float32))
             t_struct, order = a.transpose_structure()
             key = ("spmmT", self._fingerprint, self.d, self.strategy,
-                   self.backend, self.bm)
+                   self.backend, self.bm, self.interpret)
             self._transpose = self.cache.get_or_build(
                 key, lambda: CompiledSpmm(
                     t_struct, self.d, strategy=self.strategy,
@@ -209,7 +230,8 @@ def compile_spmm(a: CSRMatrix, d: int, *, strategy: str = "nnz_split",
                  interpret: Optional[bool] = None,
                  cache: JitCache = GLOBAL_CACHE) -> CompiledSpmm:
     backend = _resolve_backend(backend)
-    key = ("spmm", a.fingerprint, d, strategy, backend, bm)
+    interpret = resolve_interpret(interpret)
+    key = ("spmm", a.fingerprint, d, strategy, backend, bm, interpret)
     return cache.get_or_build(
         key, lambda: CompiledSpmm(a, d, strategy=strategy, backend=backend,
                                   bm=bm, interpret=interpret, cache=cache))

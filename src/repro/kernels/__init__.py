@@ -1,12 +1,16 @@
 # Pallas TPU kernels for the paper's compute hot-spots, each with a
 # pure-jnp oracle in ref.py (validated via interpret=True on CPU):
-#   spmm_csr  — faithful CCM/VPU port (paper Listing 2)
-#   spmm_bcsr — beyond-paper MXU block-sparse reformulation
-#   sddmm     — backward-pass twin (dA.vals = <dY[row], X[col]>)
+#   spmm_ell_fused — the serving hot path: one dispatch for the whole
+#                    multi-segment plan via a descriptor table
+#   spmm_csr       — faithful CCM/VPU port (paper Listing 2); retained
+#                    as the single-segment micro-oracle
+#   spmm_bcsr      — beyond-paper MXU block-sparse reformulation
+#   sddmm          — backward-pass twin (dA.vals = <dY[row], X[col]>)
 from . import ops, ref
 from .spmm_csr import spmm_ell_segment
+from .spmm_ell_fused import spmm_ell_fused
 from .spmm_bcsr import spmm_bcsr
 from .sddmm import sddmm, sddmm_csr
 
-__all__ = ["ops", "ref", "spmm_ell_segment", "spmm_bcsr", "sddmm",
-           "sddmm_csr"]
+__all__ = ["ops", "ref", "spmm_ell_segment", "spmm_ell_fused",
+           "spmm_bcsr", "sddmm", "sddmm_csr"]

@@ -3,30 +3,61 @@
 ``interpret`` defaults to True on CPU (this container) and False when a
 real TPU backend is present — the kernels themselves are written for the
 TPU target and only *validated* in interpret mode here.
+
+Every wrapper records a dispatch in ``DISPATCH_COUNTS`` (a plain host
+counter, incremented once per ``pallas_call`` issued from Python).  The
+fused-path tests use it to assert the Table IV invariant: one dispatch
+per (matrix, d) instance, regardless of segment count.
 """
 from __future__ import annotations
+
+import collections
 
 import jax
 
 from .spmm_csr import spmm_ell_segment
+from .spmm_ell_fused import spmm_ell_fused
 from .spmm_bcsr import spmm_bcsr
+
+# name -> number of pallas_call dispatches issued (host-side; jit tracing
+# reuses the compiled kernel but each op wrapper call is one dispatch)
+DISPATCH_COUNTS: "collections.Counter[str]" = collections.Counter()
+
+
+def reset_dispatch_counts() -> None:
+    DISPATCH_COUNTS.clear()
 
 
 def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def resolve_interpret(interpret=None) -> bool:
+    """The effective interpret flag — resolved ONCE so jit-cache keys and
+    kernel launches agree (a plan built for interpret=True must never be
+    served to an interpret=False caller, and vice versa)."""
+    return default_interpret() if interpret is None else bool(interpret)
+
+
 def spmm_ell_segment_op(cols_pad_flat, vals_pad, x, *, bm: int = 8,
                         interpret=None):
-    if interpret is None:
-        interpret = default_interpret()
+    interpret = resolve_interpret(interpret)
+    DISPATCH_COUNTS["ell_segment"] += 1
     return spmm_ell_segment(cols_pad_flat, vals_pad, x, bm=bm,
                             interpret=interpret)
 
 
+def spmm_ell_fused_op(blk_off, blk_L, cols_flat, vals_flat, x, *,
+                      bm: int = 8, interpret=None):
+    interpret = resolve_interpret(interpret)
+    DISPATCH_COUNTS["ell_fused"] += 1
+    return spmm_ell_fused(blk_off, blk_L, cols_flat, vals_flat, x,
+                          bm=bm, interpret=interpret)
+
+
 def spmm_bcsr_op(block_cols_pad, block_vals_pad, x, *, kmax: int,
                  interpret=None):
-    if interpret is None:
-        interpret = default_interpret()
+    interpret = resolve_interpret(interpret)
+    DISPATCH_COUNTS["bcsr"] += 1
     return spmm_bcsr(block_cols_pad, block_vals_pad, x, kmax=kmax,
                      interpret=interpret)

@@ -1,5 +1,12 @@
 """Faithful CCM SpMM kernel (VPU path) — paper Listing 2 on TPU.
 
+NOTE: this is the single-segment lowering.  The serving hot path is
+``spmm_ell_fused``, which runs every segment of a plan in one
+``pallas_call`` via a descriptor table; this kernel is retained as the
+per-segment micro-oracle (its static-``L`` specialization is the most
+literal transcription of the paper's generated loop) and for
+single-segment comparisons in the benchmarks.
+
 One Pallas program owns a block of ``bm`` rows of one ELL segment and one
 lane tile of the merged columns.  The correspondence to the paper's
 generated x86 (Listing 2):
@@ -67,12 +74,12 @@ def spmm_ell_segment(cols_pad_flat: jax.Array, vals_pad: jax.Array,
     vals_pad      : (R_pad, L) float   — zero on padding slots
     x             : (n, d_pad) float   — d already padded to the lane tile
     """
+    from ..core.ccm import kernel_lane_tile  # lazy: core imports kernels
+
     R_pad, L = vals_pad.shape
     n, d_pad = x.shape
     assert R_pad % bm == 0, (R_pad, bm)
-    dt = min(d_pad, 512)
-    while d_pad % dt:
-        dt //= 2
+    dt = kernel_lane_tile(d_pad)
     grid = (R_pad // bm, d_pad // dt)
 
     return pl.pallas_call(

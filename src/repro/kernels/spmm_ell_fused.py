@@ -1,0 +1,101 @@
+"""Fused multi-segment CCM SpMM kernel — the whole plan in ONE dispatch.
+
+The per-segment kernel (``spmm_csr.spmm_ell_segment``) pays one
+``pallas_call`` plus one output scatter per ELL segment, so a
+multi-bucket ``nnz_split`` plan multiplies launch overhead — exactly the
+"redundant instructions" failure mode JITSPMM's one-artifact-per-
+instance design (§IV-A, Table IV) eliminates.  Here the planner packs
+every segment into a single flat slot array and emits a per-row-block
+**descriptor table** (``blk_off``, ``blk_L``), and the whole plan runs
+as one ``pallas_call`` over a static ``(row-blocks, d-tiles)`` grid —
+the same one-kernel-many-rows shape GE-SpMM uses on GPU.
+
+Per grid step, the descriptor is read from SMEM (scalar prefetch): the
+block's slot offset and its segment's padded row length ``L``.  The nnz
+loop trip count is that structure-derived ``L`` — data-dependent
+branching is still gone (padding removed it at plan time); only the
+trip count varies per block, carried in the scalar register file like
+the paper's ``r10/r11`` row bounds.
+
+Operand staging (DESIGN.md §7.3/§7.5): X is a resident (n, dt) column
+panel and the gathered value slots are a resident flat VMEM buffer —
+the same whole-panel staging the per-segment kernel used; a production
+TPU lowering would double-buffer per-block slot panels via DMA.
+
+The kernel writes workspace rows (segment order, padded); the caller
+maps them back to output rows with ONE inverse-permutation gather
+instead of one scatter per segment.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(off_ref, L_ref, cols_ref, vals_ref, x_ref, y_ref, *,
+            bm: int, dt: int):
+    b = pl.program_id(0)
+    off = off_ref[b]                                 # first slot (SMEM)
+    L = L_ref[b]                                     # this block's nnz/row
+
+    def nnz_step(l, acc):
+        # bm independent gather+FMA chains (static unroll == ILP)
+        xs, vs = [], []
+        for rr in range(bm):
+            s = off + rr * L + l
+            k = cols_ref[s]                          # SMEM scalar read
+            xs.append(x_ref[pl.ds(k, 1), :])         # (1, dt) CCM row
+            vs.append(vals_ref[pl.ds(s, 1)])         # (1,) slot value
+        xg = jnp.concatenate(xs, axis=0)             # (bm, dt)
+        v = jnp.concatenate(vs, axis=0)              # (bm,)
+        return acc + v[:, None].astype(jnp.float32) * xg.astype(jnp.float32)
+
+    acc = jnp.zeros((bm, dt), dtype=jnp.float32)     # vxorps analogue
+    acc = jax.lax.fori_loop(0, L, nnz_step, acc)     # structure-bound trips
+    y_ref[...] = acc.astype(y_ref.dtype)             # one store per block
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def spmm_ell_fused(blk_off: jax.Array, blk_L: jax.Array,
+                   cols_flat: jax.Array, vals_flat: jax.Array,
+                   x: jax.Array, *, bm: int = 8,
+                   interpret: bool = True) -> jax.Array:
+    """Compute ALL plan segments: Y_ws (ws_rows, d_pad) = plan · X.
+
+    blk_off   : (B,) int32 — first slot of each row-block (descriptor)
+    blk_L     : (B,) int32 — padded nnz/row of each row-block
+    cols_flat : (S,) int32 — slot -> X row, scalar-prefetched structure
+    vals_flat : (S,) float — slot values, zero on padding slots
+    x         : (n, d_pad) float — d already padded to the lane tile
+
+    Returns workspace-ordered rows; the caller applies the plan's
+    ``inv_perm`` gather to recover output row order.
+    """
+    from ..core.ccm import kernel_lane_tile  # lazy: core imports kernels
+
+    num_blocks = blk_off.shape[0]
+    (S,) = vals_flat.shape
+    n, d_pad = x.shape
+    dt = kernel_lane_tile(d_pad)
+    grid = (num_blocks, d_pad // dt)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, bm=bm, dt=dt),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((S, ), lambda b, j, off, L, cols: (0,)),
+                pl.BlockSpec((n, dt), lambda b, j, off, L, cols: (0, j)),
+            ],
+            out_specs=pl.BlockSpec((bm, dt),
+                                   lambda b, j, off, L, cols: (b, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((num_blocks * bm, d_pad),
+                                       jnp.float32),
+        interpret=interpret,
+    )(blk_off, blk_L, cols_flat, vals_flat, x)

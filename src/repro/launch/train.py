@@ -66,11 +66,16 @@ def run_training(cfg, *, steps: int, global_batch: int, seq_len: int,
                      out_shardings=(p_shard, o_shard, metrics_shard),
                      donate_argnums=(0, 1))
 
-    # init or resume
+    # init or resume.  Init is compiled WITHOUT out_shardings and then
+    # distributed: partitioned compilation of the legacy (non-
+    # partitionable) threefry RNG draws different bits per mesh shape,
+    # so jit(init, out_shardings=...) would make the starting params a
+    # function of the device grid (observed: 2x4 vs 1x1 diverge from
+    # step 0).  device_put after the fact is sharding-transparent.
     start_step = 0
-    params = jax.jit(model.init, out_shardings=p_shard)(
-        jax.random.PRNGKey(seed))
-    opt_state = jax.jit(opt.init, out_shardings=o_shard)(params)
+    params = jax.device_put(
+        jax.jit(model.init)(jax.random.PRNGKey(seed)), p_shard)
+    opt_state = jax.device_put(jax.jit(opt.init)(params), o_shard)
     if ckpt_dir is not None and ckpt.latest_step(ckpt_dir) is not None:
         start_step = ckpt.latest_step(ckpt_dir)
         params = ckpt.restore_checkpoint(ckpt_dir, param_sds,

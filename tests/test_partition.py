@@ -1,0 +1,48 @@
+"""Deterministic coverage for ``partition_rows_for_chips`` — runs even
+without hypothesis (the property-based twin lives in test_plan.py)."""
+import numpy as np
+import pytest
+
+from repro.core import partition_rows_for_chips
+from repro.core.plan import STRATEGIES
+
+
+def _row_ptr(lengths):
+    return np.concatenate([[0], np.cumsum(lengths)]).astype(np.int64)
+
+
+CASES = {
+    "empty": _row_ptr([]),
+    "single_row": _row_ptr([5]),
+    "single_empty_row": _row_ptr([0]),
+    "uniform": _row_ptr([3] * 64),
+    "skewed_head": _row_ptr([1000] + [1] * 63),
+    "skewed_tail": _row_ptr([1] * 63 + [1000]),
+    "all_empty": _row_ptr([0] * 32),
+}
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+@pytest.mark.parametrize("name", sorted(CASES))
+@pytest.mark.parametrize("chips", [1, 2, 7, 64])
+def test_bounds_monotone_and_cover(strategy, name, chips):
+    row_ptr = CASES[name]
+    m = len(row_ptr) - 1
+    bounds = partition_rows_for_chips(row_ptr, chips, strategy)
+    assert bounds.shape == (chips + 1,)
+    assert bounds[0] == 0
+    assert bounds[-1] == m
+    assert np.all(np.diff(bounds) >= 0), (strategy, name, bounds)
+    assert np.all((bounds >= 0) & (bounds <= m))
+
+
+def test_unknown_strategy_raises():
+    with pytest.raises(ValueError):
+        partition_rows_for_chips(_row_ptr([1, 2]), 2, "bogus")
+
+
+def test_nnz_split_balances_skew():
+    # the giant head row must get (roughly) its own chip
+    row_ptr = CASES["skewed_head"]
+    bounds = partition_rows_for_chips(row_ptr, 4, "nnz_split")
+    assert bounds[1] <= 2          # chip 0 ends right after the hot row

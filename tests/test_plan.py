@@ -1,6 +1,13 @@
-"""Property-based tests (hypothesis) for the JIT planner invariants."""
+"""Property-based tests (hypothesis) for the JIT planner invariants.
+
+Whole-module skip when hypothesis is absent (it is a dev-only
+dependency; see requirements-dev.txt) — the deterministic planner
+coverage lives in tests/test_partition.py and tests/test_fused_ell.py.
+"""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import build_plan, partition_rows_for_chips, random_csr
