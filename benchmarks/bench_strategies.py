@@ -11,21 +11,71 @@ a smaller matrix) and reports the Table IV dispatch invariant: one
 pallas_call per instance, whatever the plan's segment count — the
 single-segment row_split cell is the no-regression baseline the fused
 refactor is held to.
+
+A third sweep (``--n-chips C``, or ``run(n_chips=C)``) shards the fused
+plan over a 1-D device mesh: for each chip count up to C it reports wall
+time, the cross-chip padding efficiency, and launches per call (== chip
+count under shard_map).  Force a CPU device mesh with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
 """
 from __future__ import annotations
+
+import argparse
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+try:
+    from .common import csv_row, time_fn
+except ImportError:          # plain-script run: python benchmarks/...
+    import pathlib
+    import sys
+    _ROOT = pathlib.Path(__file__).resolve().parents[1]
+    sys.path.insert(0, str(_ROOT / "src"))   # repro package
+    sys.path.insert(0, str(_ROOT))           # benchmarks package
+    from benchmarks.common import csv_row, time_fn
+
 from repro.core import build_plan, compile_spmm, random_csr
 from repro.core.jit_cache import JitCache
 from repro.kernels import ops
 
-from .common import csv_row, time_fn
+
+def _chip_sweep(max_chips: int) -> list:
+    rows = []
+    avail = len(jax.devices())
+    rng = np.random.default_rng(5)
+    a = random_csr(512, 512, density=0.02, family="powerlaw", seed=11)
+    x = jnp.asarray(rng.standard_normal((512, 16)), jnp.float32)
+    vals = jnp.asarray(a.vals)
+    chips = 1
+    sweep = []
+    while chips <= max_chips:
+        sweep.append(chips)
+        chips *= 2
+    if sweep[-1] != max_chips:
+        sweep.append(max_chips)
+    for n_chips in sweep:
+        if n_chips > avail:
+            rows.append(csv_row(f"sharded_ell_c{n_chips}_m512_d16", 0.0,
+                                f"SKIPPED:only_{avail}_devices"))
+            continue
+        c = compile_spmm(a, 16, strategy="nnz_split", backend="pallas_ell",
+                         interpret=True, n_chips=n_chips, cache=JitCache())
+        ops.reset_dispatch_counts()
+        warmup, iters = 1, 3
+        us = time_fn(c, vals, x, warmup=warmup, iters=iters)
+        calls = warmup + iters
+        eff = c.sharded_workspace.efficiency
+        rows.append(csv_row(
+            f"sharded_ell_c{n_chips}_m512_d16", us,
+            f"efficiency={eff:.3f};"
+            f"launches_per_call="
+            f"{ops.DISPATCH_COUNTS['ell_fused'] / calls:.0f}"))
+    return rows
 
 
-def run() -> list:
+def run(n_chips: int = 0) -> list:
     rows = []
     rng = np.random.default_rng(2)
     for family in ("uniform", "powerlaw", "banded"):
@@ -55,11 +105,27 @@ def run() -> list:
         c = compile_spmm(a, 16, strategy=strategy, backend="pallas_ell",
                          interpret=True, cache=JitCache())
         ops.reset_dispatch_counts()
-        us = time_fn(c, vals, x, warmup=1, iters=3)
-        calls = 1 + 3  # warmup + iters
+        warmup, iters = 1, 3
+        us = time_fn(c, vals, x, warmup=warmup, iters=iters)
+        calls = warmup + iters
         rows.append(csv_row(
             f"fused_ell_{strategy}_m256_d16", us,
             f"segments={len(c.plan.segments)};"
             f"launches_per_call="
             f"{ops.DISPATCH_COUNTS['ell_fused'] / calls:.0f}"))
+
+    if n_chips > 0:
+        rows += _chip_sweep(n_chips)
     return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-chips", type=int, default=0,
+                    help="also sweep the sharded fused path up to this "
+                         "many chips (needs a multi-device mesh, e.g. "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in run(n_chips=args.n_chips):
+        print(row, flush=True)

@@ -4,13 +4,24 @@ for node classification; the neighborhood aggregation A_hat·H is our
 spmm with the structure planned once and cached across all steps.
 
   PYTHONPATH=src python examples/gnn_graphconv.py
+  # multi-chip aggregation (sharded fused pallas_ell under shard_map):
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python examples/gnn_graphconv.py --n-chips 8
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import CSRMatrix, compile_spmm
 from repro.core.jit_cache import JitCache
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--n-chips", type=int, default=0,
+                help="shard the A_hat aggregation across this many chips "
+                     "via the fused pallas_ell path (0 = ref backend)")
+args = ap.parse_args()
 
 # -- synthetic 2-community graph -------------------------------------------
 rng = np.random.default_rng(0)
@@ -37,12 +48,24 @@ feats[:, 0] += labels * 2.0
 X = jnp.asarray(feats)
 y = jnp.asarray(labels)
 
-# the JIT-planned aggregation operators (structure planned ONCE)
+# the JIT-planned aggregation operators (structure planned ONCE).  With
+# --n-chips the same plan is row-partitioned across a 1-D device mesh and
+# each chip runs its range as one fused pallas_call under shard_map.
 cache = JitCache()
-agg_h = compile_spmm(a_hat, D_H, strategy="nnz_split", backend="ref",
-                     cache=cache)
-agg_out = compile_spmm(a_hat, CLASSES, strategy="nnz_split", backend="ref",
-                       cache=cache)
+if args.n_chips:
+    n_chips = min(args.n_chips, len(jax.devices()))
+    if n_chips < args.n_chips:
+        print(f"clamping --n-chips {args.n_chips} -> {n_chips} "
+              f"(devices present)")
+    agg_kw = dict(backend="pallas_ell", interpret=None, n_chips=n_chips)
+else:
+    agg_kw = dict(backend="ref")
+agg_h = compile_spmm(a_hat, D_H, strategy="nnz_split", cache=cache,
+                     **agg_kw)
+agg_out = compile_spmm(a_hat, CLASSES, strategy="nnz_split", cache=cache,
+                       **agg_kw)
+print(f"aggregation backend: {agg_h.backend}"
+      + (f" sharded over {agg_h.n_chips} chip(s)" if agg_h.n_chips else ""))
 a_vals = jnp.asarray(a_hat.vals)
 
 def init(rng_key):

@@ -1,18 +1,23 @@
 # The paper's primary contribution: JIT-specialized SpMM for TPU.
 from .csr import BCSRMatrix, CSRMatrix, random_csr
 from .ccm import ccm_register_decomposition, plan_d_tiles, DTiling
-from .plan import (SpmmPlan, FusedEllWorkspace, build_fused_workspace,
+from .plan import (SpmmPlan, FusedEllWorkspace, ShardedFusedWorkspace,
+                   build_fused_workspace, build_sharded_workspace,
                    build_plan, partition_rows_for_chips, STRATEGIES)
-from .jit_cache import GLOBAL_CACHE, JitCache, clear_global_cache
-from .spmm import CompiledSpmm, compile_spmm, spmm, BACKENDS
+from .jit_cache import (GLOBAL_CACHE, JitCache, clear_global_cache,
+                        mesh_fingerprint)
+from .spmm import (CompiledSpmm, compile_spmm, spmm, chip_mesh,
+                   resolve_chip_mesh, BACKENDS)
 from . import moe_spmm
 
 __all__ = [
     "BCSRMatrix", "CSRMatrix", "random_csr",
     "ccm_register_decomposition", "plan_d_tiles", "DTiling",
-    "SpmmPlan", "FusedEllWorkspace", "build_fused_workspace",
+    "SpmmPlan", "FusedEllWorkspace", "ShardedFusedWorkspace",
+    "build_fused_workspace", "build_sharded_workspace",
     "build_plan", "partition_rows_for_chips", "STRATEGIES",
-    "GLOBAL_CACHE", "JitCache", "clear_global_cache",
-    "CompiledSpmm", "compile_spmm", "spmm", "BACKENDS",
+    "GLOBAL_CACHE", "JitCache", "clear_global_cache", "mesh_fingerprint",
+    "CompiledSpmm", "compile_spmm", "spmm", "chip_mesh",
+    "resolve_chip_mesh", "BACKENDS",
     "moe_spmm",
 ]

@@ -26,6 +26,23 @@ from typing import Any, Callable, Dict, Optional, Tuple
 Key = Tuple
 
 
+def mesh_fingerprint(mesh) -> Optional[Tuple]:
+    """Hashable cache-key component for an optional device mesh.
+
+    A sharded ``CompiledSpmm`` bakes per-chip descriptor tables and a
+    ``shard_map`` closure over concrete devices into the artifact, so
+    the mesh (axis names + device ids, which fix both n_chips and
+    placement) is part of the specialization identity exactly like
+    ``interpret`` — an artifact built for one mesh must never be served
+    to a caller on another.  ``None`` (unsharded) stays ``None`` so
+    pre-existing single-chip keys are unchanged.
+    """
+    if mesh is None:
+        return None
+    return (tuple(mesh.axis_names),
+            tuple(int(d.id) for d in mesh.devices.flat))
+
+
 @dataclasses.dataclass
 class CacheEntry:
     value: Any
@@ -109,3 +126,8 @@ GLOBAL_CACHE = JitCache()
 
 def clear_global_cache():
     GLOBAL_CACHE.clear()
+    # the sharded dispatch memoizes jitted shard_map closures at the
+    # kernel layer; release those executables (and their mesh/device
+    # handles) together with the artifacts that were built on them
+    from ..kernels.spmm_ell_fused import _sharded_callable
+    _sharded_callable.cache_clear()

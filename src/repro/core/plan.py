@@ -311,3 +311,125 @@ def partition_rows_for_chips(row_ptr: np.ndarray, n_chips: int,
     else:
         raise ValueError(strategy)
     return np.clip(bounds.astype(np.int64), 0, m)
+
+
+# ---------------------------------------------------------------------------
+# Sharded fused workspace: one FusedEllWorkspace per chip row range,
+# padded to common block/slot counts so the whole table ships as stacked
+# (n_chips, ...) arrays under shard_map — each chip then runs its shard
+# as ONE pallas_call, the multi-chip extension of the fused dispatch.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ShardedFusedWorkspace:
+    """Per-chip descriptor tables for the multi-chip fused dispatch.
+
+    ``partition_rows_for_chips`` assigns chip ``c`` the contiguous row
+    range ``[bounds[c], bounds[c+1])``; each range is re-planned with the
+    same strategy (a slice of ``row_ptr``/``col_indices`` re-based by
+    ``row_ptr[bounds[c]]``) and packed with
+    :func:`build_fused_workspace`.  Because descriptors are offset-
+    relative, re-basing the per-chip ``gather`` indices into the GLOBAL
+    ``concat(vals, [0])`` buffer is a single offset addition (padding
+    slots keep the global ``nnz`` zero sentinel).
+
+    All chips are padded to a common block count ``B`` (pad descriptors
+    carry ``blk_L == 0`` — zero loop trips, zero output rows) and slot
+    count ``S``, so the stacked arrays are rectangular and shard cleanly
+    over a 1-D ``("chips",)`` mesh.  ``inv_perm`` is global: output row
+    ``i`` lives at row ``inv_perm[i]`` of the flattened
+    ``(n_chips * ws_rows, d)`` workspace output.
+    """
+    blk_off: np.ndarray      # (C, B) int32 — first slot per row-block
+    blk_L: np.ndarray        # (C, B) int32 — padded nnz/row (0 == pad block)
+    cols_flat: np.ndarray    # (C, S) int32 — slot -> X row
+    gather_flat: np.ndarray  # (C, S) int64 — slot -> GLOBAL concat(vals,[0])
+    inv_perm: np.ndarray     # (m,) int32 into the flattened (C*ws_rows,) rows
+    bounds: np.ndarray       # (C+1,) int64 — chip c owns rows [b[c], b[c+1])
+    ws_rows: int             # per-chip workspace rows == B * row_block
+    row_block: int
+    n_chips: int
+    shard_plans: List[SpmmPlan]   # the per-chip sub-plans (stats/debug)
+
+    @property
+    def num_blocks(self) -> int:
+        """Common per-chip block count B (0 iff the matrix has no rows)."""
+        return int(self.blk_off.shape[1])
+
+    @property
+    def nnz(self) -> int:
+        return sum(p.nnz for p in self.shard_plans)
+
+    @property
+    def padded_nnz(self) -> int:
+        """Real per-chip padded work (pad blocks run zero trips, so they
+        are excluded — this is what each chip's nnz loop executes)."""
+        return int(self.row_block * self.blk_L.astype(np.int64).sum())
+
+    @property
+    def efficiency(self) -> float:
+        """nnz / padded work across all chips — same balance metric as
+        :attr:`SpmmPlan.efficiency`, now including shard imbalance."""
+        return self.nnz / max(self.padded_nnz, 1)
+
+
+def build_sharded_workspace(row_ptr: np.ndarray, col_indices: np.ndarray,
+                            shape, d: int, *, n_chips: int,
+                            strategy: str = "nnz_split", row_block: int = 8,
+                            fingerprint: str = "", max_dt: int = 512,
+                            merge_target_segments: int = 16
+                            ) -> ShardedFusedWorkspace:
+    """Partition rows across ``n_chips`` and pack one fused workspace per
+    chip (see :class:`ShardedFusedWorkspace`).  Host-only — needs no
+    devices; the mesh enters at dispatch time."""
+    if n_chips < 1:
+        raise ValueError(f"n_chips must be >= 1, got {n_chips}")
+    row_ptr = np.asarray(row_ptr)
+    col_indices = np.asarray(col_indices)
+    m, n = shape
+    nnz = int(col_indices.shape[0])
+    bounds = partition_rows_for_chips(row_ptr, n_chips, strategy)
+
+    plans: List[SpmmPlan] = []
+    shards: List[FusedEllWorkspace] = []
+    bases: List[int] = []
+    for c in range(n_chips):
+        r0, r1 = int(bounds[c]), int(bounds[c + 1])
+        base = int(row_ptr[r0])
+        sub_ptr = row_ptr[r0:r1 + 1] - base
+        sub_cols = col_indices[base:int(row_ptr[r1])]
+        plan = build_plan(sub_ptr, sub_cols, (r1 - r0, n), d,
+                          strategy=strategy, row_block=row_block,
+                          fingerprint=f"{fingerprint}/chip{c}",
+                          max_dt=max_dt,
+                          merge_target_segments=merge_target_segments)
+        plans.append(plan)
+        shards.append(build_fused_workspace(plan))
+        bases.append(base)
+
+    B = max(ws.num_blocks for ws in shards)
+    S = max((int(ws.cols_flat.shape[0]) for ws in shards), default=0)
+    ws_rows = B * row_block
+    blk_off = np.zeros((n_chips, B), np.int32)
+    blk_L = np.zeros((n_chips, B), np.int32)       # pad blocks: L == 0
+    cols_flat = np.zeros((n_chips, S), np.int32)
+    gather_flat = np.full((n_chips, S), nnz, np.int64)  # pad -> 0.0 sentinel
+    inv_perm = np.zeros(m, np.int32)
+    for c, ws in enumerate(shards):
+        nb, ns = ws.num_blocks, int(ws.cols_flat.shape[0])
+        blk_off[c, :nb] = ws.blk_off
+        blk_L[c, :nb] = ws.blk_L
+        cols_flat[c, :ns] = ws.cols_flat
+        # re-base shard-local value indices to the global vals buffer;
+        # the shard's zero sentinel (its local nnz) becomes the global one
+        sub_nnz = int(plans[c].nnz)
+        g = ws.gather_flat
+        gather_flat[c, :ns] = np.where(g < sub_nnz, g + bases[c], nnz)
+        r0, r1 = int(bounds[c]), int(bounds[c + 1])
+        inv_perm[r0:r1] = c * ws_rows + ws.inv_perm
+
+    return ShardedFusedWorkspace(
+        blk_off=blk_off, blk_L=blk_L, cols_flat=cols_flat,
+        gather_flat=gather_flat, inv_perm=inv_perm, bounds=bounds,
+        ws_rows=ws_rows, row_block=row_block, n_chips=n_chips,
+        shard_plans=plans)

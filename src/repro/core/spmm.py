@@ -9,7 +9,10 @@ Backends:
   pallas_ell   faithful CCM/VPU Pallas kernel, fused: the whole
                multi-segment plan is ONE pallas_call via a descriptor
                table + one inverse-permutation gather (validated in
-               interpret mode on CPU; native on TPU)
+               interpret mode on CPU; native on TPU).  With ``mesh`` /
+               ``n_chips`` the plan is row-partitioned across chips
+               (``partition_rows_for_chips``) and each chip runs its
+               shard as one pallas_call under shard_map.
   pallas_bcsr  beyond-paper MXU block-sparse Pallas kernel
   ref          pure-jnp gather/segment-sum (jit-friendly; used inside
                the model stack and the 512-device dry-run)
@@ -24,20 +27,54 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh
 
 from . import ccm
 from .csr import BCSRMatrix, CSRMatrix
-from .jit_cache import GLOBAL_CACHE, JitCache
-from .plan import SpmmPlan, build_fused_workspace, build_plan
+from .jit_cache import GLOBAL_CACHE, JitCache, mesh_fingerprint
+from .plan import (ShardedFusedWorkspace, SpmmPlan, build_fused_workspace,
+                   build_plan, build_sharded_workspace)
 from ..kernels.ops import resolve_interpret
 
 BACKENDS = ("pallas_ell", "pallas_bcsr", "ref", "dense", "auto")
 
 
-def _resolve_backend(backend: str) -> str:
+def _resolve_backend(backend: str, *, sharded: bool = False) -> str:
     if backend != "auto":
         return backend
+    if sharded:
+        # mesh/n_chips is a fused-path feature; an explicit sharding
+        # request must not fall back to the single-device ref backend
+        # (on CPU the fused kernel runs via interpret mode)
+        return "pallas_ell"
     return "pallas_ell" if jax.default_backend() == "tpu" else "ref"
+
+
+def chip_mesh(n_chips: int) -> Mesh:
+    """1-D ``("chips",)`` mesh over the first ``n_chips`` local devices —
+    the data mesh the sharded fused path partitions rows over."""
+    devs = jax.devices()
+    if not 1 <= n_chips <= len(devs):
+        raise ValueError(
+            f"n_chips={n_chips} but {len(devs)} device(s) available")
+    return Mesh(np.asarray(devs[:n_chips]), ("chips",))
+
+
+def resolve_chip_mesh(mesh: Optional[Mesh],
+                      n_chips: Optional[int]) -> Optional[Mesh]:
+    """Normalize the two spellings of "shard over C chips" to a concrete
+    1-D mesh (or None = unsharded), so cache keys and compiled artifacts
+    agree whichever the caller used."""
+    if mesh is None and n_chips is None:
+        return None
+    if mesh is not None:
+        if len(mesh.axis_names) != 1:
+            raise ValueError(
+                f"sharded spmm needs a 1-D mesh, got axes {mesh.axis_names}")
+        if n_chips is not None and n_chips != mesh.size:
+            raise ValueError(f"n_chips={n_chips} != mesh size {mesh.size}")
+        return mesh
+    return chip_mesh(n_chips)
 
 
 @dataclasses.dataclass
@@ -54,19 +91,44 @@ class _FusedConsts:
     num_blocks: int
 
 
+@dataclasses.dataclass
+class _ShardedConsts:
+    """Device-resident multi-chip fused constants: stacked per-chip
+    descriptor tables (leading axis = chips), the GLOBAL inverse
+    permutation into the flattened (n_chips * ws_rows) workspace, and
+    the mesh the shard_map dispatch runs over."""
+    blk_off: jax.Array       # (C, B) int32
+    blk_L: jax.Array         # (C, B) int32
+    cols_flat: jax.Array     # (C, S) int32
+    gather_flat: jax.Array   # (C, S) int — slot -> GLOBAL concat(vals,[0])
+    inv_perm: jax.Array      # (m,) int32 into flattened workspace rows
+    ws_rows: int             # per-chip workspace rows
+    num_blocks: int          # common per-chip block count B
+    n_chips: int
+    mesh: Mesh
+
+
 class CompiledSpmm:
     """The "jit-function": structure-specialized, value-generic,
     differentiable SpMM."""
 
     def __init__(self, a: CSRMatrix, d: int, *, strategy: str,
                  backend: str, bm: int = 8, interpret: Optional[bool] = None,
+                 mesh: Optional[Mesh] = None, n_chips: Optional[int] = None,
                  cache: JitCache = GLOBAL_CACHE):
-        self.backend = _resolve_backend(backend)
+        self.backend = _resolve_backend(
+            backend, sharded=mesh is not None or n_chips is not None)
         self.strategy = strategy
         self.bm = bm
         # resolved ONCE: the effective flag is part of the compiled
         # artifact's identity (and of every jit-cache key touching it)
         self.interpret = resolve_interpret(interpret)
+        self.mesh = resolve_chip_mesh(mesh, n_chips)
+        self.n_chips = None if self.mesh is None else int(self.mesh.size)
+        if self.mesh is not None and self.backend != "pallas_ell":
+            raise ValueError(
+                f"mesh/n_chips sharding is a fused pallas_ell feature; "
+                f"backend={self.backend!r} is single-device")
         self.cache = cache
         self.d = d
         self.shape = a.shape
@@ -76,11 +138,35 @@ class CompiledSpmm:
         self._fingerprint = a.fingerprint
         self._nnz = a.nnz
 
-        self.plan: SpmmPlan = build_plan(
-            a.row_ptr, a.col_indices, a.shape, d, strategy=strategy,
-            row_block=bm, fingerprint=a.fingerprint)
+        self._sharded: Optional[_ShardedConsts] = None
+        if self.backend == "pallas_ell" and self.mesh is not None:
+            # the sharded workspace re-plans every chip range itself, so
+            # packing a global plan here would duplicate O(padded_nnz)
+            # host work; only the d tiling is needed from this level
+            self.plan: Optional[SpmmPlan] = None
+            self.d_tiling = ccm.plan_d_tiles(d, rows_in_flight=bm)
+            sw: ShardedFusedWorkspace = build_sharded_workspace(
+                a.row_ptr, a.col_indices, a.shape, d,
+                n_chips=self.n_chips, strategy=strategy, row_block=bm,
+                fingerprint=a.fingerprint)
+            self.sharded_workspace = sw
+            self._sharded = _ShardedConsts(
+                blk_off=jnp.asarray(sw.blk_off),
+                blk_L=jnp.asarray(sw.blk_L),
+                cols_flat=jnp.asarray(sw.cols_flat),
+                gather_flat=jnp.asarray(sw.gather_flat),
+                inv_perm=jnp.asarray(sw.inv_perm),
+                ws_rows=sw.ws_rows,
+                num_blocks=sw.num_blocks,
+                n_chips=sw.n_chips,
+                mesh=self.mesh)
+        else:
+            self.plan = build_plan(
+                a.row_ptr, a.col_indices, a.shape, d, strategy=strategy,
+                row_block=bm, fingerprint=a.fingerprint)
+            self.d_tiling = self.plan.d_tiling
 
-        if self.backend == "pallas_ell":
+        if self._sharded is None and self.backend == "pallas_ell":
             ws = build_fused_workspace(self.plan)
             self._fused = _FusedConsts(
                 blk_off=jnp.asarray(ws.blk_off),
@@ -175,8 +261,23 @@ class CompiledSpmm:
                                        num_segments=m)
         vals_ext = jnp.concatenate(
             [vals.astype(jnp.float32), jnp.zeros((1,), jnp.float32)])
-        x_pad = ccm.pad_cols(x, self.plan.d_tiling.d_pad)
+        x_pad = ccm.pad_cols(x, self.d_tiling.d_pad)
         if backend == "pallas_ell":
+            if self._sharded is not None:
+                from ..kernels.ops import spmm_ell_fused_sharded_op
+                sw = self._sharded
+                if sw.num_blocks == 0:
+                    return jnp.zeros((m, d), jnp.float32)
+                # one dispatch PER CHIP for the whole plan: shard_map
+                # splits the stacked descriptor tables on the chip axis
+                vals_flat = vals_ext[sw.gather_flat]
+                y_ws = spmm_ell_fused_sharded_op(
+                    sw.blk_off, sw.blk_L, sw.cols_flat, vals_flat, x_pad,
+                    mesh=sw.mesh, bm=self.bm, interpret=self.interpret)
+                # sharded inverse-permutation gather over the flattened
+                # (n_chips * ws_rows) workspace recovers row order
+                y_flat = y_ws.reshape(sw.n_chips * sw.ws_rows, -1)
+                return y_flat[sw.inv_perm, :d]
             from ..kernels.ops import spmm_ell_fused_op
             fw = self._fused
             if fw.num_blocks == 0:
@@ -211,12 +312,14 @@ class CompiledSpmm:
                           np.zeros(self._nnz, np.float32))
             t_struct, order = a.transpose_structure()
             key = ("spmmT", self._fingerprint, self.d, self.strategy,
-                   self.backend, self.bm, self.interpret)
+                   self.backend, self.bm, self.interpret,
+                   mesh_fingerprint(self.mesh))
             self._transpose = self.cache.get_or_build(
                 key, lambda: CompiledSpmm(
                     t_struct, self.d, strategy=self.strategy,
                     backend=self.backend, bm=self.bm,
-                    interpret=self.interpret, cache=self.cache))
+                    interpret=self.interpret, mesh=self.mesh,
+                    cache=self.cache))
             self._t_order = jnp.asarray(order.astype(np.int32))
         vals_t = vals[self._t_order]
         return self._transpose._forward(vals_t, dy)
@@ -228,21 +331,34 @@ class CompiledSpmm:
 def compile_spmm(a: CSRMatrix, d: int, *, strategy: str = "nnz_split",
                  backend: str = "auto", bm: int = 8,
                  interpret: Optional[bool] = None,
+                 mesh: Optional[Mesh] = None, n_chips: Optional[int] = None,
                  cache: JitCache = GLOBAL_CACHE) -> CompiledSpmm:
-    backend = _resolve_backend(backend)
+    """Build (or fetch) the structure-specialized SpMM artifact.
+
+    ``mesh`` / ``n_chips`` (pallas_ell only) shard the fused plan across
+    a 1-D device mesh: rows are partitioned by the same strategy at the
+    chip level and each chip runs its range as one pallas_call under
+    shard_map.  The resolved mesh is part of the cache key — same
+    normalization as ``interpret``."""
+    backend = _resolve_backend(
+        backend, sharded=mesh is not None or n_chips is not None)
     interpret = resolve_interpret(interpret)
-    key = ("spmm", a.fingerprint, d, strategy, backend, bm, interpret)
+    mesh = resolve_chip_mesh(mesh, n_chips)
+    key = ("spmm", a.fingerprint, d, strategy, backend, bm, interpret,
+           mesh_fingerprint(mesh))
     return cache.get_or_build(
         key, lambda: CompiledSpmm(a, d, strategy=strategy, backend=backend,
-                                  bm=bm, interpret=interpret, cache=cache))
+                                  bm=bm, interpret=interpret, mesh=mesh,
+                                  cache=cache))
 
 
 def spmm(a: CSRMatrix, x, *, strategy: str = "nnz_split",
          backend: str = "auto", bm: int = 8,
          interpret: Optional[bool] = None,
+         mesh: Optional[Mesh] = None, n_chips: Optional[int] = None,
          cache: JitCache = GLOBAL_CACHE) -> jax.Array:
     """Y = A·X, specialized to A's structure and x's column count."""
     compiled = compile_spmm(a, x.shape[1], strategy=strategy,
                             backend=backend, bm=bm, interpret=interpret,
-                            cache=cache)
+                            mesh=mesh, n_chips=n_chips, cache=cache)
     return compiled(jnp.asarray(a.vals), x)

@@ -7,7 +7,10 @@ TPU target and only *validated* in interpret mode here.
 Every wrapper records a dispatch in ``DISPATCH_COUNTS`` (a plain host
 counter, incremented once per ``pallas_call`` issued from Python).  The
 fused-path tests use it to assert the Table IV invariant: one dispatch
-per (matrix, d) instance, regardless of segment count.
+per (matrix, d) instance, regardless of segment count — and on the
+sharded path exactly ``n_chips`` dispatches per forward (``shard_map``
+traces the body once and SPMD-replicates it, so each of the C devices
+executes one ``pallas_call``; the wrapper counts all C).
 """
 from __future__ import annotations
 
@@ -16,7 +19,7 @@ import collections
 import jax
 
 from .spmm_csr import spmm_ell_segment
-from .spmm_ell_fused import spmm_ell_fused
+from .spmm_ell_fused import spmm_ell_fused, spmm_ell_fused_sharded
 from .spmm_bcsr import spmm_bcsr
 
 # name -> number of pallas_call dispatches issued (host-side; jit tracing
@@ -53,6 +56,18 @@ def spmm_ell_fused_op(blk_off, blk_L, cols_flat, vals_flat, x, *,
     DISPATCH_COUNTS["ell_fused"] += 1
     return spmm_ell_fused(blk_off, blk_L, cols_flat, vals_flat, x,
                           bm=bm, interpret=interpret)
+
+
+def spmm_ell_fused_sharded_op(blk_off, blk_L, cols_flat, vals_flat, x, *,
+                              mesh, bm: int = 8, interpret=None):
+    """One fused dispatch per chip: counts ``mesh.size`` pallas_calls
+    under the ``ell_fused`` key (the per-forward invariant the sharded
+    tests assert) plus one ``ell_fused_sharded`` wrapper call."""
+    interpret = resolve_interpret(interpret)
+    DISPATCH_COUNTS["ell_fused"] += mesh.size
+    DISPATCH_COUNTS["ell_fused_sharded"] += 1
+    return spmm_ell_fused_sharded(blk_off, blk_L, cols_flat, vals_flat, x,
+                                  mesh=mesh, bm=bm, interpret=interpret)
 
 
 def spmm_bcsr_op(block_cols_pad, block_vals_pad, x, *, kmax: int,

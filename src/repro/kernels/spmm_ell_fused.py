@@ -25,6 +25,13 @@ TPU lowering would double-buffer per-block slot panels via DMA.
 The kernel writes workspace rows (segment order, padded); the caller
 maps them back to output rows with ONE inverse-permutation gather
 instead of one scatter per segment.
+
+Multi-chip (``spmm_ell_fused_sharded``): the planner's
+``ShardedFusedWorkspace`` stacks one descriptor table per chip row
+range, and ``shard_map`` over a 1-D ``("chips",)`` mesh runs the SAME
+single-dispatch kernel on every chip — one ``pallas_call`` per chip per
+forward, with X replicated and the descriptor/slot arrays sharded on
+their leading chip axis.
 """
 from __future__ import annotations
 
@@ -34,6 +41,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+from jax.sharding import PartitionSpec as P
+
+try:                                   # jax >= 0.6 promotes it to jax.*
+    from jax import shard_map as _shard_map
+except ImportError:                    # jax 0.4/0.5
+    from jax.experimental.shard_map import shard_map as _shard_map
 
 
 def _kernel(off_ref, L_ref, cols_ref, vals_ref, x_ref, y_ref, *,
@@ -99,3 +112,53 @@ def spmm_ell_fused(blk_off: jax.Array, blk_L: jax.Array,
                                        jnp.float32),
         interpret=interpret,
     )(blk_off, blk_L, cols_flat, vals_flat, x)
+
+
+def spmm_ell_fused_sharded(blk_off: jax.Array, blk_L: jax.Array,
+                           cols_flat: jax.Array, vals_flat: jax.Array,
+                           x: jax.Array, *, mesh, bm: int = 8,
+                           interpret: bool = True) -> jax.Array:
+    """Run one fused dispatch per chip under ``shard_map``.
+
+    blk_off/blk_L     : (C, B) int32 — per-chip descriptor tables
+    cols_flat         : (C, S) int32 — per-chip slot -> X row
+    vals_flat         : (C, S) float — per-chip slot values
+    x                 : (n, d_pad) float — replicated on every chip
+    mesh              : 1-D mesh of C devices (axis name is free)
+
+    Returns (C, B*bm, d_pad) workspace rows, sharded over the chip axis;
+    the caller flattens and applies the sharded workspace's GLOBAL
+    ``inv_perm`` gather to recover output row order.
+
+    The body is traced once and SPMD-replicated: each of the C devices
+    executes exactly one ``pallas_call`` over its own descriptor shard,
+    so a forward costs C dispatches total — the multi-chip extension of
+    the one-artifact-per-instance invariant (paper Table IV).
+    """
+    return _sharded_callable(mesh, bm, interpret)(
+        blk_off, blk_L, cols_flat, vals_flat, x)
+
+
+@functools.lru_cache(maxsize=32)
+def _sharded_callable(mesh, bm: int, interpret: bool):
+    """jit-wrapped shard_map closure, memoized per (mesh, bm, interpret)
+    so repeated forwards reuse one compiled executable instead of
+    rebuilding and retracing the shard_map every call (Mesh is hashable;
+    input-shape specialization is jit's usual cache).  Bounded, and
+    evicted by ``core.jit_cache.clear_global_cache`` so compiled state
+    and device handles don't outlive the caches that reference them."""
+    (axis,) = mesh.axis_names
+
+    def per_chip(off, L, cols, vals, xp):
+        y = spmm_ell_fused(off[0], L[0], cols[0], vals[0], xp,
+                           bm=bm, interpret=interpret)
+        return y[None]
+
+    shard = P(axis)
+    specs = dict(in_specs=(shard, shard, shard, shard, P()),
+                 out_specs=shard)
+    try:
+        fn = _shard_map(per_chip, mesh=mesh, check_rep=False, **specs)
+    except TypeError:      # jax >= 0.7 renamed the replication check
+        fn = _shard_map(per_chip, mesh=mesh, check_vma=False, **specs)
+    return jax.jit(fn)

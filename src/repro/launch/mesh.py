@@ -21,3 +21,10 @@ def make_host_mesh(*, data: int = 1, model: int = 1):
     n = len(jax.devices())
     assert data * model <= n, (data, model, n)
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_chip_mesh(n_chips: int):
+    """1-D ("chips",) mesh for the sharded fused SpMM path — each chip
+    owns a contiguous row range of the plan (core.spmm sharding)."""
+    from ..core.spmm import chip_mesh
+    return chip_mesh(n_chips)

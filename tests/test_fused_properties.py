@@ -1,0 +1,138 @@
+"""Property-based cross-backend harness for the fused/sharded SpMM path.
+
+Hypothesis generates adversarial CSR structures — skewed, empty-row,
+single-row, power-law degree — crossed with strategy and d, and asserts
+the end-to-end oracles the deterministic suites spot-check:
+
+  * fused pallas_ell == ref backend (allclose, f32 accumulate),
+  * sharded fused == unsharded fused BIT-identical (same per-row
+    accumulation order; sharding must be a pure re-partitioning),
+  * plan/workspace balance invariants: efficiency in (0, 1], every
+    output row packed exactly once.
+
+Whole-module skip when hypothesis is absent (dev-only dependency), same
+policy as test_plan.py.  Kernel-executing properties keep instances
+small and example counts modest: every distinct (B, S, d_pad) shape is
+a fresh interpret-mode compile.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CSRMatrix, build_sharded_workspace, spmm
+from repro.core.jit_cache import JitCache
+from repro.core.plan import STRATEGIES, build_plan
+
+N_DEV = len(jax.devices())
+
+
+def _csr_from_lengths(lengths, n, seed):
+    """Deterministic CSR with given per-row nnz (capped at n)."""
+    rng = np.random.default_rng(seed)
+    lengths = np.minimum(np.asarray(lengths, np.int64), n)
+    row_ptr = np.concatenate([[0], np.cumsum(lengths)]).astype(np.int64)
+    cols = np.concatenate(
+        [np.sort(rng.choice(n, size=int(l), replace=False))
+         for l in lengths] or [np.zeros(0, np.int64)]).astype(np.int32)
+    vals = rng.standard_normal(int(row_ptr[-1])).astype(np.float32)
+    return CSRMatrix((len(lengths), n), row_ptr, cols, vals)
+
+
+@st.composite
+def csr_cases(draw):
+    """Adversarial structure families, all with concrete row lengths so
+    shrinking stays meaningful."""
+    n = draw(st.integers(1, 40))
+    family = draw(st.sampled_from(
+        ("skewed", "empty_rows", "single_row", "powerlaw")))
+    seed = draw(st.integers(0, 10_000))
+    if family == "single_row":
+        lengths = [draw(st.integers(0, n))]
+    elif family == "empty_rows":
+        m = draw(st.integers(1, 24))
+        lengths = [draw(st.integers(0, n)) if draw(st.booleans()) else 0
+                   for _ in range(m)]
+    elif family == "skewed":
+        light = draw(st.integers(1, 20))
+        heavy = draw(st.integers(1, 4))
+        lengths = [1] * light + [n] * heavy
+    else:  # powerlaw
+        m = draw(st.integers(1, 24))
+        rng = np.random.default_rng(seed)
+        lengths = np.minimum(
+            rng.zipf(1.8, size=m), n).astype(np.int64).tolist()
+    return _csr_from_lengths(lengths, n, seed)
+
+
+@settings(max_examples=12, deadline=None)
+@given(a=csr_cases(), d=st.integers(1, 24),
+       strategy=st.sampled_from(STRATEGIES))
+def test_fused_matches_ref(a, d, strategy):
+    x = jnp.asarray(
+        np.random.default_rng(d).standard_normal((a.n, d)), jnp.float32)
+    y_ref = spmm(a, x, strategy=strategy, backend="ref", cache=JitCache())
+    y = spmm(a, x, strategy=strategy, backend="pallas_ell",
+             interpret=True, cache=JitCache())
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=12, deadline=None)
+@given(a=csr_cases(), d=st.integers(1, 24),
+       strategy=st.sampled_from(STRATEGIES),
+       chips=st.integers(1, 4))
+def test_sharded_bit_matches_fused(a, d, strategy, chips):
+    chips = min(chips, N_DEV)
+    x = jnp.asarray(
+        np.random.default_rng(d + 1).standard_normal((a.n, d)),
+        jnp.float32)
+    y0 = spmm(a, x, strategy=strategy, backend="pallas_ell",
+              interpret=True, cache=JitCache())
+    y = spmm(a, x, strategy=strategy, backend="pallas_ell",
+             interpret=True, n_chips=chips, cache=JitCache())
+    assert np.array_equal(np.asarray(y), np.asarray(y0))
+
+
+@settings(max_examples=60, deadline=None)
+@given(a=csr_cases(), d=st.integers(1, 64),
+       strategy=st.sampled_from(STRATEGIES))
+def test_plan_efficiency_invariant(a, d, strategy):
+    plan = build_plan(a.row_ptr, a.col_indices, a.shape, d,
+                      strategy=strategy)
+    assert 0 < plan.efficiency <= 1 or a.nnz == 0
+    assert plan.padded_nnz >= a.nnz
+
+
+@settings(max_examples=40, deadline=None)
+@given(a=csr_cases(), d=st.integers(1, 64),
+       strategy=st.sampled_from(STRATEGIES),
+       chips=st.integers(1, 12))
+def test_sharded_workspace_invariants(a, d, strategy, chips):
+    """Host-only packing invariants, any chip count (no mesh needed):
+    row coverage is a bijection, efficiency stays in (0, 1], and the
+    per-chip descriptor tables tile their real slots contiguously."""
+    ws = build_sharded_workspace(a.row_ptr, a.col_indices, a.shape, d,
+                                 n_chips=chips, strategy=strategy)
+    assert ws.nnz == a.nnz
+    if a.nnz:
+        assert 0 < ws.efficiency <= 1
+    assert len(set(ws.inv_perm.tolist())) == a.m
+    if a.m:
+        assert np.all(ws.inv_perm < ws.n_chips * ws.ws_rows)
+    bm = ws.row_block
+    for c in range(ws.n_chips):
+        L = ws.blk_L[c]
+        real = L > 0
+        ends = ws.blk_off[c].astype(np.int64) + bm * L.astype(np.int64)
+        # real blocks tile [0, slots) in order; pads carry zero work
+        n_real = int(real.sum())
+        if n_real:
+            np.testing.assert_array_equal(ws.blk_off[c][1:n_real],
+                                          ends[:n_real - 1])
+            assert ws.blk_off[c][0] == 0
+        # gather stays inside the global concat(vals,[0]) buffer
+        assert np.all(ws.gather_flat[c] <= a.nnz)

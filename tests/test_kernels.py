@@ -136,3 +136,17 @@ def test_sddmm_pallas_matches_ref(shape):
     want = sddmm_ref(a.row_ptr, a.col_indices, dy, x)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-4, atol=1e-4)
+
+
+def test_kernels_public_exports_importable():
+    """Smoke: every symbol `repro.kernels` advertises in __all__ resolves,
+    and the op wrappers (the dispatch-counting layer the rest of the
+    stack calls) are importable — catches stale export lists."""
+    import repro.kernels as kernels
+    for name in kernels.__all__:
+        assert getattr(kernels, name, None) is not None, name
+    from repro.kernels.ops import (  # noqa: F401
+        DISPATCH_COUNTS, default_interpret, reset_dispatch_counts,
+        resolve_interpret, spmm_bcsr_op, spmm_ell_fused_op,
+        spmm_ell_fused_sharded_op, spmm_ell_segment_op)
+    assert "spmm_ell_fused_sharded" in kernels.__all__

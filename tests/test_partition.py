@@ -1,9 +1,15 @@
-"""Deterministic coverage for ``partition_rows_for_chips`` — runs even
-without hypothesis (the property-based twin lives in test_plan.py)."""
+"""Deterministic coverage for ``partition_rows_for_chips`` and the
+sharded-workspace packing built on it — runs even without hypothesis
+(the property-based twin lives in test_plan.py /
+test_fused_properties.py)."""
+import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import partition_rows_for_chips
+from repro.core import (CSRMatrix, build_sharded_workspace,
+                        partition_rows_for_chips, random_csr, spmm)
+from repro.core.jit_cache import JitCache
 from repro.core.plan import STRATEGIES
 
 
@@ -46,3 +52,59 @@ def test_nnz_split_balances_skew():
     row_ptr = CASES["skewed_head"]
     bounds = partition_rows_for_chips(row_ptr, 4, "nnz_split")
     assert bounds[1] <= 2          # chip 0 ends right after the hot row
+
+
+# -- shard-count edge cases (workspace packing is host-only: no mesh) ------
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_more_chips_than_rows(strategy):
+    """n_chips > n_rows: the surplus chips get empty row ranges and pad
+    descriptor tables (blk_L == 0), and every real row is still packed
+    exactly once."""
+    a = random_csr(3, 10, density=0.5, family="uniform", seed=1)
+    ws = build_sharded_workspace(a.row_ptr, a.col_indices, a.shape, 8,
+                                 n_chips=16, strategy=strategy)
+    assert ws.n_chips == 16
+    assert ws.bounds[0] == 0 and ws.bounds[-1] == a.m
+    rows_per_chip = np.diff(ws.bounds)
+    assert rows_per_chip.sum() == a.m
+    assert (rows_per_chip == 0).sum() >= 16 - a.m
+    # global inv_perm is a bijection onto distinct workspace rows
+    assert len(set(ws.inv_perm.tolist())) == a.m
+    assert np.all(ws.inv_perm < 16 * max(ws.ws_rows, 1))
+    # every chip's real work sums to the matrix nnz
+    assert ws.nnz == a.nnz
+    assert 0 < ws.efficiency <= 1 or a.nnz == 0
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_all_nnz_in_one_row(strategy):
+    """One hot row owning every nonzero: nnz_split must isolate it while
+    the empty rows still come out zero."""
+    lengths = [0] * 11 + [37] + [0] * 12
+    row_ptr = _row_ptr(lengths)
+    cols = np.arange(37, dtype=np.int32) % 40
+    ws = build_sharded_workspace(row_ptr, cols, (24, 40), 8,
+                                 n_chips=4, strategy=strategy)
+    assert ws.nnz == 37
+    assert 0 < ws.efficiency <= 1
+    if strategy == "nnz_split":
+        # the hot row's chip carries (essentially) all the padded work
+        chip = int(np.searchsorted(ws.bounds[1:], 11, side="right"))
+        per_chip = ws.row_block * ws.blk_L.astype(np.int64).sum(axis=1)
+        assert per_chip[chip] >= 37
+
+
+def test_n_chips_1_bit_matches_unsharded_fused():
+    """The sharded machinery with a single chip must be a bit-exact
+    no-op relative to the plain fused path (same sub-plan, same kernel,
+    same accumulation order)."""
+    a = random_csr(64, 48, density=0.1, family="powerlaw", seed=5)
+    x = jnp.asarray(
+        np.random.default_rng(6).standard_normal((a.n, 20)), jnp.float32)
+    for strategy in STRATEGIES:
+        y0 = spmm(a, x, strategy=strategy, backend="pallas_ell",
+                  interpret=True, cache=JitCache())
+        y1 = spmm(a, x, strategy=strategy, backend="pallas_ell",
+                  interpret=True, n_chips=1, cache=JitCache())
+        assert np.array_equal(np.asarray(y0), np.asarray(y1)), strategy
