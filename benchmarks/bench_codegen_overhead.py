@@ -17,9 +17,9 @@ import numpy as np
 
 from repro.core import build_plan, compile_spmm, random_csr
 from repro.core.jit_cache import JitCache
-from repro.core.plan import build_fused_workspace
+from repro.core.plan import build_fused_workspace, build_mixed_plan
 
-from .common import csv_row, time_fn
+from .common import bench_record, csv_row, time_fn
 
 
 def run() -> list:
@@ -53,3 +53,33 @@ def run() -> list:
             f"overhead_pct_at_{calls}calls="
             f"{overhead_pct:.4f};cache_hit_us={hit_us:.1f}"))
     return rows
+
+
+def smoke_records() -> list:
+    """CI bench-smoke cells for the "codegen" (plan + pack) side: the
+    host-side cost of building a plan and its fused descriptor tables
+    must stay plan-sized.  ``dispatches`` is 0 — these cells gate on
+    wall-clock only (see benchmarks/common.py for the schema)."""
+    def med_ms(fn, iters=5):
+        # min-of-5: plan builds are ms-scale and the 2x regression gate
+        # must not trip on scheduler noise (same rationale as time_fn's
+        # stat="min" for the kernel smoke cells)
+        ts = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            fn()
+            ts.append((time.perf_counter() - t0) * 1e3)
+        return float(np.min(ts))
+
+    records = []
+    a = random_csr(512, 512, density=0.02, family="powerlaw", seed=3)
+    for strategy in ("row_split", "nnz_split", "merge_split"):
+        ell_ms = med_ms(lambda: build_fused_workspace(build_plan(
+            a.row_ptr, a.col_indices, a.shape, 16, strategy=strategy)))
+        records.append(bench_record("codegen_plan", strategy,
+                                    "pallas_ell", 0, ell_ms, 0))
+        mixed_ms = med_ms(lambda: build_fused_workspace(build_mixed_plan(
+            a.row_ptr, a.col_indices, a.shape, 16, strategy=strategy)))
+        records.append(bench_record("codegen_plan", strategy,
+                                    "pallas_bcsr", 0, mixed_ms, 0))
+    return records

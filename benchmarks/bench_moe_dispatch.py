@@ -7,7 +7,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import moe_spmm as ms
-from repro.core.jit_cache import JitCache
 
 from .common import csv_row, time_fn
 

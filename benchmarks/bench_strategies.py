@@ -27,14 +27,14 @@ import jax.numpy as jnp
 import numpy as np
 
 try:
-    from .common import csv_row, time_fn
+    from .common import bench_record, csv_row, time_fn
 except ImportError:          # plain-script run: python benchmarks/...
     import pathlib
     import sys
     _ROOT = pathlib.Path(__file__).resolve().parents[1]
     sys.path.insert(0, str(_ROOT / "src"))   # repro package
     sys.path.insert(0, str(_ROOT))           # benchmarks package
-    from benchmarks.common import csv_row, time_fn
+    from benchmarks.common import bench_record, csv_row, time_fn
 
 from repro.core import build_plan, compile_spmm, random_csr
 from repro.core.jit_cache import JitCache
@@ -117,6 +117,58 @@ def run(n_chips: int = 0) -> list:
     if n_chips > 0:
         rows += _chip_sweep(n_chips)
     return rows
+
+
+def _timed_cell(bench, strategy, backend, n_chips, a, x, *, counter,
+                extra=()):
+    """One smoke cell: compile, time, count launches per call."""
+    kw = dict(strategy=strategy, backend=backend, interpret=True,
+              cache=JitCache())
+    if n_chips:
+        kw["n_chips"] = n_chips
+    c = compile_spmm(a, x.shape[1], **kw)
+    vals = jnp.asarray(a.vals)
+    ops.reset_dispatch_counts()
+    # min-of-7: the smoke gate compares at a 2x threshold, and the min
+    # filters the scheduler/GC spikes a median of interpret-mode cells
+    # still lets through (see time_fn)
+    warmup, iters = 2, 7
+    us = time_fn(c, vals, x, warmup=warmup, iters=iters, stat="min")
+    calls = warmup + iters
+    dispatches = sum(ops.DISPATCH_COUNTS[k]
+                     for k in (counter, *extra)) / calls
+    return bench_record(bench, strategy, backend, n_chips, us / 1e3,
+                        dispatches)
+
+
+def smoke_records() -> list:
+    """CI bench-smoke cells (schema: benchmarks/common.py): the fused
+    VPU and mixed VPU/MXU hot paths, unsharded + sharded, on fixtures
+    small enough for interpret-mode CPU.  Tracks the two regression
+    axes that matter for the hot path: wall-clock per call and
+    pallas_call launches per call (the Table IV fusion invariant)."""
+    records = []
+    rng = np.random.default_rng(2)
+    a = random_csr(128, 128, density=0.05, family="powerlaw", seed=7)
+    x = jnp.asarray(rng.standard_normal((128, 16)), jnp.float32)
+    # the sharded cells are PINNED to 1 chip: n_chips is part of the
+    # bench-record key, so a host-dependent count would make the gate
+    # compare different cells on different machines (baseline poisoning
+    # / phantom coverage failures).  1 chip still exercises the whole
+    # shard_map dispatch path; real multi-chip behavior is covered by
+    # the mesh8 pytest leg, not the bench trajectory.
+    for strategy in ("row_split", "nnz_split", "merge_split"):
+        records.append(_timed_cell("fused_ell", strategy, "pallas_ell",
+                                   0, a, x, counter="ell_fused"))
+        records.append(_timed_cell("fused_mixed", strategy, "pallas_bcsr",
+                                   0, a, x, counter="bcsr_fused"))
+    records.append(_timed_cell("fused_ell_sharded", "nnz_split",
+                               "pallas_ell", 1, a, x,
+                               counter="ell_fused"))
+    records.append(_timed_cell("fused_mixed_sharded", "nnz_split",
+                               "pallas_bcsr", 1, a, x,
+                               counter="bcsr_fused"))
+    return records
 
 
 if __name__ == "__main__":

@@ -1,14 +1,54 @@
-"""Shared benchmark utilities."""
+"""Shared benchmark utilities + the bench-JSON schema the CI smoke tier
+tracks.
+
+## Bench-JSON schema (``BENCH_pr.json`` / ``BENCH_baseline.json``)
+
+A bench file is a JSON list of flat records, one per measured cell::
+
+    {
+      "bench":      str,   # suite cell, e.g. "fused_ell", "codegen_plan";
+                           # the reserved name "calib" is the machine-
+                           # speed calibration record (see below)
+      "strategy":   str,   # workload-division strategy ("-" if n/a)
+      "backend":    str,   # spmm backend ("dense" for the calibration)
+      "n_chips":    int,   # chips the cell sharded over (0 = unsharded)
+      "wall_ms":    float, # median wall-clock per call, milliseconds
+      "dispatches": float  # pallas_call launches per call (0 = none)
+    }
+
+Records are keyed by ``(bench, strategy, backend, n_chips)``; the CI
+gate (``check_bench_regression``) compares a PR file against the
+checked-in baseline and fails when any cell regresses by more than
+``factor`` (default 2x) in wall-clock or dispatch count, or when a
+baseline cell disappears (silent coverage shrink).
+
+Wall-clock comparisons are normalized by the ``calib`` record — a fixed
+dense matmul timed on the same process — so a uniformly slower CI
+runner rescales every threshold instead of tripping the gate; dispatch
+counts are structural and compared raw.
+"""
 from __future__ import annotations
 
+import json
 import time
+from typing import List
 
 import jax
 import numpy as np
 
+CALIB_BENCH = "calib"
+_KEY_FIELDS = ("bench", "strategy", "backend", "n_chips")
 
-def time_fn(fn, *args, warmup: int = 2, iters: int = 10) -> float:
-    """Median wall-time in microseconds per call (blocked until ready)."""
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 10,
+            stat: str = "median") -> float:
+    """Wall-time in microseconds per call (blocked until ready).
+
+    ``stat="median"`` for the reporting benchmarks; the smoke gate uses
+    ``stat="min"`` — the minimum converges to the true cost and filters
+    scheduler/GC noise, which matters when a 2x threshold guards
+    interpret-mode cells whose median can legitimately double under
+    runner contention."""
     for _ in range(warmup):
         out = fn(*args)
         jax.block_until_ready(out)
@@ -18,8 +58,108 @@ def time_fn(fn, *args, warmup: int = 2, iters: int = 10) -> float:
         out = fn(*args)
         jax.block_until_ready(out)
         times.append((time.perf_counter() - t0) * 1e6)
-    return float(np.median(times))
+    return float(np.min(times) if stat == "min" else np.median(times))
 
 
 def csv_row(name: str, us: float, derived: str) -> str:
     return f"{name},{us:.1f},{derived}"
+
+
+# ---------------------------------------------------------------------------
+# Bench-JSON records + the smoke-tier regression gate
+# ---------------------------------------------------------------------------
+
+def bench_record(bench: str, strategy: str, backend: str, n_chips: int,
+                 wall_ms: float, dispatches: float) -> dict:
+    """One schema-conforming record (see module docstring)."""
+    return {"bench": str(bench), "strategy": str(strategy),
+            "backend": str(backend), "n_chips": int(n_chips),
+            "wall_ms": float(wall_ms), "dispatches": float(dispatches)}
+
+
+def write_bench_json(path, records: List[dict]) -> None:
+    with open(path, "w") as f:
+        json.dump(records, f, indent=1, sort_keys=True)
+        f.write("\n")
+
+
+def load_bench_json(path) -> List[dict]:
+    with open(path) as f:
+        records = json.load(f)
+    if not isinstance(records, list):
+        raise ValueError(f"{path}: bench JSON must be a list of records")
+    for r in records:
+        missing = [k for k in (*_KEY_FIELDS, "wall_ms", "dispatches")
+                   if k not in r]
+        if missing:
+            raise ValueError(f"{path}: record {r} missing {missing}")
+    return records
+
+
+def _key(r: dict):
+    return tuple(r[k] for k in _KEY_FIELDS)
+
+
+def check_bench_regression(pr: List[dict], baseline: List[dict], *,
+                           factor: float = 2.0,
+                           min_wall_ms: float = 1.0) -> List[str]:
+    """Compare a PR bench file against the baseline; return the list of
+    failure messages (empty == gate passes).
+
+    * wall-clock: fails when ``pr.wall_ms > factor * scale *
+      base.wall_ms`` where ``scale`` is the calib-record wall ratio
+      (PR machine / baseline machine), floored at 1.0 — a slower CI
+      runner relaxes every threshold proportionally, but a faster one
+      never tightens the gate below the raw factor.  1.0 when either
+      side lacks a calibration record.  Cells whose baseline wall is
+      under ``min_wall_ms`` are exempt from the wall gate (sub-ms cells
+      swing several-x on scheduler noise alone) and gate on dispatch
+      count only.
+    * dispatches: structural — fails when ``pr > factor * base`` raw
+      (a dispatch-count regression is a fusion regression).
+    * coverage: a baseline cell missing from the PR file fails; new PR
+      cells pass silently (they enter the gate on baseline refresh).
+    """
+    prm = {_key(r): r for r in pr}
+    bsm = {_key(r): r for r in baseline}
+    scale = 1.0
+    calib_pairs = [(prm[k], bsm[k]) for k in bsm
+                   if k in prm and k[0] == CALIB_BENCH
+                   and bsm[k]["wall_ms"] > 0]
+    if calib_pairs:
+        ratios = [p["wall_ms"] / b["wall_ms"] for p, b in calib_pairs]
+        scale = max(float(np.median(ratios)), 1.0)
+    failures: List[str] = []
+    for k, base in sorted(bsm.items()):
+        if k[0] == CALIB_BENCH:
+            continue
+        r = prm.get(k)
+        if r is None:
+            failures.append(f"{k}: baseline cell missing from PR run "
+                            f"(coverage shrank)")
+            continue
+        if base["dispatches"] > 0 and (
+                r["dispatches"] > factor * base["dispatches"]):
+            failures.append(
+                f"{k}: dispatches {r['dispatches']:.0f} > {factor}x "
+                f"baseline {base['dispatches']:.0f} (fusion regression)")
+        if base["wall_ms"] >= min_wall_ms and (
+                r["wall_ms"] > factor * scale * base["wall_ms"]):
+            failures.append(
+                f"{k}: wall {r['wall_ms']:.3f}ms > {factor}x baseline "
+                f"{base['wall_ms']:.3f}ms (machine scale {scale:.2f})")
+    return failures
+
+
+def calib_record(seed: int = 0) -> dict:
+    """The machine-speed calibration cell: a fixed-size jit'd dense
+    matmul.  Timed on every smoke run so the regression gate can factor
+    out absolute runner speed (see ``check_bench_regression``)."""
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal((256, 256)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((256, 64)), jnp.float32)
+    us = time_fn(jax.jit(lambda u, v: u @ v), a, b, warmup=2, iters=10,
+                 stat="min")
+    return bench_record(CALIB_BENCH, "-", "dense", 0, us / 1e3, 0)
+

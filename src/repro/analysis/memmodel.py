@@ -19,7 +19,6 @@ All quantities are per chip per step, in bytes.
 """
 from __future__ import annotations
 
-import math
 from typing import Dict
 
 BF16 = 2
@@ -47,7 +46,6 @@ def hbm_traffic(cfg, shape, *, multi_pod: bool, remat: str = "full",
     t: Dict[str, float] = {}
 
     if kind == "decode":
-        seq_tokens = 1
         # decode floor: every (active) parameter is read once per token;
         # TP splits the read across the model axis
         t["params_read"] = n_active * BF16 / tp

@@ -1,23 +1,27 @@
 # The paper's primary contribution: JIT-specialized SpMM for TPU.
 from .csr import BCSRMatrix, CSRMatrix, random_csr
 from .ccm import ccm_register_decomposition, plan_d_tiles, DTiling
-from .plan import (SpmmPlan, FusedEllWorkspace, ShardedFusedWorkspace,
-                   build_fused_workspace, build_sharded_workspace,
-                   build_plan, partition_rows_for_chips, STRATEGIES)
+from .plan import (SpmmPlan, MixedPlan, MxuBlockRow, FusedEllWorkspace,
+                   ShardedFusedWorkspace, build_fused_workspace,
+                   build_mixed_plan, build_sharded_workspace,
+                   build_plan, partition_rows_for_chips, STRATEGIES,
+                   MXU_TAG, VPU_TAG)
 from .jit_cache import (GLOBAL_CACHE, JitCache, clear_global_cache,
                         mesh_fingerprint)
 from .spmm import (CompiledSpmm, compile_spmm, spmm, chip_mesh,
-                   resolve_chip_mesh, BACKENDS)
+                   resolve_chip_mesh, BACKENDS, FUSED_BACKENDS)
 from . import moe_spmm
 
 __all__ = [
     "BCSRMatrix", "CSRMatrix", "random_csr",
     "ccm_register_decomposition", "plan_d_tiles", "DTiling",
-    "SpmmPlan", "FusedEllWorkspace", "ShardedFusedWorkspace",
-    "build_fused_workspace", "build_sharded_workspace",
+    "SpmmPlan", "MixedPlan", "MxuBlockRow", "FusedEllWorkspace",
+    "ShardedFusedWorkspace", "build_fused_workspace", "build_mixed_plan",
+    "build_sharded_workspace",
     "build_plan", "partition_rows_for_chips", "STRATEGIES",
+    "MXU_TAG", "VPU_TAG",
     "GLOBAL_CACHE", "JitCache", "clear_global_cache", "mesh_fingerprint",
     "CompiledSpmm", "compile_spmm", "spmm", "chip_mesh",
-    "resolve_chip_mesh", "BACKENDS",
+    "resolve_chip_mesh", "BACKENDS", "FUSED_BACKENDS",
     "moe_spmm",
 ]

@@ -126,8 +126,9 @@ GLOBAL_CACHE = JitCache()
 
 def clear_global_cache():
     GLOBAL_CACHE.clear()
-    # the sharded dispatch memoizes jitted shard_map closures at the
+    # the sharded dispatches memoize jitted shard_map closures at the
     # kernel layer; release those executables (and their mesh/device
     # handles) together with the artifacts that were built on them
-    from ..kernels.spmm_ell_fused import _sharded_callable
-    _sharded_callable.cache_clear()
+    from ..kernels import spmm_bcsr_fused, spmm_ell_fused
+    spmm_ell_fused._sharded_callable.cache_clear()
+    spmm_bcsr_fused._sharded_callable.cache_clear()

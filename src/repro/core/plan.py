@@ -31,13 +31,18 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List, Optional, Sequence
+from typing import List, Optional
 
 import numpy as np
 
 from .ccm import DTiling, plan_d_tiles
 
 STRATEGIES = ("row_split", "nnz_split", "merge_split")
+
+# Block-row descriptor tags in the fused workspace: which execution unit
+# a row-block's descriptor drives inside the single mixed dispatch.
+VPU_TAG = 0   # scalar-row ELL gather+FMA (the faithful CCM path)
+MXU_TAG = 1   # (bm x bk) block matmuls (the beyond-paper BCSR path)
 
 
 @dataclasses.dataclass
@@ -219,7 +224,8 @@ def build_plan(row_ptr: np.ndarray, col_indices: np.ndarray, shape,
 
 @dataclasses.dataclass
 class FusedEllWorkspace:
-    """Descriptor-table packing of an :class:`SpmmPlan`.
+    """Descriptor-table packing of an :class:`SpmmPlan` or
+    :class:`MixedPlan`.
 
     Every segment's ``(R_pad, L)`` ELL panel is flattened row-major and
     concatenated into one slot array; each row-block of ``row_block``
@@ -228,61 +234,319 @@ class FusedEllWorkspace:
     analogue of the paper baking per-instance bounds into the generated
     code — so one static grid covers blocks with heterogeneous ``L``.
 
-    Workspace rows are ordered segment-by-segment (plan order), i.e. a
+    Mixed plans additionally tag each descriptor (``blk_tag``) with the
+    execution unit it drives.  A VPU block's slots are the ``(bm, L)``
+    ELL panel (one column id per slot, ``blk_coff == blk_off``); an MXU
+    block-row's slots are its ``(K, bm, bk)`` value panels flattened,
+    while its column stream carries only the ``K`` *block*-column ids —
+    so the two streams diverge and each descriptor gets an independent
+    column offset ``blk_coff``.  ``blk_L`` is the per-block loop trip
+    count either way: padded nnz/row for VPU, block steps ``K`` (the
+    per-block-row ``kmax``) for MXU.
+
+    Workspace rows are ordered block-by-block (plan order), i.e. a
     permutation (plus padding rows) of the output rows; ``inv_perm``
     undoes it with a single gather: ``y = y_ws[inv_perm]``.
     """
-    cols_flat: np.ndarray    # (S,) int32 — slot -> column of X
+    cols_flat: np.ndarray    # (Sc,) int32 — VPU: X row per slot;
+                             #               MXU: block-column per step
     gather_flat: np.ndarray  # (S,) int64 — slot -> index in concat(vals,[0])
     blk_off: np.ndarray      # (B,) int32 — first slot of each row-block
-    blk_L: np.ndarray        # (B,) int32 — padded nnz/row of each block
+    blk_L: np.ndarray        # (B,) int32 — loop trips (nnz/row or K)
     inv_perm: np.ndarray     # (m,) int32 — y[i] = y_ws[inv_perm[i]]
     ws_rows: int             # total workspace rows == B * row_block
     row_block: int
+    blk_tag: Optional[np.ndarray] = None   # (B,) int32 VPU_TAG/MXU_TAG
+    blk_coff: Optional[np.ndarray] = None  # (B,) int32 into cols_flat
+    bk: int = 8              # MXU block width (block-column granularity)
+
+    def __post_init__(self):
+        # pure-VPU packings (the pre-mixed layout): every block is VPU
+        # and the column stream is slot-parallel, so coff == off
+        if self.blk_tag is None:
+            self.blk_tag = np.zeros_like(self.blk_L)
+        if self.blk_coff is None:
+            self.blk_coff = self.blk_off.copy()
 
     @property
     def num_blocks(self) -> int:
         return int(self.blk_off.shape[0])
 
+    @property
+    def has_mxu(self) -> bool:
+        return bool(np.any(self.blk_tag == MXU_TAG))
 
-def build_fused_workspace(plan: SpmmPlan) -> FusedEllWorkspace:
+
+def build_fused_workspace(plan) -> FusedEllWorkspace:
+    """Pack a plan into the single-dispatch descriptor-table layout.
+
+    Accepts either a pure-VPU :class:`SpmmPlan` (the original ELL
+    layout: tags all ``VPU_TAG``, column stream slot-parallel) or a
+    :class:`MixedPlan`, whose MXU block-rows join the same descriptor
+    stream with ``MXU_TAG`` so the whole mixed plan still lowers as ONE
+    ``pallas_call``.
+    """
+    if isinstance(plan, MixedPlan):
+        return _pack_workspace(plan, mixed_kernel=True)
+    # a pure-VPU SpmmPlan is the degenerate mixed plan (identity nnz
+    # map, no MXU block-rows) — ONE packing loop serves both layouts,
+    # so a packing-invariant fix can never diverge the two backends.
+    # mixed_kernel=False skips the MXU-branch slot-stream floor, keeping
+    # the ELL layout exactly slot-parallel (cols size == gather size).
+    trivial = MixedPlan(
+        strategy=plan.strategy, m=plan.m, n=plan.n, nnz=plan.nnz,
+        d_tiling=plan.d_tiling, row_block=plan.row_block, bk=8,
+        vpu=plan, vpu_rows=np.arange(plan.m, dtype=np.int64),
+        vpu_nnz_map=np.arange(plan.nnz, dtype=np.int64),
+        mxu_rows=[], plan_seconds=plan.plan_seconds,
+        fingerprint=plan.fingerprint)
+    return _pack_workspace(trivial, mixed_kernel=False)
+
+
+# ---------------------------------------------------------------------------
+# Mixed VPU/MXU plans: per-row-block execution-unit selection.  The MXU
+# (128x128 systolic array) is where TPU FLOPs live, but a (bm x bk)
+# block matmul on a nearly-empty block wastes bk x the VPU's work — so
+# each bm-aligned block-row is tagged at plan time by comparing its
+# padded MXU work (K * bm * bk MACs per output column) against its
+# padded VPU work (Lmax * bm), discounted by the MXU's throughput edge.
+# VPU-tagged rows then flow through the usual strategy-driven ELL
+# grouping; MXU block-rows keep their natural (block-aligned) order.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class MxuBlockRow:
+    """One bm-aligned block-row lowered as K (bm x bk) block matmuls."""
+    row0: int                # first original row (multiple of row_block)
+    nrows: int               # real rows covered (< row_block on the tail)
+    bcols: np.ndarray        # (K,) int32 — occupied block-column ids
+    gather: np.ndarray       # (K, bm, bk) int64 into concat(vals,[0])
+
+    @property
+    def K(self) -> int:
+        return int(self.bcols.shape[0])
+
+
+@dataclasses.dataclass
+class MixedPlan:
+    """Workload division across BOTH execution units (tentpole of the
+    BCSR-fusion PR): VPU rows carry an ordinary :class:`SpmmPlan` built
+    on their sub-structure, MXU rows a list of :class:`MxuBlockRow`.
+    ``build_fused_workspace`` packs both into one descriptor stream.
+    """
+    strategy: str
+    m: int
+    n: int
+    nnz: int
+    d_tiling: DTiling
+    row_block: int
+    bk: int
+    vpu: SpmmPlan            # ELL plan over vpu_rows (local row ids)
+    vpu_rows: np.ndarray     # (mv,) int64 original row ids (ascending)
+    vpu_nnz_map: np.ndarray  # (sub_nnz,) int64 global nnz id per sub nnz
+    mxu_rows: List[MxuBlockRow]
+    plan_seconds: float
+    fingerprint: str
+
+    @property
+    def padded_nnz(self) -> int:
+        """Padded MACs per output column: bm*L per VPU block plus
+        bm*bk*K per MXU block-row — the mixed-balance metric."""
+        vpu = self.vpu.padded_nnz
+        mxu = sum(b.K * self.row_block * self.bk for b in self.mxu_rows)
+        return vpu + mxu
+
+    @property
+    def efficiency(self) -> float:
+        return self.nnz / max(self.padded_nnz, 1)
+
+    @property
+    def mxu_share(self) -> float:
+        """Fraction of nonzeros routed to the MXU (1.0 = pure BCSR)."""
+        sub_nnz = int(self.vpu_nnz_map.shape[0])
+        return (self.nnz - sub_nnz) / max(self.nnz, 1)
+
+    def stats(self) -> dict:
+        return {
+            "strategy": self.strategy,
+            "vpu_segments": len(self.vpu.segments),
+            "mxu_block_rows": len(self.mxu_rows),
+            "nnz": self.nnz,
+            "padded_nnz": self.padded_nnz,
+            "efficiency": round(self.efficiency, 4),
+            "mxu_share": round(self.mxu_share, 4),
+            "plan_seconds": self.plan_seconds,
+        }
+
+
+def build_mixed_plan(row_ptr: np.ndarray, col_indices: np.ndarray, shape,
+                     d: int, *, strategy: str = "nnz_split",
+                     row_block: int = 8, bk: int = 8,
+                     mxu_gain: float = 4.0, fingerprint: str = "",
+                     max_dt: int = 512,
+                     merge_target_segments: int = 16) -> MixedPlan:
+    """Tag each bm-aligned block-row VPU or MXU and plan both halves.
+
+    A block-row goes MXU when ``K * bk <= mxu_gain * Lmax`` — its padded
+    matmul work, discounted by the MXU's per-MAC throughput advantage
+    ``mxu_gain``, beats the ELL path's padded FMA work.  ``mxu_gain=0``
+    forces a pure-VPU plan; ``mxu_gain=inf`` a pure-BCSR one.  Dense or
+    block-clustered regions go MXU, ragged sparse rows stay VPU — one
+    plan, both units, still one dispatch after packing.
+    """
+    t0 = time.perf_counter()
+    if strategy not in STRATEGIES:
+        raise ValueError(f"strategy must be one of {STRATEGIES}")
+    row_ptr = np.asarray(row_ptr)
+    col_indices = np.asarray(col_indices)
+    m, n = shape
+    nnz = int(col_indices.shape[0])
+    lengths = np.diff(row_ptr)
+    bm = row_block
+
+    mxu_rows: List[MxuBlockRow] = []
+    vpu_row_parts: List[np.ndarray] = []
+    for g in range(-(-m // bm) if m else 0):
+        r0, r1 = g * bm, min((g + 1) * bm, m)
+        s, e = int(row_ptr[r0]), int(row_ptr[r1])
+        if s == e:                       # empty block-row: VPU is free
+            vpu_row_parts.append(np.arange(r0, r1, dtype=np.int64))
+            continue
+        cols = col_indices[s:e]
+        bcols = np.unique(cols // bk)
+        Lmax = int(lengths[r0:r1].max(initial=0))
+        if bcols.size * bk > mxu_gain * Lmax:
+            vpu_row_parts.append(np.arange(r0, r1, dtype=np.int64))
+            continue
+        # pack the block-row: one (bm, bk) gather panel per block-column
+        rr = np.repeat(np.arange(r1 - r0, dtype=np.int64),
+                       lengths[r0:r1])
+        kpos = np.searchsorted(bcols, cols // bk)
+        gather = np.full((bcols.size, bm, bk), nnz, dtype=np.int64)
+        gather[kpos, rr, cols % bk] = np.arange(s, e, dtype=np.int64)
+        mxu_rows.append(MxuBlockRow(row0=r0, nrows=r1 - r0,
+                                    bcols=bcols.astype(np.int32),
+                                    gather=gather))
+
+    vpu_rows = (np.concatenate(vpu_row_parts) if vpu_row_parts
+                else np.zeros(0, dtype=np.int64))
+    # sub-structure of the VPU rows (original relative order) plus the
+    # map from sub-nnz ids back to global nnz ids for gather re-basing
+    sub_lengths = lengths[vpu_rows]
+    sub_ptr = np.zeros(vpu_rows.size + 1, dtype=np.int64)
+    np.cumsum(sub_lengths, out=sub_ptr[1:])
+    sub_nnz = int(sub_ptr[-1])
+    starts = row_ptr[vpu_rows]
+    nnz_map = (np.repeat(starts, sub_lengths)
+               + np.arange(sub_nnz, dtype=np.int64)
+               - np.repeat(sub_ptr[:-1], sub_lengths))
+    sub_cols = col_indices[nnz_map] if sub_nnz else np.zeros(0, np.int32)
+
+    vpu_plan = build_plan(sub_ptr, sub_cols, (vpu_rows.size, n), d,
+                          strategy=strategy, row_block=bm,
+                          fingerprint=f"{fingerprint}/vpu",
+                          max_dt=max_dt,
+                          merge_target_segments=merge_target_segments)
+
+    return MixedPlan(strategy=strategy, m=m, n=n, nnz=nnz,
+                     d_tiling=vpu_plan.d_tiling, row_block=bm, bk=bk,
+                     vpu=vpu_plan, vpu_rows=vpu_rows, vpu_nnz_map=nnz_map,
+                     mxu_rows=mxu_rows,
+                     plan_seconds=time.perf_counter() - t0,
+                     fingerprint=fingerprint)
+
+
+def _pack_workspace(plan: MixedPlan, *,
+                    mixed_kernel: bool) -> FusedEllWorkspace:
+    """Pack a :class:`MixedPlan` into one tagged descriptor stream —
+    THE packing loop, shared by both fused backends (pure-VPU plans
+    arrive as degenerate mixed plans, see ``build_fused_workspace``).
+
+    VPU blocks first (plan order, gather remapped from sub-nnz to global
+    nnz ids), then the MXU block-rows.  Column and slot streams advance
+    independently (see :class:`FusedEllWorkspace`).  ``mixed_kernel``
+    marks workspaces destined for ``spmm_bcsr_fused`` (identity remap
+    skipped only when False, and the slot-stream floor applied only
+    when True — the pure ELL kernel needs neither).
+    """
     bm = plan.row_block
+    nnz = plan.nnz
+    sub_nnz = int(plan.vpu_nnz_map.shape[0])
     cols_parts: List[np.ndarray] = []
     gather_parts: List[np.ndarray] = []
-    offs: List[np.ndarray] = []
-    Ls: List[np.ndarray] = []
+    tags: List[int] = []
+    offs: List[int] = []
+    coffs: List[int] = []
+    Ls: List[int] = []
     inv_perm = np.zeros(plan.m, dtype=np.int32)
     ws_row = 0
     slot = 0
-    for seg in plan.segments:
+    cpos = 0
+    for seg in plan.vpu.segments:
         Lp = max(seg.L, 1)
-        assert seg.cols_pad.shape == (seg.R_pad, Lp)
         cols_parts.append(seg.cols_pad.reshape(-1))
-        gather_parts.append(seg.gather_idx.reshape(-1))
+        # sub-nnz ids -> global nnz ids; the sub sentinel becomes global
+        g = seg.gather_idx.reshape(-1)
+        if not mixed_kernel:
+            # degenerate wrap: the nnz map is the identity by
+            # construction, so the plan's gather ids ARE global
+            gather_parts.append(g)
+        elif sub_nnz == 0:        # all-empty VPU rows: pure sentinel
+            gather_parts.append(np.full(g.shape, nnz, np.int64))
+        else:
+            safe = np.minimum(g, sub_nnz - 1)
+            gather_parts.append(
+                np.where(g < sub_nnz, plan.vpu_nnz_map[safe], nnz))
         nblk = seg.R_pad // bm
-        offs.append(slot + np.arange(nblk, dtype=np.int64) * (bm * Lp))
-        Ls.append(np.full(nblk, Lp, dtype=np.int32))
-        inv_perm[seg.row_ids] = ws_row + np.arange(seg.R, dtype=np.int32)
+        for b in range(nblk):
+            tags.append(VPU_TAG)
+            offs.append(slot + b * bm * Lp)
+            coffs.append(cpos + b * bm * Lp)
+            Ls.append(Lp)
+        inv_perm[plan.vpu_rows[seg.row_ids]] = (
+            ws_row + np.arange(seg.R, dtype=np.int32))
         ws_row += seg.R_pad
         slot += seg.R_pad * Lp
+        cpos += seg.R_pad * Lp
+    for blk in plan.mxu_rows:
+        tags.append(MXU_TAG)
+        offs.append(slot)
+        coffs.append(cpos)
+        Ls.append(blk.K)
+        cols_parts.append(blk.bcols)
+        gather_parts.append(blk.gather.reshape(-1))
+        inv_perm[blk.row0:blk.row0 + blk.nrows] = (
+            ws_row + np.arange(blk.nrows, dtype=np.int32))
+        ws_row += bm
+        slot += blk.K * bm * plan.bk
+        cpos += blk.K
 
-    # slot indices travel as int32 (SMEM descriptors + cols_flat): the
-    # padded slot space must fit, or offsets would wrap silently
-    assert slot < (1 << 31), ("fused workspace exceeds int32 slot space; "
-                              "padded_nnz too large", slot)
+    assert slot < (1 << 31), ("mixed workspace exceeds int32 slot space",
+                              slot)
 
-    def cat(parts, dtype):
-        return (np.concatenate(parts).astype(dtype) if parts
-                else np.zeros(0, dtype))
+    def cat(parts, dtype, floor, min_size):
+        out = (np.concatenate(parts).astype(dtype) if parts
+               else np.zeros(0, dtype))
+        if out.size < min_size and tags and mixed_kernel:
+            # the mixed kernel traces BOTH units (lax.cond), so the slot
+            # stream must admit the MXU branch's (bm*bk,) slice even on
+            # tiny or pure-VPU plans; inert sentinel entries pad it up
+            # (zero-length operands don't block-spec either)
+            pad = np.full(min_size - out.size, floor, dtype)
+            out = np.concatenate([out, pad])
+        return out
 
     ws = FusedEllWorkspace(
-        cols_flat=cat(cols_parts, np.int32),
-        gather_flat=cat(gather_parts, np.int64),
-        blk_off=cat(offs, np.int32),
-        blk_L=cat(Ls, np.int32),
+        cols_flat=cat(cols_parts, np.int32, 0, 1),
+        gather_flat=cat(gather_parts, np.int64, nnz, bm * plan.bk),
+        blk_off=np.asarray(offs, np.int32),
+        blk_L=np.asarray(Ls, np.int32),
         inv_perm=inv_perm,
         ws_rows=ws_row,
-        row_block=bm)
+        row_block=bm,
+        blk_tag=np.asarray(tags, np.int32),
+        blk_coff=np.asarray(coffs, np.int32),
+        bk=plan.bk)
     assert ws.ws_rows == ws.num_blocks * bm
     return ws
 
@@ -294,7 +558,15 @@ def build_fused_workspace(plan: SpmmPlan) -> FusedEllWorkspace:
 # ---------------------------------------------------------------------------
 
 def partition_rows_for_chips(row_ptr: np.ndarray, n_chips: int,
-                             strategy: str = "nnz_split") -> np.ndarray:
+                             strategy: str = "nnz_split", *,
+                             align: int = 1) -> np.ndarray:
+    """Chip row boundaries by the given strategy.
+
+    ``align`` rounds the interior bounds to multiples of that many rows
+    — the BCSR/mixed path passes its ``row_block`` so chips own whole
+    block-rows and no (bm x bk) block ever straddles a chip (the final
+    bound stays ``m``; the ragged tail pads inside its own chip).
+    """
     m = len(row_ptr) - 1
     nnz = int(row_ptr[-1])
     if strategy == "row_split":
@@ -310,7 +582,11 @@ def partition_rows_for_chips(row_ptr: np.ndarray, n_chips: int,
         bounds = np.concatenate([[0], np.searchsorted(cum, targets), [m]])
     else:
         raise ValueError(strategy)
-    return np.clip(bounds.astype(np.int64), 0, m)
+    bounds = np.clip(bounds.astype(np.int64), 0, m)
+    if align > 1:
+        bounds[1:-1] = ((bounds[1:-1] + align // 2) // align) * align
+        bounds = np.maximum.accumulate(np.clip(bounds, 0, m))
+    return bounds
 
 
 # ---------------------------------------------------------------------------
@@ -341,20 +617,33 @@ class ShardedFusedWorkspace:
     ``(n_chips * ws_rows, d)`` workspace output.
     """
     blk_off: np.ndarray      # (C, B) int32 — first slot per row-block
-    blk_L: np.ndarray        # (C, B) int32 — padded nnz/row (0 == pad block)
-    cols_flat: np.ndarray    # (C, S) int32 — slot -> X row
+    blk_L: np.ndarray        # (C, B) int32 — loop trips (0 == pad block)
+    cols_flat: np.ndarray    # (C, Sc) int32 — slot -> X row / block-column
     gather_flat: np.ndarray  # (C, S) int64 — slot -> GLOBAL concat(vals,[0])
     inv_perm: np.ndarray     # (m,) int32 into the flattened (C*ws_rows,) rows
     bounds: np.ndarray       # (C+1,) int64 — chip c owns rows [b[c], b[c+1])
     ws_rows: int             # per-chip workspace rows == B * row_block
     row_block: int
     n_chips: int
-    shard_plans: List[SpmmPlan]   # the per-chip sub-plans (stats/debug)
+    shard_plans: List       # per-chip SpmmPlan/MixedPlan (stats/debug)
+    blk_tag: Optional[np.ndarray] = None   # (C, B) int32 VPU_TAG/MXU_TAG
+    blk_coff: Optional[np.ndarray] = None  # (C, B) int32 into cols_flat
+    bk: int = 8
+
+    def __post_init__(self):
+        if self.blk_tag is None:
+            self.blk_tag = np.zeros_like(self.blk_L)
+        if self.blk_coff is None:
+            self.blk_coff = self.blk_off.copy()
 
     @property
     def num_blocks(self) -> int:
         """Common per-chip block count B (0 iff the matrix has no rows)."""
         return int(self.blk_off.shape[1])
+
+    @property
+    def has_mxu(self) -> bool:
+        return bool(np.any(self.blk_tag == MXU_TAG))
 
     @property
     def nnz(self) -> int:
@@ -363,8 +652,11 @@ class ShardedFusedWorkspace:
     @property
     def padded_nnz(self) -> int:
         """Real per-chip padded work (pad blocks run zero trips, so they
-        are excluded — this is what each chip's nnz loop executes)."""
-        return int(self.row_block * self.blk_L.astype(np.int64).sum())
+        are excluded — this is what each chip's trip loops execute).  An
+        MXU block's trip covers a (bm x bk) panel, a VPU trip bm rows."""
+        L = self.blk_L.astype(np.int64)
+        per_trip = np.where(self.blk_tag == MXU_TAG, self.bk, 1)
+        return int(self.row_block * (L * per_trip).sum())
 
     @property
     def efficiency(self) -> float:
@@ -377,20 +669,30 @@ def build_sharded_workspace(row_ptr: np.ndarray, col_indices: np.ndarray,
                             shape, d: int, *, n_chips: int,
                             strategy: str = "nnz_split", row_block: int = 8,
                             fingerprint: str = "", max_dt: int = 512,
-                            merge_target_segments: int = 16
+                            merge_target_segments: int = 16,
+                            backend: str = "pallas_ell", bk: int = 8,
+                            mxu_gain: float = 4.0
                             ) -> ShardedFusedWorkspace:
     """Partition rows across ``n_chips`` and pack one fused workspace per
     chip (see :class:`ShardedFusedWorkspace`).  Host-only — needs no
-    devices; the mesh enters at dispatch time."""
+    devices; the mesh enters at dispatch time.
+
+    ``backend="pallas_bcsr"`` plans each chip range as a mixed VPU/MXU
+    plan (see :func:`build_mixed_plan`) and aligns the chip boundaries
+    to ``row_block`` so the partitioner sees block-row — not scalar-row
+    — boundaries and no (bm x bk) block straddles a chip.
+    """
     if n_chips < 1:
         raise ValueError(f"n_chips must be >= 1, got {n_chips}")
+    mixed = backend == "pallas_bcsr"
     row_ptr = np.asarray(row_ptr)
     col_indices = np.asarray(col_indices)
     m, n = shape
     nnz = int(col_indices.shape[0])
-    bounds = partition_rows_for_chips(row_ptr, n_chips, strategy)
+    bounds = partition_rows_for_chips(row_ptr, n_chips, strategy,
+                                      align=row_block if mixed else 1)
 
-    plans: List[SpmmPlan] = []
+    plans: List = []
     shards: List[FusedEllWorkspace] = []
     bases: List[int] = []
     for c in range(n_chips):
@@ -398,28 +700,41 @@ def build_sharded_workspace(row_ptr: np.ndarray, col_indices: np.ndarray,
         base = int(row_ptr[r0])
         sub_ptr = row_ptr[r0:r1 + 1] - base
         sub_cols = col_indices[base:int(row_ptr[r1])]
-        plan = build_plan(sub_ptr, sub_cols, (r1 - r0, n), d,
-                          strategy=strategy, row_block=row_block,
-                          fingerprint=f"{fingerprint}/chip{c}",
-                          max_dt=max_dt,
-                          merge_target_segments=merge_target_segments)
+        if mixed:
+            plan = build_mixed_plan(
+                sub_ptr, sub_cols, (r1 - r0, n), d, strategy=strategy,
+                row_block=row_block, bk=bk, mxu_gain=mxu_gain,
+                fingerprint=f"{fingerprint}/chip{c}", max_dt=max_dt,
+                merge_target_segments=merge_target_segments)
+        else:
+            plan = build_plan(sub_ptr, sub_cols, (r1 - r0, n), d,
+                              strategy=strategy, row_block=row_block,
+                              fingerprint=f"{fingerprint}/chip{c}",
+                              max_dt=max_dt,
+                              merge_target_segments=merge_target_segments)
         plans.append(plan)
         shards.append(build_fused_workspace(plan))
         bases.append(base)
 
     B = max(ws.num_blocks for ws in shards)
-    S = max((int(ws.cols_flat.shape[0]) for ws in shards), default=0)
+    S = max((int(ws.gather_flat.shape[0]) for ws in shards), default=0)
+    Sc = max((int(ws.cols_flat.shape[0]) for ws in shards), default=0)
     ws_rows = B * row_block
     blk_off = np.zeros((n_chips, B), np.int32)
     blk_L = np.zeros((n_chips, B), np.int32)       # pad blocks: L == 0
-    cols_flat = np.zeros((n_chips, S), np.int32)
+    blk_tag = np.zeros((n_chips, B), np.int32)
+    blk_coff = np.zeros((n_chips, B), np.int32)
+    cols_flat = np.zeros((n_chips, Sc), np.int32)
     gather_flat = np.full((n_chips, S), nnz, np.int64)  # pad -> 0.0 sentinel
     inv_perm = np.zeros(m, np.int32)
     for c, ws in enumerate(shards):
-        nb, ns = ws.num_blocks, int(ws.cols_flat.shape[0])
+        nb = ws.num_blocks
+        ns, nc = int(ws.gather_flat.shape[0]), int(ws.cols_flat.shape[0])
         blk_off[c, :nb] = ws.blk_off
         blk_L[c, :nb] = ws.blk_L
-        cols_flat[c, :ns] = ws.cols_flat
+        blk_tag[c, :nb] = ws.blk_tag
+        blk_coff[c, :nb] = ws.blk_coff
+        cols_flat[c, :nc] = ws.cols_flat
         # re-base shard-local value indices to the global vals buffer;
         # the shard's zero sentinel (its local nnz) becomes the global one
         sub_nnz = int(plans[c].nnz)
@@ -432,4 +747,4 @@ def build_sharded_workspace(row_ptr: np.ndarray, col_indices: np.ndarray,
         blk_off=blk_off, blk_L=blk_L, cols_flat=cols_flat,
         gather_flat=gather_flat, inv_perm=inv_perm, bounds=bounds,
         ws_rows=ws_rows, row_block=row_block, n_chips=n_chips,
-        shard_plans=plans)
+        shard_plans=plans, blk_tag=blk_tag, blk_coff=blk_coff, bk=bk)

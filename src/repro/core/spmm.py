@@ -13,7 +13,12 @@ Backends:
                ``n_chips`` the plan is row-partitioned across chips
                (``partition_rows_for_chips``) and each chip runs its
                shard as one pallas_call under shard_map.
-  pallas_bcsr  beyond-paper MXU block-sparse Pallas kernel
+  pallas_bcsr  MXU-enabled MIXED plan: each bm-aligned row-block is
+               tagged VPU (ELL gather+FMA) or MXU ((bm x bk) block
+               matmuls) at plan time (``build_mixed_plan``), and the
+               whole mixed plan is STILL one pallas_call — or one per
+               chip under mesh/n_chips, with chip boundaries aligned to
+               block-rows.  ``mxu_gain`` tunes the tagging heuristic.
   ref          pure-jnp gather/segment-sum (jit-friendly; used inside
                the model stack and the 512-device dry-run)
   dense        densified matmul (tiny tests only)
@@ -21,7 +26,6 @@ Backends:
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional
 
 import jax
@@ -30,24 +34,33 @@ import numpy as np
 from jax.sharding import Mesh
 
 from . import ccm
-from .csr import BCSRMatrix, CSRMatrix
+from .csr import CSRMatrix
 from .jit_cache import GLOBAL_CACHE, JitCache, mesh_fingerprint
-from .plan import (ShardedFusedWorkspace, SpmmPlan, build_fused_workspace,
-                   build_plan, build_sharded_workspace)
+from .plan import (MixedPlan, ShardedFusedWorkspace, SpmmPlan,
+                   build_fused_workspace, build_mixed_plan, build_plan,
+                   build_sharded_workspace)
 from ..kernels.ops import resolve_interpret
 
 BACKENDS = ("pallas_ell", "pallas_bcsr", "ref", "dense", "auto")
+
+# backends that lower through the fused descriptor-table dispatch (and
+# therefore support mesh/n_chips sharding)
+FUSED_BACKENDS = ("pallas_ell", "pallas_bcsr")
 
 
 def _resolve_backend(backend: str, *, sharded: bool = False) -> str:
     if backend != "auto":
         return backend
+    if jax.default_backend() == "tpu":
+        # the mixed fused path: MXU where block structure pays, VPU
+        # elsewhere — sharded or not, it is the TPU serving default
+        return "pallas_bcsr"
     if sharded:
         # mesh/n_chips is a fused-path feature; an explicit sharding
         # request must not fall back to the single-device ref backend
         # (on CPU the fused kernel runs via interpret mode)
         return "pallas_ell"
-    return "pallas_ell" if jax.default_backend() == "tpu" else "ref"
+    return "ref"
 
 
 def chip_mesh(n_chips: int) -> Mesh:
@@ -82,13 +95,16 @@ class _FusedConsts:
     """Device-resident fused-plan constants: ONE descriptor table + flat
     slot arrays for all segments, so the forward pass is a single
     pallas_call plus one inverse-permutation gather (no per-segment
-    dispatch loop, no scatters)."""
+    dispatch loop, no scatters).  Mixed (pallas_bcsr) plans additionally
+    carry the per-block execution-unit tag and column-stream offsets."""
     blk_off: jax.Array       # (B,) int32 — first slot per row-block
-    blk_L: jax.Array         # (B,) int32 — padded nnz/row per row-block
-    cols_flat: jax.Array     # (S,) int32 — slot -> X row
+    blk_L: jax.Array         # (B,) int32 — loop trips per row-block
+    cols_flat: jax.Array     # (Sc,) int32 — X row / block-column stream
     gather_flat: jax.Array   # (S,) int   — slot -> concat(vals,[0]) index
     inv_perm: jax.Array      # (m,) int32 — output row -> workspace row
     num_blocks: int
+    blk_tag: Optional[jax.Array] = None   # (B,) int32 — VPU/MXU tag
+    blk_coff: Optional[jax.Array] = None  # (B,) int32 into cols_flat
 
 
 @dataclasses.dataclass
@@ -99,13 +115,15 @@ class _ShardedConsts:
     the mesh the shard_map dispatch runs over."""
     blk_off: jax.Array       # (C, B) int32
     blk_L: jax.Array         # (C, B) int32
-    cols_flat: jax.Array     # (C, S) int32
+    cols_flat: jax.Array     # (C, Sc) int32
     gather_flat: jax.Array   # (C, S) int — slot -> GLOBAL concat(vals,[0])
     inv_perm: jax.Array      # (m,) int32 into flattened workspace rows
     ws_rows: int             # per-chip workspace rows
     num_blocks: int          # common per-chip block count B
     n_chips: int
     mesh: Mesh
+    blk_tag: Optional[jax.Array] = None   # (C, B) int32 — VPU/MXU tag
+    blk_coff: Optional[jax.Array] = None  # (C, B) int32 into cols_flat
 
 
 class CompiledSpmm:
@@ -115,20 +133,24 @@ class CompiledSpmm:
     def __init__(self, a: CSRMatrix, d: int, *, strategy: str,
                  backend: str, bm: int = 8, interpret: Optional[bool] = None,
                  mesh: Optional[Mesh] = None, n_chips: Optional[int] = None,
+                 bk: int = 8, mxu_gain: float = 4.0,
                  cache: JitCache = GLOBAL_CACHE):
         self.backend = _resolve_backend(
             backend, sharded=mesh is not None or n_chips is not None)
         self.strategy = strategy
         self.bm = bm
+        self.bk = bk
+        self.mxu_gain = mxu_gain
         # resolved ONCE: the effective flag is part of the compiled
         # artifact's identity (and of every jit-cache key touching it)
         self.interpret = resolve_interpret(interpret)
         self.mesh = resolve_chip_mesh(mesh, n_chips)
         self.n_chips = None if self.mesh is None else int(self.mesh.size)
-        if self.mesh is not None and self.backend != "pallas_ell":
+        if self.mesh is not None and self.backend not in FUSED_BACKENDS:
             raise ValueError(
-                f"mesh/n_chips sharding is a fused pallas_ell feature; "
-                f"backend={self.backend!r} is single-device")
+                f"mesh/n_chips sharding is a fused-dispatch feature "
+                f"({'/'.join(FUSED_BACKENDS)}); backend="
+                f"{self.backend!r} is single-device")
         self.cache = cache
         self.d = d
         self.shape = a.shape
@@ -137,18 +159,24 @@ class CompiledSpmm:
         self._col_indices = a.col_indices
         self._fingerprint = a.fingerprint
         self._nnz = a.nnz
+        # the mixed/MXU kernel slices (bk, dt) X panels per block-column,
+        # so X rows are padded up to the block-column grid
+        self._x_rows_pad = -(-a.shape[1] // bk) * bk
 
+        self.plan: Optional[SpmmPlan] = None
+        self.mixed_plan: Optional[MixedPlan] = None
+        self._fused: Optional[_FusedConsts] = None
         self._sharded: Optional[_ShardedConsts] = None
-        if self.backend == "pallas_ell" and self.mesh is not None:
+        if self.backend in FUSED_BACKENDS and self.mesh is not None:
             # the sharded workspace re-plans every chip range itself, so
             # packing a global plan here would duplicate O(padded_nnz)
             # host work; only the d tiling is needed from this level
-            self.plan: Optional[SpmmPlan] = None
             self.d_tiling = ccm.plan_d_tiles(d, rows_in_flight=bm)
             sw: ShardedFusedWorkspace = build_sharded_workspace(
                 a.row_ptr, a.col_indices, a.shape, d,
                 n_chips=self.n_chips, strategy=strategy, row_block=bm,
-                fingerprint=a.fingerprint)
+                fingerprint=a.fingerprint, backend=self.backend,
+                bk=bk, mxu_gain=mxu_gain)
             self.sharded_workspace = sw
             self._sharded = _ShardedConsts(
                 blk_off=jnp.asarray(sw.blk_off),
@@ -159,51 +187,32 @@ class CompiledSpmm:
                 ws_rows=sw.ws_rows,
                 num_blocks=sw.num_blocks,
                 n_chips=sw.n_chips,
-                mesh=self.mesh)
+                mesh=self.mesh,
+                blk_tag=jnp.asarray(sw.blk_tag),
+                blk_coff=jnp.asarray(sw.blk_coff))
+        elif self.backend == "pallas_bcsr":
+            self.mixed_plan = build_mixed_plan(
+                a.row_ptr, a.col_indices, a.shape, d, strategy=strategy,
+                row_block=bm, bk=bk, mxu_gain=mxu_gain,
+                fingerprint=a.fingerprint)
+            self.d_tiling = self.mixed_plan.d_tiling
         else:
             self.plan = build_plan(
                 a.row_ptr, a.col_indices, a.shape, d, strategy=strategy,
                 row_block=bm, fingerprint=a.fingerprint)
             self.d_tiling = self.plan.d_tiling
 
-        if self._sharded is None and self.backend == "pallas_ell":
-            ws = build_fused_workspace(self.plan)
+        if self._sharded is None and self.backend in FUSED_BACKENDS:
+            ws = build_fused_workspace(self.mixed_plan or self.plan)
             self._fused = _FusedConsts(
                 blk_off=jnp.asarray(ws.blk_off),
                 blk_L=jnp.asarray(ws.blk_L),
                 cols_flat=jnp.asarray(ws.cols_flat),
                 gather_flat=jnp.asarray(ws.gather_flat),
                 inv_perm=jnp.asarray(ws.inv_perm),
-                num_blocks=ws.num_blocks)
-        elif self.backend == "pallas_bcsr":
-            bk = 8
-            # 1-based nnz ids as block "values": 0 == empty slot.  Exact
-            # in f32 up to 2^24 nonzeros (plan-time only; asserted).
-            assert a.nnz < (1 << 24), "bcsr planner id encoding limit"
-            struct_only = CSRMatrix(a.shape, a.row_ptr, a.col_indices,
-                                    np.arange(1, a.nnz + 1, dtype=np.float32))
-            bcsr = BCSRMatrix.from_csr(struct_only, bm=bm, bk=bk)
-            counts = np.diff(bcsr.block_row_ptr)
-            kmax = max(int(counts.max(initial=0)), 1)
-            nsteps = bcsr.n_block_rows * kmax
-            # slot -> nnz gather (value-generic block materialization);
-            # index a.nnz gathers the appended 0.0
-            slot = np.full((nsteps, bm, bk), a.nnz, dtype=np.int64)
-            bcols = np.zeros(nsteps, dtype=np.int32)
-            host_blocks = np.asarray(bcsr.block_vals)
-            occupied = host_blocks > 0
-            ids = np.where(occupied, host_blocks.astype(np.int64) - 1, a.nnz)
-            for i in range(bcsr.n_block_rows):
-                s, e = int(bcsr.block_row_ptr[i]), int(bcsr.block_row_ptr[i + 1])
-                for j, p in enumerate(range(s, e)):
-                    slot[i * kmax + j] = ids[p]
-                    bcols[i * kmax + j] = bcsr.block_cols[p]
-            self._bcsr_slot = jnp.asarray(slot)
-            self._bcsr_cols = jnp.asarray(bcols)
-            self._bcsr_kmax = kmax
-            self._bcsr_bk = bk
-            self._bcsr_m_pad = bcsr.shape[0]
-            self._bcsr_n_pad = bcsr.shape[1]
+                num_blocks=ws.num_blocks,
+                blk_tag=jnp.asarray(ws.blk_tag),
+                blk_coff=jnp.asarray(ws.blk_coff))
         elif self.backend == "ref":
             self._cols = jnp.asarray(a.col_indices)
 
@@ -290,14 +299,34 @@ class CompiledSpmm:
             # single inverse-permutation gather replaces N scatters
             return y_ws[fw.inv_perm, :d]
         if backend == "pallas_bcsr":
-            from ..kernels.ops import spmm_bcsr_op
-            block_vals = vals_ext[self._bcsr_slot]
-            n_pad = self._bcsr_n_pad
-            if x_pad.shape[0] < n_pad:
-                x_pad = jnp.pad(x_pad, ((0, n_pad - x_pad.shape[0]), (0, 0)))
-            y = spmm_bcsr_op(self._bcsr_cols, block_vals, x_pad,
-                             kmax=self._bcsr_kmax, interpret=self.interpret)
-            return y[:m, :d]
+            # the mixed VPU/MXU plan lowers through the same descriptor-
+            # table machinery as pallas_ell — one dispatch (per chip)
+            if x_pad.shape[0] < self._x_rows_pad:
+                x_pad = jnp.pad(
+                    x_pad,
+                    ((0, self._x_rows_pad - x_pad.shape[0]), (0, 0)))
+            if self._sharded is not None:
+                from ..kernels.ops import spmm_bcsr_fused_sharded_op
+                sw = self._sharded
+                if sw.num_blocks == 0:
+                    return jnp.zeros((m, d), jnp.float32)
+                vals_flat = vals_ext[sw.gather_flat]
+                y_ws = spmm_bcsr_fused_sharded_op(
+                    sw.blk_tag, sw.blk_off, sw.blk_coff, sw.blk_L,
+                    sw.cols_flat, vals_flat, x_pad, mesh=sw.mesh,
+                    bm=self.bm, bk=self.bk, interpret=self.interpret)
+                y_flat = y_ws.reshape(sw.n_chips * sw.ws_rows, -1)
+                return y_flat[sw.inv_perm, :d]
+            from ..kernels.ops import spmm_bcsr_fused_op
+            fw = self._fused
+            if fw.num_blocks == 0:
+                return jnp.zeros((m, d), jnp.float32)
+            vals_flat = vals_ext[fw.gather_flat]
+            y_ws = spmm_bcsr_fused_op(
+                fw.blk_tag, fw.blk_off, fw.blk_coff, fw.blk_L,
+                fw.cols_flat, vals_flat, x_pad, bm=self.bm, bk=self.bk,
+                interpret=self.interpret)
+            return y_ws[fw.inv_perm, :d]
         raise ValueError(self.backend)
 
     # -- gradients ----------------------------------------------------------
@@ -312,14 +341,14 @@ class CompiledSpmm:
                           np.zeros(self._nnz, np.float32))
             t_struct, order = a.transpose_structure()
             key = ("spmmT", self._fingerprint, self.d, self.strategy,
-                   self.backend, self.bm, self.interpret,
-                   mesh_fingerprint(self.mesh))
+                   self.backend, self.bm, self.bk, self.mxu_gain,
+                   self.interpret, mesh_fingerprint(self.mesh))
             self._transpose = self.cache.get_or_build(
                 key, lambda: CompiledSpmm(
                     t_struct, self.d, strategy=self.strategy,
-                    backend=self.backend, bm=self.bm,
-                    interpret=self.interpret, mesh=self.mesh,
-                    cache=self.cache))
+                    backend=self.backend, bm=self.bm, bk=self.bk,
+                    mxu_gain=self.mxu_gain, interpret=self.interpret,
+                    mesh=self.mesh, cache=self.cache))
             self._t_order = jnp.asarray(order.astype(np.int32))
         vals_t = vals[self._t_order]
         return self._transpose._forward(vals_t, dy)
@@ -332,23 +361,28 @@ def compile_spmm(a: CSRMatrix, d: int, *, strategy: str = "nnz_split",
                  backend: str = "auto", bm: int = 8,
                  interpret: Optional[bool] = None,
                  mesh: Optional[Mesh] = None, n_chips: Optional[int] = None,
+                 bk: int = 8, mxu_gain: float = 4.0,
                  cache: JitCache = GLOBAL_CACHE) -> CompiledSpmm:
     """Build (or fetch) the structure-specialized SpMM artifact.
 
-    ``mesh`` / ``n_chips`` (pallas_ell only) shard the fused plan across
-    a 1-D device mesh: rows are partitioned by the same strategy at the
-    chip level and each chip runs its range as one pallas_call under
+    ``mesh`` / ``n_chips`` (fused backends: pallas_ell / pallas_bcsr)
+    shard the fused plan across a 1-D device mesh: rows are partitioned
+    by the same strategy at the chip level (block-row aligned for the
+    mixed backend) and each chip runs its range as one pallas_call under
     shard_map.  The resolved mesh is part of the cache key — same
-    normalization as ``interpret``."""
+    normalization as ``interpret``.  ``bk`` / ``mxu_gain`` parameterize
+    the pallas_bcsr mixed plan (block width, VPU-vs-MXU tagging) and are
+    part of the specialization identity as well."""
     backend = _resolve_backend(
         backend, sharded=mesh is not None or n_chips is not None)
     interpret = resolve_interpret(interpret)
     mesh = resolve_chip_mesh(mesh, n_chips)
-    key = ("spmm", a.fingerprint, d, strategy, backend, bm, interpret,
-           mesh_fingerprint(mesh))
+    key = ("spmm", a.fingerprint, d, strategy, backend, bm, bk, mxu_gain,
+           interpret, mesh_fingerprint(mesh))
     return cache.get_or_build(
         key, lambda: CompiledSpmm(a, d, strategy=strategy, backend=backend,
-                                  bm=bm, interpret=interpret, mesh=mesh,
+                                  bm=bm, bk=bk, mxu_gain=mxu_gain,
+                                  interpret=interpret, mesh=mesh,
                                   cache=cache))
 
 
@@ -356,9 +390,11 @@ def spmm(a: CSRMatrix, x, *, strategy: str = "nnz_split",
          backend: str = "auto", bm: int = 8,
          interpret: Optional[bool] = None,
          mesh: Optional[Mesh] = None, n_chips: Optional[int] = None,
+         bk: int = 8, mxu_gain: float = 4.0,
          cache: JitCache = GLOBAL_CACHE) -> jax.Array:
     """Y = A·X, specialized to A's structure and x's column count."""
     compiled = compile_spmm(a, x.shape[1], strategy=strategy,
                             backend=backend, bm=bm, interpret=interpret,
-                            mesh=mesh, n_chips=n_chips, cache=cache)
+                            mesh=mesh, n_chips=n_chips, bk=bk,
+                            mxu_gain=mxu_gain, cache=cache)
     return compiled(jnp.asarray(a.vals), x)

@@ -14,7 +14,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Iterator, Optional
 
-import jax
 import numpy as np
 
 

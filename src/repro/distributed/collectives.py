@@ -16,7 +16,6 @@ this is applied on the "pod" (DCN) axis where bandwidth is scarcest.
 """
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax

@@ -17,7 +17,7 @@ Tested in-process by re-meshing a toy model between step ranges
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import numpy as np

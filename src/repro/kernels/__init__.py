@@ -1,23 +1,34 @@
 # Pallas TPU kernels for the paper's compute hot-spots, each with a
 # pure-jnp oracle in ref.py (validated via interpret=True on CPU):
-#   spmm_ell_fused         — the serving hot path: one dispatch for the
-#                            whole multi-segment plan via a per-row-block
-#                            descriptor table (SMEM scalar prefetch)
-#   spmm_ell_fused_sharded — the same kernel per chip under shard_map:
-#                            n_chips dispatches per forward over a 1-D
-#                            device mesh (ShardedFusedWorkspace tables)
-#   spmm_ell_segment       — single-segment micro-oracle retained from
-#                            the per-segment era (paper Listing 2 CCM/VPU
-#                            port); production traffic uses the fused path
-#   spmm_bcsr              — beyond-paper MXU block-sparse reformulation
-#   sddmm                  — backward-pass twin (dA.vals = <dY[row], X[col]>)
+#   spmm_ell_fused          — the VPU serving hot path: one dispatch for
+#                             the whole multi-segment plan via a per-row-
+#                             block descriptor table (SMEM scalar prefetch)
+#   spmm_ell_fused_sharded  — the same kernel per chip under shard_map:
+#                             n_chips dispatches per forward over a 1-D
+#                             device mesh (ShardedFusedWorkspace tables)
+#   spmm_bcsr_fused         — the mixed VPU/MXU dispatch: BCSR block-rows
+#                             join the descriptor stream with an MXU tag
+#                             and per-block-row kmax, so a plan that mixes
+#                             ELL rows and (bm x bk) matmul block-rows is
+#                             STILL one pallas_call (backend=pallas_bcsr)
+#   spmm_bcsr_fused_sharded — the mixed kernel per chip under shard_map;
+#                             closes the "MXU xor multi-chip" gap
+#   spmm_ell_segment        — single-segment micro-oracle retained from
+#                             the per-segment era (paper Listing 2 CCM/VPU
+#                             port); production traffic uses the fused path
+#   spmm_bcsr               — pre-fusion MXU micro-oracle (global-Kmax
+#                             padding, single dispatch path); retained for
+#                             kernel-level regression sweeps only
+#   sddmm                   — backward twin (dA.vals = <dY[row], X[col]>)
 # ops.py wraps each kernel with the resolved interpret flag and the
 # DISPATCH_COUNTS host counter the Table IV invariant tests read.
 from . import ops, ref
 from .spmm_csr import spmm_ell_segment
 from .spmm_ell_fused import spmm_ell_fused, spmm_ell_fused_sharded
 from .spmm_bcsr import spmm_bcsr
+from .spmm_bcsr_fused import spmm_bcsr_fused, spmm_bcsr_fused_sharded
 from .sddmm import sddmm, sddmm_csr
 
 __all__ = ["ops", "ref", "spmm_ell_segment", "spmm_ell_fused",
-           "spmm_ell_fused_sharded", "spmm_bcsr", "sddmm", "sddmm_csr"]
+           "spmm_ell_fused_sharded", "spmm_bcsr", "spmm_bcsr_fused",
+           "spmm_bcsr_fused_sharded", "sddmm", "sddmm_csr"]

@@ -21,6 +21,7 @@ import jax
 from .spmm_csr import spmm_ell_segment
 from .spmm_ell_fused import spmm_ell_fused, spmm_ell_fused_sharded
 from .spmm_bcsr import spmm_bcsr
+from .spmm_bcsr_fused import spmm_bcsr_fused, spmm_bcsr_fused_sharded
 
 # name -> number of pallas_call dispatches issued (host-side; jit tracing
 # reuses the compiled kernel but each op wrapper call is one dispatch)
@@ -76,3 +77,29 @@ def spmm_bcsr_op(block_cols_pad, block_vals_pad, x, *, kmax: int,
     DISPATCH_COUNTS["bcsr"] += 1
     return spmm_bcsr(block_cols_pad, block_vals_pad, x, kmax=kmax,
                      interpret=interpret)
+
+
+def spmm_bcsr_fused_op(blk_tag, blk_off, blk_coff, blk_L, cols_flat,
+                       vals_flat, x, *, bm: int = 8, bk: int = 8,
+                       interpret=None):
+    """ONE dispatch for a whole mixed VPU/MXU plan (Table IV invariant,
+    now covering the MXU block-rows as well)."""
+    interpret = resolve_interpret(interpret)
+    DISPATCH_COUNTS["bcsr_fused"] += 1
+    return spmm_bcsr_fused(blk_tag, blk_off, blk_coff, blk_L, cols_flat,
+                           vals_flat, x, bm=bm, bk=bk, interpret=interpret)
+
+
+def spmm_bcsr_fused_sharded_op(blk_tag, blk_off, blk_coff, blk_L,
+                               cols_flat, vals_flat, x, *, mesh,
+                               bm: int = 8, bk: int = 8, interpret=None):
+    """One mixed fused dispatch per chip: counts ``mesh.size``
+    pallas_calls under the ``bcsr_fused`` key plus one
+    ``bcsr_fused_sharded`` wrapper call — same accounting shape as the
+    ELL sharded path."""
+    interpret = resolve_interpret(interpret)
+    DISPATCH_COUNTS["bcsr_fused"] += mesh.size
+    DISPATCH_COUNTS["bcsr_fused_sharded"] += 1
+    return spmm_bcsr_fused_sharded(blk_tag, blk_off, blk_coff, blk_L,
+                                   cols_flat, vals_flat, x, mesh=mesh,
+                                   bm=bm, bk=bk, interpret=interpret)

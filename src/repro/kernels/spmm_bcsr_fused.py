@@ -1,0 +1,179 @@
+"""Mixed VPU/MXU fused SpMM kernel — BCSR block-rows folded into the
+single-dispatch descriptor-table machinery.
+
+Before this kernel the MXU path (``spmm_bcsr``) ran its own pre-fusion
+dispatch: one global ``Kmax`` padding every block-row to the widest one,
+no sharding, and a launch disjoint from the fused ELL plan — so TPU
+matmul FLOPs and multi-chip scaling were mutually exclusive.  Here the
+planner's :class:`~repro.core.plan.MixedPlan` tags every ``bm``-aligned
+row-block with the execution unit that wins on its structure, and ONE
+``pallas_call`` covers both:
+
+  VPU descriptor (tag 0): ``blk_L`` = padded nnz/row; each trip gathers
+      one value+column per row and FMAs into the (bm, dt) accumulator —
+      identical to ``spmm_ell_fused``'s inner loop.
+  MXU descriptor (tag 1): ``blk_L`` = the block-row's own ``K`` (its
+      per-block-row kmax — no global padding); each trip multiplies a
+      (bm, bk) gathered value panel against the (bk, dt) X panel of the
+      prefetched block-column and accumulates — the `jnp.dot` lowers to
+      the MXU on TPU.
+
+The tag is a scalar-prefetched SMEM read, so the branch is resolved in
+the scalar unit per grid step (``lax.cond``) — the grid itself stays
+fully static, preserving the paper's no-data-dependent-branches
+property within each trip loop.
+
+Operand staging matches ``spmm_ell_fused`` (resident X panel + resident
+flat slot buffer; see that module's caveat on production DMA staging).
+The value stream is SHARED: MXU block panels live in the same flat
+``vals_flat`` buffer as the ELL slots — one ``vals_ext[gather_flat]``
+materialization serves the whole mixed plan.
+
+``spmm_bcsr_fused_sharded`` runs the same kernel once per chip under
+``shard_map``, exactly like the ELL twin: stacked per-chip descriptor
+tables on the leading axis, X replicated, one dispatch per chip per
+forward.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+from jax.sharding import PartitionSpec as P
+
+try:                                   # jax >= 0.6 promotes it to jax.*
+    from jax import shard_map as _shard_map
+except ImportError:                    # jax 0.4/0.5
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def _kernel(tag_ref, off_ref, coff_ref, L_ref, cols_ref, vals_ref, x_ref,
+            y_ref, *, bm: int, bk: int, dt: int):
+    b = pl.program_id(0)
+    tag = tag_ref[b]                                 # execution unit (SMEM)
+    off = off_ref[b]                                 # first value slot
+    coff = coff_ref[b]                               # first column entry
+    L = L_ref[b]                                     # this block's trips
+
+    def vpu_block():
+        # bm independent gather+FMA chains (static unroll == ILP)
+        def nnz_step(nz, acc):
+            xs, vs = [], []
+            for rr in range(bm):
+                s = off + rr * L + nz
+                k = cols_ref[coff + rr * L + nz]     # SMEM scalar read
+                xs.append(x_ref[pl.ds(k, 1), :])     # (1, dt) CCM row
+                vs.append(vals_ref[pl.ds(s, 1)])     # (1,) slot value
+            xg = jnp.concatenate(xs, axis=0)         # (bm, dt)
+            v = jnp.concatenate(vs, axis=0)          # (bm,)
+            return acc + (v[:, None].astype(jnp.float32)
+                          * xg.astype(jnp.float32))
+        return jax.lax.fori_loop(0, L, nnz_step,
+                                 jnp.zeros((bm, dt), jnp.float32))
+
+    def mxu_block():
+        # K (bm x bk)·(bk x dt) matmuls, block-column prefetched
+        def blk_step(k, acc):
+            bc = cols_ref[coff + k]                  # block-column (SMEM)
+            a = vals_ref[pl.ds(off + k * (bm * bk), bm * bk)]
+            xp = x_ref[pl.ds(bc * bk, bk), :]        # (bk, dt) X panel
+            return acc + jnp.dot(
+                a.reshape(bm, bk).astype(jnp.float32),
+                xp.astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+        return jax.lax.fori_loop(0, L, blk_step,
+                                 jnp.zeros((bm, dt), jnp.float32))
+
+    acc = jax.lax.cond(tag == 0, vpu_block, mxu_block)
+    y_ref[...] = acc.astype(y_ref.dtype)             # one store per block
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "interpret"))
+def spmm_bcsr_fused(blk_tag: jax.Array, blk_off: jax.Array,
+                    blk_coff: jax.Array, blk_L: jax.Array,
+                    cols_flat: jax.Array, vals_flat: jax.Array,
+                    x: jax.Array, *, bm: int = 8, bk: int = 8,
+                    interpret: bool = True) -> jax.Array:
+    """Compute the WHOLE mixed plan: Y_ws (ws_rows, d_pad) = plan · X.
+
+    blk_tag   : (B,) int32 — 0 = VPU ELL block, 1 = MXU block-row
+    blk_off   : (B,) int32 — first slot of each block in vals_flat
+    blk_coff  : (B,) int32 — first entry of each block in cols_flat
+    blk_L     : (B,) int32 — trips: padded nnz/row (VPU) or K (MXU)
+    cols_flat : (Sc,) int32 — X row per slot (VPU) / block-column (MXU)
+    vals_flat : (S,) float — slot values; MXU panels flattened (K,bm,bk)
+    x         : (n_pad, d_pad) float — rows padded to a bk multiple,
+                columns to the lane tile
+
+    Returns workspace-ordered rows; the caller applies the plan's
+    ``inv_perm`` gather to recover output row order.
+    """
+    from ..core.ccm import kernel_lane_tile  # lazy: core imports kernels
+
+    num_blocks = blk_tag.shape[0]
+    (S,) = vals_flat.shape
+    n_pad, d_pad = x.shape
+    dt = kernel_lane_tile(d_pad)
+    grid = (num_blocks, d_pad // dt)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, bm=bm, bk=bk, dt=dt),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=5,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((S,),
+                             lambda b, j, tag, off, coff, L, cols: (0,)),
+                pl.BlockSpec((n_pad, dt),
+                             lambda b, j, tag, off, coff, L, cols: (0, j)),
+            ],
+            out_specs=pl.BlockSpec(
+                (bm, dt), lambda b, j, tag, off, coff, L, cols: (b, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((num_blocks * bm, d_pad),
+                                       jnp.float32),
+        interpret=interpret,
+    )(blk_tag, blk_off, blk_coff, blk_L, cols_flat, vals_flat, x)
+
+
+def spmm_bcsr_fused_sharded(blk_tag: jax.Array, blk_off: jax.Array,
+                            blk_coff: jax.Array, blk_L: jax.Array,
+                            cols_flat: jax.Array, vals_flat: jax.Array,
+                            x: jax.Array, *, mesh, bm: int = 8,
+                            bk: int = 8, interpret: bool = True
+                            ) -> jax.Array:
+    """Run one mixed fused dispatch per chip under ``shard_map``.
+
+    Descriptor tables are (C, ...) stacked per chip; X is replicated.
+    Returns (C, B*bm, d_pad) workspace rows sharded over the chip axis;
+    the caller flattens and applies the sharded workspace's GLOBAL
+    ``inv_perm`` gather.  The body is traced once and SPMD-replicated:
+    a forward costs exactly C dispatches — the multi-chip form of the
+    one-artifact-per-instance invariant, now covering the MXU path too.
+    """
+    return _sharded_callable(mesh, bm, bk, interpret)(
+        blk_tag, blk_off, blk_coff, blk_L, cols_flat, vals_flat, x)
+
+
+@functools.lru_cache(maxsize=32)
+def _sharded_callable(mesh, bm: int, bk: int, interpret: bool):
+    """jit-wrapped shard_map closure, memoized per (mesh, bm, bk,
+    interpret) — same lifecycle as the ELL twin; evicted by
+    ``core.jit_cache.clear_global_cache``."""
+    (axis,) = mesh.axis_names
+
+    def per_chip(tag, off, coff, L, cols, vals, xp):
+        y = spmm_bcsr_fused(tag[0], off[0], coff[0], L[0], cols[0],
+                            vals[0], xp, bm=bm, bk=bk, interpret=interpret)
+        return y[None]
+
+    shard = P(axis)
+    specs = dict(in_specs=(shard,) * 6 + (P(),), out_specs=shard)
+    try:
+        fn = _shard_map(per_chip, mesh=mesh, check_rep=False, **specs)
+    except TypeError:      # jax >= 0.7 renamed the replication check
+        fn = _shard_map(per_chip, mesh=mesh, check_vma=False, **specs)
+    return jax.jit(fn)

@@ -49,14 +49,14 @@ from jax.experimental.pallas import tpu as pltpu
 def _kernel(cols_ref, vals_ref, x_ref, y_ref, *, bm: int, L: int, dt: int):
     r = pl.program_id(0)
 
-    def nnz_step(l, acc):
+    def nnz_step(nz, acc):
         # bm independent gather+FMA chains (static unroll == ILP)
         rows = []
         for rr in range(bm):
-            k = cols_ref[(r * bm + rr) * L + l]          # SMEM scalar read
+            k = cols_ref[(r * bm + rr) * L + nz]         # SMEM scalar read
             rows.append(x_ref[pl.ds(k, 1), :])           # (1, dt) CCM row
         xg = jnp.concatenate(rows, axis=0)               # (bm, dt)
-        v = vals_ref[:, l]                               # (bm,) broadcast
+        v = vals_ref[:, nz]                              # (bm,) broadcast
         return acc + v[:, None].astype(jnp.float32) * xg.astype(jnp.float32)
 
     acc = jnp.zeros((bm, dt), dtype=jnp.float32)         # vxorps analogue

@@ -55,11 +55,11 @@ def _kernel(off_ref, L_ref, cols_ref, vals_ref, x_ref, y_ref, *,
     off = off_ref[b]                                 # first slot (SMEM)
     L = L_ref[b]                                     # this block's nnz/row
 
-    def nnz_step(l, acc):
+    def nnz_step(nz, acc):
         # bm independent gather+FMA chains (static unroll == ILP)
         xs, vs = [], []
         for rr in range(bm):
-            s = off + rr * L + l
+            s = off + rr * L + nz
             k = cols_ref[s]                          # SMEM scalar read
             xs.append(x_ref[pl.ds(k, 1), :])         # (1, dt) CCM row
             vs.append(vals_ref[pl.ds(s, 1)])         # (1,) slot value

@@ -26,7 +26,7 @@ import numpy as np  # noqa: E402
 
 from ..analysis import roofline as rf                      # noqa: E402
 from ..configs import SHAPES, all_arch_names, cell_supported, get_config  # noqa: E402
-from ..distributed.sharding import (AxisEnv, batch_shardings,      # noqa: E402
+from ..distributed.sharding import (batch_shardings,              # noqa: E402
                                     decode_shardings, logits_sharding,
                                     param_shardings, replicated)
 from ..models.model import Model                           # noqa: E402

@@ -28,13 +28,23 @@ from ..train.train_step import make_train_step
 from .mesh import make_chip_mesh, make_host_mesh
 
 
-def spmm_shard_preflight(n_chips: int) -> int:
+def spmm_shard_preflight(n_chips: int,
+                         backend: str = "pallas_ell") -> int:
     """Validate the sharded fused SpMM path on this host's devices before
     committing to a long run (same ethos as the dry-run): compile a small
     sharded plan and check it against the ref backend.  Fails fast —
     asking for more chips than the host exposes raises rather than
-    silently validating a smaller mesh than the run was configured for."""
-    from ..core import JitCache, random_csr, spmm
+    silently validating a smaller mesh than the run was configured for.
+
+    ``backend`` selects the fused dispatch the run will use: the VPU ELL
+    path (``pallas_ell``) or the mixed VPU/MXU path (``pallas_bcsr``),
+    which exercises block-row-aligned chip partitioning and the MXU
+    descriptor stream."""
+    from ..core import FUSED_BACKENDS, JitCache, random_csr, spmm
+    if backend not in FUSED_BACKENDS:
+        raise ValueError(
+            f"--spmm-backend must be one of {FUSED_BACKENDS}, "
+            f"got {backend!r}")
     avail = len(jax.devices())
     if not 1 <= n_chips <= avail:
         raise ValueError(
@@ -49,13 +59,13 @@ def spmm_shard_preflight(n_chips: int) -> int:
     # interpret=None resolves to the mode the run itself will use
     # (native on TPU, interpret on CPU) — the whole point is to surface
     # lowering failures of the real path before step 0
-    y = spmm(a, x, strategy="nnz_split", backend="pallas_ell",
+    y = spmm(a, x, strategy="nnz_split", backend=backend,
              interpret=None, mesh=mesh, cache=cache)
     y_ref = spmm(a, x, strategy="nnz_split", backend="ref", cache=cache)
     np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
                                rtol=1e-4, atol=1e-4)
-    print(f"[train] spmm shard preflight OK on {n_chips} chip(s)",
-          flush=True)
+    print(f"[train] spmm shard preflight OK on {n_chips} chip(s) "
+          f"({backend})", flush=True)
     return n_chips
 
 
@@ -63,14 +73,15 @@ def run_training(cfg, *, steps: int, global_batch: int, seq_len: int,
                  ckpt_dir=None, ckpt_every: int = 20, lr: float = 3e-4,
                  microbatches: int = 1, remat: str = "full",
                  data_parallel: int = 1, model_parallel: int = 1,
-                 spmm_chips: int = 0, log_every: int = 10,
+                 spmm_chips: int = 0, spmm_backend: str = "pallas_ell",
+                 log_every: int = 10,
                  fault_injector=None, watchdog: Watchdog = None,
                  seed: int = 0, stop_at: int = None):
     model = Model(cfg)
     if spmm_chips:
         # the sparse-aggregation chips share the host devices with the
         # train mesh; fail fast here rather than mid-run
-        spmm_shard_preflight(spmm_chips)
+        spmm_shard_preflight(spmm_chips, spmm_backend)
     mesh = make_host_mesh(data=data_parallel, model=model_parallel)
     opt = AdamW(learning_rate=warmup_cosine(lr, min(20, steps // 10 + 1),
                                             steps))
@@ -175,6 +186,10 @@ def main():
     ap.add_argument("--spmm-chips", type=int, default=0,
                     help="validate the sharded fused SpMM path on this "
                          "many chips before training (0 = skip)")
+    ap.add_argument("--spmm-backend", default="pallas_ell",
+                    choices=["pallas_ell", "pallas_bcsr"],
+                    help="fused SpMM dispatch the preflight validates: "
+                         "VPU ELL or the mixed VPU/MXU (BCSR) path")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -186,7 +201,7 @@ def main():
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every, lr=args.lr,
         microbatches=args.microbatches, remat=args.remat,
         data_parallel=args.dp, model_parallel=args.tp,
-        spmm_chips=args.spmm_chips)
+        spmm_chips=args.spmm_chips, spmm_backend=args.spmm_backend)
     print(f"[train] done: first loss {losses[0]:.4f} "
           f"last loss {losses[-1]:.4f} ({time.time()-t0:.1f}s)")
 

@@ -9,7 +9,6 @@ never materialized — required for the 32k prefill cells to fit HBM.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

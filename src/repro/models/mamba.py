@@ -10,7 +10,7 @@ the train_4k cells fit HBM.  Decode is the O(1) single-step update.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

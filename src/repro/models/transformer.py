@@ -14,9 +14,7 @@ Three entry points:
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -365,10 +363,10 @@ def init_decode_cache(cfg: ArchConfig, batch: int, cache_len: int):
                 "kpos": jnp.full((P, batch, T), UNFILLED_POS, jnp.int32),
             }
         elif kind == "xattn":
-            I = cfg.num_image_tokens
+            n_img = cfg.num_image_tokens
             caches[f"slot{i}"] = {
-                "xk": jnp.zeros((P, batch, I, KV, hd), dt),
-                "xv": jnp.zeros((P, batch, I, KV, hd), dt),
+                "xk": jnp.zeros((P, batch, n_img, KV, hd), dt),
+                "xv": jnp.zeros((P, batch, n_img, KV, hd), dt),
             }
         elif kind == "mamba":
             Di, N, K = cfg.mamba_d_inner, cfg.mamba_state, cfg.mamba_conv
@@ -420,9 +418,9 @@ def _decode_xattn(cfg, p, x, cache):
     if cfg.qk_norm:
         q = layers.rms_norm(q, p["q_norm"], cfg.norm_eps)
     B = x.shape[0]
-    I = cache["xk"].shape[1]
+    n_img = cache["xk"].shape[1]
     qpos = jnp.zeros((B, 1), jnp.int32)
-    kpos = jnp.zeros((B, I), jnp.int32)
+    kpos = jnp.zeros((B, n_img), jnp.int32)
     out = layers.gqa_attention(q, cache["xk"], cache["xv"],
                                q_positions=qpos, kv_positions=kpos,
                                causal=False)

@@ -12,7 +12,7 @@ all-reduce between them so the wire format is the int8 tensor.
 """
 from __future__ import annotations
 
-from typing import Any, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -8,8 +8,6 @@ compute/communication overlap lever (hillclimbed in EXPERIMENTS.md
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

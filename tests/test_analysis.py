@@ -1,5 +1,4 @@
 """Roofline math + analytic memory model sanity."""
-import numpy as np
 import pytest
 
 from repro.analysis import memmodel
@@ -69,7 +68,6 @@ def test_memmodel_swa_cheaper_than_full_kv():
     mix = get_config("mixtral-8x7b")
     tr = memmodel.hbm_traffic(mix, SHAPES["decode_32k"], multi_pod=False)
     # ring buffer: KV cache traffic bounded by window, not seq_len
-    full_kv_like = (32 * 128 / 16) * 32768 * (8 / 16 if False else 1)
     assert tr["kv_cache"] < tr["params_read"]
 
 

@@ -7,9 +7,6 @@ import sys
 import textwrap
 from pathlib import Path
 
-import numpy as np
-import pytest
-
 from repro.analysis.roofline import parse_collective_bytes
 
 ROOT = Path(__file__).resolve().parents[1]

@@ -1,8 +1,5 @@
 """Fault-tolerance substrate: checkpoint/restart, elastic re-mesh,
 watchdog straggler mitigation, gradient compression."""
-import os
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -69,11 +66,18 @@ def test_resume_continues_loss_curve(tmp_path):
 
 
 def test_watchdog_flags_straggler():
+    """Deadline logic on faked step times: the injector supplies the
+    'elapsed' seconds, so a loaded CI runner can't skew the calibration
+    window (the old sleep-based version tripped when a real 10ms sleep
+    overran its own 2x deadline under contention)."""
     wd = Watchdog(factor=2.0, min_deadline_s=0.0, window=5)
     for _ in range(5):
-        wd.run_step(lambda: time.sleep(0.01))
+        wd.run_step(lambda: None, fault_injector=lambda: 1.0)
+    assert 2.0 <= wd.deadline() < 2.1      # 2x the (faked) 1s median
     with pytest.raises(StepTimeout):
         wd.run_step(lambda: None, fault_injector=lambda: 10.0)
+    # a step under the deadline still passes after the timeout
+    wd.run_step(lambda: None, fault_injector=lambda: 1.0)
 
 
 def test_elastic_plan_and_remesh():
@@ -123,17 +127,25 @@ def test_compression_quantization_error_bounded():
                                rtol=1e-6, atol=1e-6)
 
 
+@pytest.mark.timing_sensitive
 def test_training_recovers_from_injected_straggler(tmp_path):
     """Driver-level: inject one straggler step; training restores from
-    checkpoint and completes."""
+    checkpoint and completes.
+
+    Clock handling: the injected step adds a simulated 1e6 s, and the
+    deadline floor is 120 s — so ONLY the injected step can blow the
+    deadline, however loaded the runner (the old 0.001 s floor + 50x
+    factor tripped on real steps when CI shared cores).  Still marked
+    ``timing_sensitive``: a single genuine step stalling >120 s would
+    fail it, so CI runs it outside the -x tier-1 gate."""
     cfg = reduced(get_config("musicgen-large"))
     calls = {"n": 0}
 
     def injector():
         calls["n"] += 1
-        return 100.0 if calls["n"] == 8 else 0.0
+        return 1e6 if calls["n"] == 8 else 0.0
 
-    wd = Watchdog(factor=50.0, min_deadline_s=0.001, window=5)
+    wd = Watchdog(factor=50.0, min_deadline_s=120.0, window=5)
     _, losses = run_training(cfg, steps=10, global_batch=2, seq_len=32,
                              ckpt_dir=tmp_path / "ck", ckpt_every=5,
                              log_every=100, fault_injector=injector,

@@ -36,8 +36,8 @@ def _csr_from_lengths(lengths, n, seed):
     lengths = np.minimum(np.asarray(lengths, np.int64), n)
     row_ptr = np.concatenate([[0], np.cumsum(lengths)]).astype(np.int64)
     cols = np.concatenate(
-        [np.sort(rng.choice(n, size=int(l), replace=False))
-         for l in lengths] or [np.zeros(0, np.int64)]).astype(np.int32)
+        [np.sort(rng.choice(n, size=int(ln), replace=False))
+         for ln in lengths] or [np.zeros(0, np.int64)]).astype(np.int32)
     vals = rng.standard_normal(int(row_ptr[-1])).astype(np.float32)
     return CSRMatrix((len(lengths), n), row_ptr, cols, vals)
 
@@ -93,6 +93,39 @@ def test_sharded_bit_matches_fused(a, d, strategy, chips):
     y0 = spmm(a, x, strategy=strategy, backend="pallas_ell",
               interpret=True, cache=JitCache())
     y = spmm(a, x, strategy=strategy, backend="pallas_ell",
+             interpret=True, n_chips=chips, cache=JitCache())
+    assert np.array_equal(np.asarray(y), np.asarray(y0))
+
+
+@settings(max_examples=12, deadline=None)
+@given(a=csr_cases(), d=st.integers(1, 24),
+       strategy=st.sampled_from(STRATEGIES))
+def test_mixed_bcsr_matches_ref(a, d, strategy):
+    """The mixed VPU/MXU dispatch (backend=pallas_bcsr) against the ref
+    oracle on the same adversarial structure families — whatever the
+    per-block-row tagging heuristic decided."""
+    x = jnp.asarray(
+        np.random.default_rng(d + 2).standard_normal((a.n, d)),
+        jnp.float32)
+    y_ref = spmm(a, x, strategy=strategy, backend="ref", cache=JitCache())
+    y = spmm(a, x, strategy=strategy, backend="pallas_bcsr",
+             interpret=True, cache=JitCache())
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=12, deadline=None)
+@given(a=csr_cases(), d=st.integers(1, 24),
+       strategy=st.sampled_from(STRATEGIES),
+       chips=st.integers(1, 4))
+def test_sharded_mixed_bit_matches_fused(a, d, strategy, chips):
+    chips = min(chips, N_DEV)
+    x = jnp.asarray(
+        np.random.default_rng(d + 3).standard_normal((a.n, d)),
+        jnp.float32)
+    y0 = spmm(a, x, strategy=strategy, backend="pallas_bcsr",
+              interpret=True, cache=JitCache())
+    y = spmm(a, x, strategy=strategy, backend="pallas_bcsr",
              interpret=True, n_chips=chips, cache=JitCache())
     assert np.array_equal(np.asarray(y), np.asarray(y0))
 

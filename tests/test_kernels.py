@@ -7,8 +7,7 @@ import pytest
 
 from repro.core import CSRMatrix, compile_spmm, random_csr, spmm
 from repro.core.jit_cache import JitCache
-from repro.kernels.ref import (sddmm_ref, spmm_csr_ref, spmm_dense_ref,
-                               spmm_ell_segment_ref)
+from repro.kernels.ref import sddmm_ref, spmm_csr_ref, spmm_dense_ref
 
 FAMILIES = ("uniform", "powerlaw", "banded")
 STRATEGIES = ("row_split", "nnz_split", "merge_split")

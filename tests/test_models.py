@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import SHAPES, all_arch_names, cell_supported, \
+from repro.configs import all_arch_names, \
     get_config, reduced
 from repro.models import Model, transformer
 from repro.optim.adamw import AdamW

@@ -10,7 +10,6 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import moe_spmm as ms
-from repro.core.jit_cache import JitCache, GLOBAL_CACHE
 
 
 def _setup(T=24, D=16, E=4, k=2, C=12, F=32, seed=0):

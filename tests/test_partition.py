@@ -2,12 +2,11 @@
 sharded-workspace packing built on it — runs even without hypothesis
 (the property-based twin lives in test_plan.py /
 test_fused_properties.py)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (CSRMatrix, build_sharded_workspace,
+from repro.core import (build_sharded_workspace,
                         partition_rows_for_chips, random_csr, spmm)
 from repro.core.jit_cache import JitCache
 from repro.core.plan import STRATEGIES

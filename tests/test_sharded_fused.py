@@ -196,7 +196,7 @@ def test_mesh_fingerprint_and_resolution():
         chip_mesh(0)
 
 
-@pytest.mark.parametrize("backend", ["ref", "dense", "pallas_bcsr"])
+@pytest.mark.parametrize("backend", ["ref", "dense"])
 def test_sharding_rejects_non_fused_backends(backend):
     a = random_csr(16, 16, density=0.2, family="uniform", seed=3)
     with pytest.raises(ValueError):
@@ -204,14 +204,27 @@ def test_sharding_rejects_non_fused_backends(backend):
                      cache=JitCache())
 
 
+def test_sharding_accepts_bcsr_backend():
+    """Since the BCSR fold-in, the mixed MXU path shards like the ELL
+    path (the PR that closed the 'MXU xor multi-chip' gap)."""
+    a = random_csr(16, 16, density=0.2, family="uniform", seed=3)
+    c = compile_spmm(a, 8, backend="pallas_bcsr", interpret=True,
+                     n_chips=1, cache=JitCache())
+    assert c.backend == "pallas_bcsr" and c.n_chips == 1
+
+
 def test_auto_backend_resolves_fused_when_sharded():
-    """backend="auto" + a sharding request must pick pallas_ell on every
-    host (CPU included, via interpret) instead of falling back to the
-    single-device ref backend and rejecting the mesh."""
+    """backend="auto" + a sharding request must resolve to a FUSED
+    backend on every host — pallas_ell on CPU (via interpret), the
+    mixed pallas_bcsr on TPU — never the single-device ref backend,
+    which would reject the mesh."""
+    from repro.core import FUSED_BACKENDS
     a = _skewed_csr(seed=12)
     x = _x(a.n, 8, seed=13)
     c = compile_spmm(a, 8, backend="auto", n_chips=1, cache=JitCache())
-    assert c.backend == "pallas_ell" and c.n_chips == 1
+    assert c.backend in FUSED_BACKENDS and c.n_chips == 1
+    if jax.default_backend() != "tpu":
+        assert c.backend == "pallas_ell"
     y = spmm(a, x, backend="auto", n_chips=1, cache=JitCache())
     y_ref = spmm(a, x, backend="ref", cache=JitCache())
     np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),

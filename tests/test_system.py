@@ -3,7 +3,6 @@ core driving real workloads through the production stack."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config, reduced
 from repro.core import CSRMatrix, compile_spmm, random_csr, spmm

@@ -14,8 +14,7 @@ sys.path.insert(0, "src")
 sys.path.insert(0, ".")
 
 from benchmarks.bench_roofline import cell_summary  # noqa: E402
-from repro.analysis import memmodel                  # noqa: E402
-from repro.configs import SHAPES, get_config         # noqa: E402
+from repro.configs import SHAPES                     # noqa: E402
 
 ART = Path("artifacts/dryrun")
 OUT = Path("EXPERIMENTS.md")
