@@ -120,12 +120,14 @@ def run(n_chips: int = 0) -> list:
 
 
 def _timed_cell(bench, strategy, backend, n_chips, a, x, *, counter,
-                extra=()):
+                extra=(), staging=None):
     """One smoke cell: compile, time, count launches per call."""
     kw = dict(strategy=strategy, backend=backend, interpret=True,
               cache=JitCache())
     if n_chips:
         kw["n_chips"] = n_chips
+    if staging:
+        kw["staging"] = staging
     c = compile_spmm(a, x.shape[1], **kw)
     vals = jnp.asarray(a.vals)
     ops.reset_dispatch_counts()
@@ -168,6 +170,24 @@ def smoke_records() -> list:
     records.append(_timed_cell("fused_mixed_sharded", "nnz_split",
                                "pallas_bcsr", 1, a, x,
                                counter="bcsr_fused"))
+    # staged (DMA) cells: the "_dma" bench-name suffix is the staging
+    # axis (the record key has no staging field — see the schema note in
+    # benchmarks/common.py).  Interpret-mode DMA is EMULATED, so these
+    # wall cells track the emulation's plumbing cost, not TPU overlap;
+    # the dispatch counts pin the fusion invariant on the staged path.
+    for strategy in ("row_split", "nnz_split", "merge_split"):
+        records.append(_timed_cell("fused_ell_dma", strategy,
+                                   "pallas_ell", 0, a, x,
+                                   counter="ell_fused", staging="dma"))
+        records.append(_timed_cell("fused_mixed_dma", strategy,
+                                   "pallas_bcsr", 0, a, x,
+                                   counter="bcsr_fused", staging="dma"))
+    records.append(_timed_cell("fused_ell_dma_sharded", "nnz_split",
+                               "pallas_ell", 1, a, x,
+                               counter="ell_fused", staging="dma"))
+    records.append(_timed_cell("fused_mixed_dma_sharded", "nnz_split",
+                               "pallas_bcsr", 1, a, x,
+                               counter="bcsr_fused", staging="dma"))
     return records
 
 

@@ -22,6 +22,12 @@ checked-in baseline and fails when any cell regresses by more than
 ``factor`` (default 2x) in wall-clock or dispatch count, or when a
 baseline cell disappears (silent coverage shrink).
 
+Axes beyond the four key fields are encoded in the ``bench`` name so
+old baselines stay comparable: the DMA-staged fused cells (operand
+staging, DESIGN.md §7.7 — staging="dma" vs the default resident
+lowering) carry a ``_dma`` suffix, e.g. ``fused_ell_dma`` /
+``fused_mixed_dma_sharded``.
+
 Wall-clock comparisons are normalized by the ``calib`` record — a fixed
 dense matmul timed on the same process — so a uniformly slower CI
 runner rescales every threshold instead of tripping the gate; dispatch

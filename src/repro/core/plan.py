@@ -44,6 +44,18 @@ STRATEGIES = ("row_split", "nnz_split", "merge_split")
 VPU_TAG = 0   # scalar-row ELL gather+FMA (the faithful CCM path)
 MXU_TAG = 1   # (bm x bk) block matmuls (the beyond-paper BCSR path)
 
+# DMA staging tile (DESIGN.md §7.7): the staged kernels prefetch each
+# block's slot/cols panel as ONE fixed-size async copy, so every
+# workspace's per-block maxima are rounded up to this granularity (the
+# TPU lane count — a 1-D DMA window that tiles VREG lanes exactly) and
+# the flat buffers are tail-padded so any window starting at a real
+# block offset stays in bounds.
+STAGE_TILE = 128
+
+
+def _stage_tile_ceil(v: int) -> int:
+    return -(-int(v) // STAGE_TILE) * STAGE_TILE
+
 
 @dataclasses.dataclass
 class EllSegment:
@@ -247,6 +259,15 @@ class FusedEllWorkspace:
     Workspace rows are ordered block-by-block (plan order), i.e. a
     permutation (plus padding rows) of the output rows; ``inv_perm``
     undoes it with a single gather: ``y = y_ws[inv_perm]``.
+
+    DMA staging metadata (DESIGN.md §7.7): ``blk_span``/``blk_cspan``
+    are each descriptor's contiguous slot/column footprint — ``bm * L``
+    slots for a VPU block, ``L * bm * bk`` slots but only ``L`` column
+    entries for an MXU block-row.  ``max_span``/``max_cspan`` round the
+    per-block maxima up to :data:`STAGE_TILE`, and the flat buffers are
+    tail-padded with inert sentinels so the staged kernels can issue a
+    fixed ``[off, off + max_span)`` async copy for ANY block without a
+    bounds branch.
     """
     cols_flat: np.ndarray    # (Sc,) int32 — VPU: X row per slot;
                              #               MXU: block-column per step
@@ -259,6 +280,15 @@ class FusedEllWorkspace:
     blk_tag: Optional[np.ndarray] = None   # (B,) int32 VPU_TAG/MXU_TAG
     blk_coff: Optional[np.ndarray] = None  # (B,) int32 into cols_flat
     bk: int = 8              # MXU block width (block-column granularity)
+    # staging metadata is ONLY produced by _pack_workspace, which also
+    # tail-pads the flat streams to match — deriving windows for a
+    # hand-built workspace would advertise staged-DMA safety its
+    # buffers don't have, so there is deliberately no fallback here
+    # (max_span == 0 means: no staged dispatch for this workspace)
+    blk_span: Optional[np.ndarray] = None   # (B,) int32 slots per block
+    blk_cspan: Optional[np.ndarray] = None  # (B,) int32 col entries per blk
+    max_span: int = 0        # DMA window over gather/vals slots
+    max_cspan: int = 0       # DMA window over cols entries
 
     def __post_init__(self):
         # pure-VPU packings (the pre-mixed layout): every block is VPU
@@ -478,6 +508,8 @@ def _pack_workspace(plan: MixedPlan, *,
     offs: List[int] = []
     coffs: List[int] = []
     Ls: List[int] = []
+    spans: List[int] = []
+    cspans: List[int] = []
     inv_perm = np.zeros(plan.m, dtype=np.int32)
     ws_row = 0
     slot = 0
@@ -503,6 +535,8 @@ def _pack_workspace(plan: MixedPlan, *,
             offs.append(slot + b * bm * Lp)
             coffs.append(cpos + b * bm * Lp)
             Ls.append(Lp)
+            spans.append(bm * Lp)
+            cspans.append(bm * Lp)
         inv_perm[plan.vpu_rows[seg.row_ids]] = (
             ws_row + np.arange(seg.R, dtype=np.int32))
         ws_row += seg.R_pad
@@ -513,6 +547,8 @@ def _pack_workspace(plan: MixedPlan, *,
         offs.append(slot)
         coffs.append(cpos)
         Ls.append(blk.K)
+        spans.append(blk.K * bm * plan.bk)
+        cspans.append(blk.K)
         cols_parts.append(blk.bcols)
         gather_parts.append(blk.gather.reshape(-1))
         inv_perm[blk.row0:blk.row0 + blk.nrows] = (
@@ -524,7 +560,14 @@ def _pack_workspace(plan: MixedPlan, *,
     assert slot < (1 << 31), ("mixed workspace exceeds int32 slot space",
                               slot)
 
-    def cat(parts, dtype, floor, min_size):
+    # fixed-size DMA windows for the staged kernels (DESIGN.md §7.7):
+    # every block's panel copy is [off, off + max_span) whatever its own
+    # span, so the flat streams get a max-window tail of inert sentinels
+    # (gather -> the zero slot, cols -> row/block-column 0)
+    max_span = _stage_tile_ceil(max(spans, default=0))
+    max_cspan = _stage_tile_ceil(max(cspans, default=0))
+
+    def cat(parts, dtype, floor, min_size, tail):
         out = (np.concatenate(parts).astype(dtype) if parts
                else np.zeros(0, dtype))
         if out.size < min_size and tags and mixed_kernel:
@@ -534,11 +577,14 @@ def _pack_workspace(plan: MixedPlan, *,
             # (zero-length operands don't block-spec either)
             pad = np.full(min_size - out.size, floor, dtype)
             out = np.concatenate([out, pad])
+        if tail:
+            out = np.concatenate([out, np.full(tail, floor, dtype)])
         return out
 
     ws = FusedEllWorkspace(
-        cols_flat=cat(cols_parts, np.int32, 0, 1),
-        gather_flat=cat(gather_parts, np.int64, nnz, bm * plan.bk),
+        cols_flat=cat(cols_parts, np.int32, 0, 1, max_cspan),
+        gather_flat=cat(gather_parts, np.int64, nnz, bm * plan.bk,
+                        max_span),
         blk_off=np.asarray(offs, np.int32),
         blk_L=np.asarray(Ls, np.int32),
         inv_perm=inv_perm,
@@ -546,7 +592,11 @@ def _pack_workspace(plan: MixedPlan, *,
         row_block=bm,
         blk_tag=np.asarray(tags, np.int32),
         blk_coff=np.asarray(coffs, np.int32),
-        bk=plan.bk)
+        bk=plan.bk,
+        blk_span=np.asarray(spans, np.int32),
+        blk_cspan=np.asarray(cspans, np.int32),
+        max_span=max_span,
+        max_cspan=max_cspan)
     assert ws.ws_rows == ws.num_blocks * bm
     return ws
 
@@ -615,6 +665,12 @@ class ShardedFusedWorkspace:
     over a 1-D ``("chips",)`` mesh.  ``inv_perm`` is global: output row
     ``i`` lives at row ``inv_perm[i]`` of the flattened
     ``(n_chips * ws_rows, d)`` workspace output.
+
+    ``max_span``/``max_cspan`` are the cross-chip maxima of the per-chip
+    DMA windows (see :class:`FusedEllWorkspace`): the staged kernel is
+    traced once and SPMD-replicated, so every chip's panel copy uses the
+    same static window and ``S``/``Sc`` include the global max-window
+    tail.
     """
     blk_off: np.ndarray      # (C, B) int32 — first slot per row-block
     blk_L: np.ndarray        # (C, B) int32 — loop trips (0 == pad block)
@@ -629,6 +685,8 @@ class ShardedFusedWorkspace:
     blk_tag: Optional[np.ndarray] = None   # (C, B) int32 VPU_TAG/MXU_TAG
     blk_coff: Optional[np.ndarray] = None  # (C, B) int32 into cols_flat
     bk: int = 8
+    max_span: int = 0        # cross-chip DMA window over slots
+    max_cspan: int = 0       # cross-chip DMA window over cols entries
 
     def __post_init__(self):
         if self.blk_tag is None:
@@ -717,8 +775,16 @@ def build_sharded_workspace(row_ptr: np.ndarray, col_indices: np.ndarray,
         bases.append(base)
 
     B = max(ws.num_blocks for ws in shards)
-    S = max((int(ws.gather_flat.shape[0]) for ws in shards), default=0)
-    Sc = max((int(ws.cols_flat.shape[0]) for ws in shards), default=0)
+    # one traced kernel serves every chip, so the staged DMA window is
+    # the cross-chip max — re-tail each chip's streams to that window
+    # (real entries never reach into a chip's own tail, so growing it
+    # just extends the sentinel region)
+    gspan = max((ws.max_span for ws in shards), default=0)
+    gcspan = max((ws.max_cspan for ws in shards), default=0)
+    S = max((int(ws.gather_flat.shape[0]) - ws.max_span
+             for ws in shards), default=0) + gspan
+    Sc = max((int(ws.cols_flat.shape[0]) - ws.max_cspan
+              for ws in shards), default=0) + gcspan
     ws_rows = B * row_block
     blk_off = np.zeros((n_chips, B), np.int32)
     blk_L = np.zeros((n_chips, B), np.int32)       # pad blocks: L == 0
@@ -747,4 +813,5 @@ def build_sharded_workspace(row_ptr: np.ndarray, col_indices: np.ndarray,
         blk_off=blk_off, blk_L=blk_L, cols_flat=cols_flat,
         gather_flat=gather_flat, inv_perm=inv_perm, bounds=bounds,
         ws_rows=ws_rows, row_block=row_block, n_chips=n_chips,
-        shard_plans=plans, blk_tag=blk_tag, blk_coff=blk_coff, bk=bk)
+        shard_plans=plans, blk_tag=blk_tag, blk_coff=blk_coff, bk=bk,
+        max_span=gspan, max_cspan=gcspan)

@@ -22,6 +22,12 @@ Backends:
   ref          pure-jnp gather/segment-sum (jit-friendly; used inside
                the model stack and the 512-device dry-run)
   dense        densified matmul (tiny tests only)
+
+Both fused backends take a ``staging`` knob (DESIGN.md §7.7):
+``"resident"`` (whole flat slot buffer + X panel in VMEM — the
+interpret-mode default and bit-identity oracle) or ``"dma"``
+(double-buffered per-block slot-panel DMA, the TPU default), resolved
+once and baked into the jit-cache key like ``interpret``.
 """
 from __future__ import annotations
 
@@ -39,13 +45,27 @@ from .jit_cache import GLOBAL_CACHE, JitCache, mesh_fingerprint
 from .plan import (MixedPlan, ShardedFusedWorkspace, SpmmPlan,
                    build_fused_workspace, build_mixed_plan, build_plan,
                    build_sharded_workspace)
-from ..kernels.ops import resolve_interpret
+from ..kernels.ops import resolve_interpret, resolve_staging
 
 BACKENDS = ("pallas_ell", "pallas_bcsr", "ref", "dense", "auto")
 
 # backends that lower through the fused descriptor-table dispatch (and
-# therefore support mesh/n_chips sharding)
+# therefore support mesh/n_chips sharding and the staging knob)
 FUSED_BACKENDS = ("pallas_ell", "pallas_bcsr")
+
+
+def _resolve_staging_for(backend: str, staging, interpret: bool) -> str:
+    """Per-backend staging resolution: the knob only exists on the fused
+    dispatch, so non-fused backends pin ``"resident"`` (and reject an
+    explicit ``"dma"`` the way single-device backends reject a mesh) —
+    keeping ref/dense cache keys independent of a knob they ignore."""
+    if backend in FUSED_BACKENDS:
+        return resolve_staging(staging, interpret)
+    if staging not in (None, "auto", "resident"):
+        raise ValueError(
+            f"staging is a fused-dispatch knob ({'/'.join(FUSED_BACKENDS)});"
+            f" backend={backend!r} has no staged lowering")
+    return "resident"
 
 
 def _resolve_backend(backend: str, *, sharded: bool = False) -> str:
@@ -105,6 +125,8 @@ class _FusedConsts:
     num_blocks: int
     blk_tag: Optional[jax.Array] = None   # (B,) int32 — VPU/MXU tag
     blk_coff: Optional[jax.Array] = None  # (B,) int32 into cols_flat
+    max_span: int = 0        # staged-DMA slot window (DESIGN.md §7.7)
+    max_cspan: int = 0       # staged-DMA cols window
 
 
 @dataclasses.dataclass
@@ -124,6 +146,8 @@ class _ShardedConsts:
     mesh: Mesh
     blk_tag: Optional[jax.Array] = None   # (C, B) int32 — VPU/MXU tag
     blk_coff: Optional[jax.Array] = None  # (C, B) int32 into cols_flat
+    max_span: int = 0        # cross-chip staged-DMA slot window
+    max_cspan: int = 0       # cross-chip staged-DMA cols window
 
 
 class CompiledSpmm:
@@ -134,6 +158,7 @@ class CompiledSpmm:
                  backend: str, bm: int = 8, interpret: Optional[bool] = None,
                  mesh: Optional[Mesh] = None, n_chips: Optional[int] = None,
                  bk: int = 8, mxu_gain: float = 4.0,
+                 staging: Optional[str] = None,
                  cache: JitCache = GLOBAL_CACHE):
         self.backend = _resolve_backend(
             backend, sharded=mesh is not None or n_chips is not None)
@@ -144,6 +169,8 @@ class CompiledSpmm:
         # resolved ONCE: the effective flag is part of the compiled
         # artifact's identity (and of every jit-cache key touching it)
         self.interpret = resolve_interpret(interpret)
+        self.staging = _resolve_staging_for(self.backend, staging,
+                                            self.interpret)
         self.mesh = resolve_chip_mesh(mesh, n_chips)
         self.n_chips = None if self.mesh is None else int(self.mesh.size)
         if self.mesh is not None and self.backend not in FUSED_BACKENDS:
@@ -189,7 +216,9 @@ class CompiledSpmm:
                 n_chips=sw.n_chips,
                 mesh=self.mesh,
                 blk_tag=jnp.asarray(sw.blk_tag),
-                blk_coff=jnp.asarray(sw.blk_coff))
+                blk_coff=jnp.asarray(sw.blk_coff),
+                max_span=sw.max_span,
+                max_cspan=sw.max_cspan)
         elif self.backend == "pallas_bcsr":
             self.mixed_plan = build_mixed_plan(
                 a.row_ptr, a.col_indices, a.shape, d, strategy=strategy,
@@ -212,7 +241,9 @@ class CompiledSpmm:
                 inv_perm=jnp.asarray(ws.inv_perm),
                 num_blocks=ws.num_blocks,
                 blk_tag=jnp.asarray(ws.blk_tag),
-                blk_coff=jnp.asarray(ws.blk_coff))
+                blk_coff=jnp.asarray(ws.blk_coff),
+                max_span=ws.max_span,
+                max_cspan=ws.max_cspan)
         elif self.backend == "ref":
             self._cols = jnp.asarray(a.col_indices)
 
@@ -282,7 +313,9 @@ class CompiledSpmm:
                 vals_flat = vals_ext[sw.gather_flat]
                 y_ws = spmm_ell_fused_sharded_op(
                     sw.blk_off, sw.blk_L, sw.cols_flat, vals_flat, x_pad,
-                    mesh=sw.mesh, bm=self.bm, interpret=self.interpret)
+                    mesh=sw.mesh, bm=self.bm, interpret=self.interpret,
+                    staging=self.staging, span=sw.max_span,
+                    cspan=sw.max_cspan)
                 # sharded inverse-permutation gather over the flattened
                 # (n_chips * ws_rows) workspace recovers row order
                 y_flat = y_ws.reshape(sw.n_chips * sw.ws_rows, -1)
@@ -295,7 +328,9 @@ class CompiledSpmm:
             vals_flat = vals_ext[fw.gather_flat]
             y_ws = spmm_ell_fused_op(
                 fw.blk_off, fw.blk_L, fw.cols_flat, vals_flat, x_pad,
-                bm=self.bm, interpret=self.interpret)
+                bm=self.bm, interpret=self.interpret,
+                staging=self.staging, span=fw.max_span,
+                cspan=fw.max_cspan)
             # single inverse-permutation gather replaces N scatters
             return y_ws[fw.inv_perm, :d]
         if backend == "pallas_bcsr":
@@ -314,7 +349,9 @@ class CompiledSpmm:
                 y_ws = spmm_bcsr_fused_sharded_op(
                     sw.blk_tag, sw.blk_off, sw.blk_coff, sw.blk_L,
                     sw.cols_flat, vals_flat, x_pad, mesh=sw.mesh,
-                    bm=self.bm, bk=self.bk, interpret=self.interpret)
+                    bm=self.bm, bk=self.bk, interpret=self.interpret,
+                    staging=self.staging, span=sw.max_span,
+                    cspan=sw.max_cspan)
                 y_flat = y_ws.reshape(sw.n_chips * sw.ws_rows, -1)
                 return y_flat[sw.inv_perm, :d]
             from ..kernels.ops import spmm_bcsr_fused_op
@@ -325,7 +362,8 @@ class CompiledSpmm:
             y_ws = spmm_bcsr_fused_op(
                 fw.blk_tag, fw.blk_off, fw.blk_coff, fw.blk_L,
                 fw.cols_flat, vals_flat, x_pad, bm=self.bm, bk=self.bk,
-                interpret=self.interpret)
+                interpret=self.interpret, staging=self.staging,
+                span=fw.max_span, cspan=fw.max_cspan)
             return y_ws[fw.inv_perm, :d]
         raise ValueError(self.backend)
 
@@ -342,13 +380,15 @@ class CompiledSpmm:
             t_struct, order = a.transpose_structure()
             key = ("spmmT", self._fingerprint, self.d, self.strategy,
                    self.backend, self.bm, self.bk, self.mxu_gain,
-                   self.interpret, mesh_fingerprint(self.mesh))
+                   self.interpret, self.staging,
+                   mesh_fingerprint(self.mesh))
             self._transpose = self.cache.get_or_build(
                 key, lambda: CompiledSpmm(
                     t_struct, self.d, strategy=self.strategy,
                     backend=self.backend, bm=self.bm, bk=self.bk,
                     mxu_gain=self.mxu_gain, interpret=self.interpret,
-                    mesh=self.mesh, cache=self.cache))
+                    staging=self.staging, mesh=self.mesh,
+                    cache=self.cache))
             self._t_order = jnp.asarray(order.astype(np.int32))
         vals_t = vals[self._t_order]
         return self._transpose._forward(vals_t, dy)
@@ -362,6 +402,7 @@ def compile_spmm(a: CSRMatrix, d: int, *, strategy: str = "nnz_split",
                  interpret: Optional[bool] = None,
                  mesh: Optional[Mesh] = None, n_chips: Optional[int] = None,
                  bk: int = 8, mxu_gain: float = 4.0,
+                 staging: Optional[str] = None,
                  cache: JitCache = GLOBAL_CACHE) -> CompiledSpmm:
     """Build (or fetch) the structure-specialized SpMM artifact.
 
@@ -372,18 +413,27 @@ def compile_spmm(a: CSRMatrix, d: int, *, strategy: str = "nnz_split",
     shard_map.  The resolved mesh is part of the cache key — same
     normalization as ``interpret``.  ``bk`` / ``mxu_gain`` parameterize
     the pallas_bcsr mixed plan (block width, VPU-vs-MXU tagging) and are
-    part of the specialization identity as well."""
+    part of the specialization identity as well.
+
+    ``staging`` selects the fused kernels' operand staging (DESIGN.md
+    §7.7): ``"resident"`` keeps the flat slot buffer and X panel in
+    VMEM, ``"dma"`` double-buffers per-block slot panels (and, on the
+    mixed backend, per-trip X panels) from HBM.  ``"auto"``/``None``
+    resolves to ``"dma"`` on a real TPU and ``"resident"`` under
+    interpret mode; the resolved mode is part of the cache key and the
+    two lowerings are bit-identical."""
     backend = _resolve_backend(
         backend, sharded=mesh is not None or n_chips is not None)
     interpret = resolve_interpret(interpret)
+    staging = _resolve_staging_for(backend, staging, interpret)
     mesh = resolve_chip_mesh(mesh, n_chips)
     key = ("spmm", a.fingerprint, d, strategy, backend, bm, bk, mxu_gain,
-           interpret, mesh_fingerprint(mesh))
+           interpret, staging, mesh_fingerprint(mesh))
     return cache.get_or_build(
         key, lambda: CompiledSpmm(a, d, strategy=strategy, backend=backend,
                                   bm=bm, bk=bk, mxu_gain=mxu_gain,
-                                  interpret=interpret, mesh=mesh,
-                                  cache=cache))
+                                  interpret=interpret, staging=staging,
+                                  mesh=mesh, cache=cache))
 
 
 def spmm(a: CSRMatrix, x, *, strategy: str = "nnz_split",
@@ -391,10 +441,12 @@ def spmm(a: CSRMatrix, x, *, strategy: str = "nnz_split",
          interpret: Optional[bool] = None,
          mesh: Optional[Mesh] = None, n_chips: Optional[int] = None,
          bk: int = 8, mxu_gain: float = 4.0,
+         staging: Optional[str] = None,
          cache: JitCache = GLOBAL_CACHE) -> jax.Array:
     """Y = A·X, specialized to A's structure and x's column count."""
     compiled = compile_spmm(a, x.shape[1], strategy=strategy,
                             backend=backend, bm=bm, interpret=interpret,
                             mesh=mesh, n_chips=n_chips, bk=bk,
-                            mxu_gain=mxu_gain, cache=cache)
+                            mxu_gain=mxu_gain, staging=staging,
+                            cache=cache)
     return compiled(jnp.asarray(a.vals), x)

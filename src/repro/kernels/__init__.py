@@ -3,6 +3,10 @@
 #   spmm_ell_fused          — the VPU serving hot path: one dispatch for
 #                             the whole multi-segment plan via a per-row-
 #                             block descriptor table (SMEM scalar prefetch)
+#   spmm_ell_fused_staged   — the same dispatch with double-buffered
+#                             per-block slot/cols panel DMA instead of a
+#                             resident flat VMEM buffer (staging="dma",
+#                             DESIGN.md §7.7); bit-identical output
 #   spmm_ell_fused_sharded  — the same kernel per chip under shard_map:
 #                             n_chips dispatches per forward over a 1-D
 #                             device mesh (ShardedFusedWorkspace tables)
@@ -11,6 +15,10 @@
 #                             and per-block-row kmax, so a plan that mixes
 #                             ELL rows and (bm x bk) matmul block-rows is
 #                             STILL one pallas_call (backend=pallas_bcsr)
+#   spmm_bcsr_fused_staged  — the mixed dispatch with panel DMA staging
+#                             for ALL streams: slots/cols per block, X
+#                             per trip ((bk, dt) MXU panels, bm-row VPU
+#                             gathers) — n·dt no longer bounds VMEM
 #   spmm_bcsr_fused_sharded — the mixed kernel per chip under shard_map;
 #                             closes the "MXU xor multi-chip" gap
 #   spmm_ell_segment        — single-segment micro-oracle retained from
@@ -24,11 +32,14 @@
 # DISPATCH_COUNTS host counter the Table IV invariant tests read.
 from . import ops, ref
 from .spmm_csr import spmm_ell_segment
-from .spmm_ell_fused import spmm_ell_fused, spmm_ell_fused_sharded
+from .spmm_ell_fused import (spmm_ell_fused, spmm_ell_fused_sharded,
+                             spmm_ell_fused_staged)
 from .spmm_bcsr import spmm_bcsr
-from .spmm_bcsr_fused import spmm_bcsr_fused, spmm_bcsr_fused_sharded
+from .spmm_bcsr_fused import (spmm_bcsr_fused, spmm_bcsr_fused_sharded,
+                              spmm_bcsr_fused_staged)
 from .sddmm import sddmm, sddmm_csr
 
 __all__ = ["ops", "ref", "spmm_ell_segment", "spmm_ell_fused",
-           "spmm_ell_fused_sharded", "spmm_bcsr", "spmm_bcsr_fused",
-           "spmm_bcsr_fused_sharded", "sddmm", "sddmm_csr"]
+           "spmm_ell_fused_sharded", "spmm_ell_fused_staged",
+           "spmm_bcsr", "spmm_bcsr_fused", "spmm_bcsr_fused_sharded",
+           "spmm_bcsr_fused_staged", "sddmm", "sddmm_csr"]

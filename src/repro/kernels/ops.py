@@ -19,13 +19,22 @@ import collections
 import jax
 
 from .spmm_csr import spmm_ell_segment
-from .spmm_ell_fused import spmm_ell_fused, spmm_ell_fused_sharded
+from .spmm_ell_fused import (spmm_ell_fused, spmm_ell_fused_sharded,
+                             spmm_ell_fused_staged)
 from .spmm_bcsr import spmm_bcsr
-from .spmm_bcsr_fused import spmm_bcsr_fused, spmm_bcsr_fused_sharded
+from .spmm_bcsr_fused import (spmm_bcsr_fused, spmm_bcsr_fused_sharded,
+                              spmm_bcsr_fused_staged)
 
 # name -> number of pallas_call dispatches issued (host-side; jit tracing
 # reuses the compiled kernel but each op wrapper call is one dispatch)
 DISPATCH_COUNTS: "collections.Counter[str]" = collections.Counter()
+
+# fused-dispatch operand staging modes (DESIGN.md §7.7):
+#   resident  whole flat slot buffer + X panel live in VMEM — the
+#             interpret-mode default and the bit-identity micro-oracle
+#   dma       double-buffered per-block panel DMA from HBM — the
+#             production TPU default
+STAGING_MODES = ("resident", "dma")
 
 
 def reset_dispatch_counts() -> None:
@@ -43,6 +52,41 @@ def resolve_interpret(interpret=None) -> bool:
     return default_interpret() if interpret is None else bool(interpret)
 
 
+def resolve_staging(staging=None, interpret=None) -> str:
+    """The effective staging mode — resolved ONCE, same contract as
+    :func:`resolve_interpret`: ``None``/``"auto"`` picks ``"dma"`` on a
+    real TPU backend and ``"resident"`` under interpret mode (the
+    emulated DMA engine is an oracle, not a win), and the resolved
+    string is part of every jit-cache key that touches it."""
+    if staging in (None, "auto"):
+        return "resident" if resolve_interpret(interpret) else "dma"
+    if staging not in STAGING_MODES:
+        raise ValueError(
+            f"staging must be 'auto' or one of {STAGING_MODES}, "
+            f"got {staging!r}")
+    return staging
+
+
+def _resolve_op_staging(staging, interpret, span: int, cspan: int) -> str:
+    """Wrapper-level resolution: the staged kernels need the planner's
+    DMA windows, so a caller without them (a direct kernel-layer call
+    that never built a workspace) must not be auto-routed onto the
+    staged path with zero-size scratch — auto falls back to resident,
+    and an EXPLICIT ``"dma"`` request without windows is an error."""
+    if span > 0 and cspan > 0:
+        return resolve_staging(staging, interpret)
+    if staging == "dma":
+        raise ValueError(
+            "staging='dma' needs the workspace DMA windows "
+            f"(span/cspan > 0, got span={span}, cspan={cspan}) — build "
+            "them via build_fused_workspace / build_sharded_workspace")
+    if staging not in (None, "auto", *STAGING_MODES):
+        raise ValueError(
+            f"staging must be 'auto' or one of {STAGING_MODES}, "
+            f"got {staging!r}")
+    return "resident"
+
+
 def spmm_ell_segment_op(cols_pad_flat, vals_pad, x, *, bm: int = 8,
                         interpret=None):
     interpret = resolve_interpret(interpret)
@@ -52,23 +96,43 @@ def spmm_ell_segment_op(cols_pad_flat, vals_pad, x, *, bm: int = 8,
 
 
 def spmm_ell_fused_op(blk_off, blk_L, cols_flat, vals_flat, x, *,
-                      bm: int = 8, interpret=None):
+                      bm: int = 8, interpret=None, staging=None,
+                      span: int = 0, cspan: int = 0):
+    """ONE dispatch for the whole plan, either staging mode; staged
+    launches additionally count under ``ell_fused_dma`` so tests can
+    assert WHICH lowering served a forward."""
     interpret = resolve_interpret(interpret)
+    staging = _resolve_op_staging(staging, interpret, span, cspan)
     DISPATCH_COUNTS["ell_fused"] += 1
+    if staging == "dma":
+        DISPATCH_COUNTS["ell_fused_dma"] += 1
+        return spmm_ell_fused_staged(blk_off, blk_L, cols_flat, vals_flat,
+                                     x, span=span, cspan=cspan, bm=bm,
+                                     interpret=interpret)
     return spmm_ell_fused(blk_off, blk_L, cols_flat, vals_flat, x,
                           bm=bm, interpret=interpret)
 
 
 def spmm_ell_fused_sharded_op(blk_off, blk_L, cols_flat, vals_flat, x, *,
-                              mesh, bm: int = 8, interpret=None):
+                              mesh, bm: int = 8, interpret=None,
+                              staging=None, span: int = 0,
+                              cspan: int = 0):
     """One fused dispatch per chip: counts ``mesh.size`` pallas_calls
     under the ``ell_fused`` key (the per-forward invariant the sharded
-    tests assert) plus one ``ell_fused_sharded`` wrapper call."""
+    tests assert) plus one ``ell_fused_sharded`` wrapper call — and
+    ``mesh.size`` under ``ell_fused_dma`` when staged."""
     interpret = resolve_interpret(interpret)
+    staging = _resolve_op_staging(staging, interpret, span, cspan)
     DISPATCH_COUNTS["ell_fused"] += mesh.size
     DISPATCH_COUNTS["ell_fused_sharded"] += 1
+    if staging == "dma":
+        DISPATCH_COUNTS["ell_fused_dma"] += mesh.size
+    else:
+        span = cspan = 0     # resident ignores the windows: keep them
+                             # out of the memoized shard_map cache key
     return spmm_ell_fused_sharded(blk_off, blk_L, cols_flat, vals_flat, x,
-                                  mesh=mesh, bm=bm, interpret=interpret)
+                                  mesh=mesh, bm=bm, interpret=interpret,
+                                  staging=staging, span=span, cspan=cspan)
 
 
 def spmm_bcsr_op(block_cols_pad, block_vals_pad, x, *, kmax: int,
@@ -81,25 +145,42 @@ def spmm_bcsr_op(block_cols_pad, block_vals_pad, x, *, kmax: int,
 
 def spmm_bcsr_fused_op(blk_tag, blk_off, blk_coff, blk_L, cols_flat,
                        vals_flat, x, *, bm: int = 8, bk: int = 8,
-                       interpret=None):
+                       interpret=None, staging=None, span: int = 0,
+                       cspan: int = 0):
     """ONE dispatch for a whole mixed VPU/MXU plan (Table IV invariant,
-    now covering the MXU block-rows as well)."""
+    now covering the MXU block-rows as well); staged launches also
+    count under ``bcsr_fused_dma``."""
     interpret = resolve_interpret(interpret)
+    staging = _resolve_op_staging(staging, interpret, span, cspan)
     DISPATCH_COUNTS["bcsr_fused"] += 1
+    if staging == "dma":
+        DISPATCH_COUNTS["bcsr_fused_dma"] += 1
+        return spmm_bcsr_fused_staged(blk_tag, blk_off, blk_coff, blk_L,
+                                      cols_flat, vals_flat, x, span=span,
+                                      cspan=cspan, bm=bm, bk=bk,
+                                      interpret=interpret)
     return spmm_bcsr_fused(blk_tag, blk_off, blk_coff, blk_L, cols_flat,
                            vals_flat, x, bm=bm, bk=bk, interpret=interpret)
 
 
 def spmm_bcsr_fused_sharded_op(blk_tag, blk_off, blk_coff, blk_L,
                                cols_flat, vals_flat, x, *, mesh,
-                               bm: int = 8, bk: int = 8, interpret=None):
+                               bm: int = 8, bk: int = 8, interpret=None,
+                               staging=None, span: int = 0,
+                               cspan: int = 0):
     """One mixed fused dispatch per chip: counts ``mesh.size``
     pallas_calls under the ``bcsr_fused`` key plus one
     ``bcsr_fused_sharded`` wrapper call — same accounting shape as the
-    ELL sharded path."""
+    ELL sharded path, with ``bcsr_fused_dma`` tracking staged chips."""
     interpret = resolve_interpret(interpret)
+    staging = _resolve_op_staging(staging, interpret, span, cspan)
     DISPATCH_COUNTS["bcsr_fused"] += mesh.size
     DISPATCH_COUNTS["bcsr_fused_sharded"] += 1
+    if staging == "dma":
+        DISPATCH_COUNTS["bcsr_fused_dma"] += mesh.size
+    else:
+        span = cspan = 0     # resident ignores the windows (see above)
     return spmm_bcsr_fused_sharded(blk_tag, blk_off, blk_coff, blk_L,
                                    cols_flat, vals_flat, x, mesh=mesh,
-                                   bm=bm, bk=bk, interpret=interpret)
+                                   bm=bm, bk=bk, interpret=interpret,
+                                   staging=staging, span=span, cspan=cspan)

@@ -23,11 +23,19 @@ the scalar unit per grid step (``lax.cond``) — the grid itself stays
 fully static, preserving the paper's no-data-dependent-branches
 property within each trip loop.
 
-Operand staging matches ``spmm_ell_fused`` (resident X panel + resident
-flat slot buffer; see that module's caveat on production DMA staging).
-The value stream is SHARED: MXU block panels live in the same flat
-``vals_flat`` buffer as the ELL slots — one ``vals_ext[gather_flat]``
-materialization serves the whole mixed plan.
+Operand staging matches ``spmm_ell_fused``: the ``resident`` mode keeps
+the whole flat slot buffer and X panel in VMEM, and the ``dma`` mode
+(``spmm_bcsr_fused_staged``, DESIGN.md §7.7) double-buffers each
+block's ``[off, off + span)`` slot panel and ``[coff, coff + cspan)``
+column panel from HBM while the previous block computes.  Here the X
+operand is streamed too: MXU trips prefetch the bcols-driven (bk, dt)
+X panel of the NEXT block-column while the current one multiplies (the
+same runtime-known index_map DMA the pre-fusion ``spmm_bcsr`` kernel
+demonstrated), and VPU trips gather their bm X rows by async copy one
+trip ahead — so ``n·dt`` no longer has to fit in VMEM.  The value
+stream is SHARED: MXU block panels live in the same flat ``vals_flat``
+buffer as the ELL slots — one ``vals_ext[gather_flat]`` materialization
+serves the whole mixed plan.
 
 ``spmm_bcsr_fused_sharded`` runs the same kernel once per chip under
 ``shard_map``, exactly like the ELL twin: stacked per-chip descriptor
@@ -91,6 +99,122 @@ def _kernel(tag_ref, off_ref, coff_ref, L_ref, cols_ref, vals_ref, x_ref,
     y_ref[...] = acc.astype(y_ref.dtype)             # one store per block
 
 
+def _staged_kernel(tag_ref, off_ref, coff_ref, L_ref, cols_ref, vals_ref,
+                   x_ref, y_ref, cbuf, vbuf, xgbuf, xpbuf, csem, vsem,
+                   xgsem, xpsem, *, bm: int, bk: int, dt: int,
+                   span: int, cspan: int):
+    """Double-buffered twin of :func:`_kernel` (DESIGN.md §7.7).
+
+    Block-level staging is tag-independent: whatever unit block ``b+1``
+    drives, its slot/column panels are the fixed windows ``[off, off +
+    span)`` / ``[coff, coff + cspan)``, started at block ``b``'s first
+    d-tile and waited at ``b+1``'s.  X staging is per-trip and
+    per-branch: each trip's X operand (bm gathered rows on the VPU, one
+    (bk, dt) block-column panel on the MXU) is prefetched while the
+    previous trip computes.  Every DMA is started exactly once and
+    waited exactly once, all within the branch that issued it.
+    """
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    nb = pl.num_programs(0)
+
+    def panel_dmas(slot, blk):
+        return (
+            pltpu.make_async_copy(
+                cols_ref.at[pl.ds(coff_ref[blk], cspan)],
+                cbuf.at[slot], csem.at[slot]),
+            pltpu.make_async_copy(
+                vals_ref.at[pl.ds(off_ref[blk], span)],
+                vbuf.at[slot], vsem.at[slot]),
+        )
+
+    @pl.when((b == 0) & (j == 0))
+    def _warmup():
+        for dma in panel_dmas(0, 0):
+            dma.start()
+
+    @pl.when((j == 0) & (b + 1 < nb))
+    def _prefetch_next():
+        for dma in panel_dmas((b + 1) % 2, b + 1):
+            dma.start()
+
+    @pl.when(j == 0)
+    def _arrive():
+        for dma in panel_dmas(b % 2, b):
+            dma.wait()
+
+    slot = b % 2
+    tag = tag_ref[b]
+    L = L_ref[b]
+
+    def vpu_block():
+        # the gather itself moves to the DMA engine: trip nz+1's bm X
+        # rows stream into the alternate (bm, dt) buffer while trip
+        # nz's FMA runs — the "exactly the operands it needs" form of
+        # the paper's register-level claim
+        def row_dma(ts, rr, nz):
+            k = cbuf[slot, rr * L + nz]
+            return pltpu.make_async_copy(
+                x_ref.at[pl.ds(k, 1), pl.ds(j * dt, dt)],
+                xgbuf.at[ts, pl.ds(rr, 1)], xgsem.at[ts, rr])
+
+        def start_trip(ts, nz):
+            for rr in range(bm):
+                row_dma(ts, rr, nz).start()
+
+        @pl.when(L > 0)
+        def _():
+            start_trip(0, 0)
+
+        def nnz_step(nz, acc):
+            ts = nz % 2
+
+            @pl.when(nz + 1 < L)
+            def _():
+                start_trip((nz + 1) % 2, nz + 1)
+
+            for rr in range(bm):
+                row_dma(ts, rr, nz).wait()
+            vs = [vbuf[slot, pl.ds(rr * L + nz, 1)] for rr in range(bm)]
+            v = jnp.concatenate(vs, axis=0)          # (bm,)
+            return acc + (v[:, None].astype(jnp.float32)
+                          * xgbuf[ts].astype(jnp.float32))
+        return jax.lax.fori_loop(0, L, nnz_step,
+                                 jnp.zeros((bm, dt), jnp.float32))
+
+    def mxu_block():
+        # bcols-driven (bk, dt) X panel DMA — the pre-fusion kernel's
+        # BlockSpec index_map, now explicit and double-buffered
+        def panel_dma(ts, k):
+            bc = cbuf[slot, k]
+            return pltpu.make_async_copy(
+                x_ref.at[pl.ds(bc * bk, bk), pl.ds(j * dt, dt)],
+                xpbuf.at[ts], xpsem.at[ts])
+
+        @pl.when(L > 0)
+        def _():
+            panel_dma(0, 0).start()
+
+        def blk_step(k, acc):
+            ts = k % 2
+
+            @pl.when(k + 1 < L)
+            def _():
+                panel_dma((k + 1) % 2, k + 1).start()
+
+            panel_dma(ts, k).wait()
+            a = vbuf[slot, pl.ds(k * (bm * bk), bm * bk)]
+            return acc + jnp.dot(
+                a.reshape(bm, bk).astype(jnp.float32),
+                xpbuf[ts].astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+        return jax.lax.fori_loop(0, L, blk_step,
+                                 jnp.zeros((bm, dt), jnp.float32))
+
+    acc = jax.lax.cond(tag == 0, vpu_block, mxu_block)
+    y_ref[...] = acc.astype(y_ref.dtype)             # one store per block
+
+
 @functools.partial(jax.jit, static_argnames=("bm", "bk", "interpret"))
 def spmm_bcsr_fused(blk_tag: jax.Array, blk_off: jax.Array,
                     blk_coff: jax.Array, blk_L: jax.Array,
@@ -139,12 +263,68 @@ def spmm_bcsr_fused(blk_tag: jax.Array, blk_off: jax.Array,
     )(blk_tag, blk_off, blk_coff, blk_L, cols_flat, vals_flat, x)
 
 
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bk", "span", "cspan", "interpret"))
+def spmm_bcsr_fused_staged(blk_tag: jax.Array, blk_off: jax.Array,
+                           blk_coff: jax.Array, blk_L: jax.Array,
+                           cols_flat: jax.Array, vals_flat: jax.Array,
+                           x: jax.Array, *, span: int, cspan: int,
+                           bm: int = 8, bk: int = 8,
+                           interpret: bool = True) -> jax.Array:
+    """The DMA-staged mixed dispatch (DESIGN.md §7.7) — same contract
+    as :func:`spmm_bcsr_fused` and BIT-identical output.
+
+    ``span``/``cspan`` are the workspace's ``max_span``/``max_cspan``
+    DMA windows.  All three streams leave VMEM residency: slot/column
+    panels double-buffer per block, X per trip ((bk, dt) panels on MXU
+    trips, bm row gathers on VPU trips) — resident VMEM is two panels
+    per stream regardless of nnz or ``n``.
+    """
+    from ..core.ccm import kernel_lane_tile  # lazy: core imports kernels
+
+    num_blocks = blk_tag.shape[0]
+    n_pad, d_pad = x.shape
+    dt = kernel_lane_tile(d_pad)
+    grid = (num_blocks, d_pad // dt)
+
+    return pl.pallas_call(
+        functools.partial(_staged_kernel, bm=bm, bk=bk, dt=dt, span=span,
+                          cspan=cspan),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(memory_space=pltpu.ANY),     # cols (HBM)
+                pl.BlockSpec(memory_space=pltpu.ANY),     # vals (HBM)
+                pl.BlockSpec(memory_space=pltpu.ANY),     # X     (HBM)
+            ],
+            out_specs=pl.BlockSpec(
+                (bm, dt),
+                lambda b, j, tag, off, coff, L: (b, j)),
+            scratch_shapes=[
+                pltpu.SMEM((2, cspan), jnp.int32),        # cols panels
+                pltpu.VMEM((2, span), jnp.float32),       # value panels
+                pltpu.VMEM((2, bm, dt), jnp.float32),     # VPU X rows
+                pltpu.VMEM((2, bk, dt), jnp.float32),     # MXU X panel
+                pltpu.SemaphoreType.DMA((2,)),
+                pltpu.SemaphoreType.DMA((2,)),
+                pltpu.SemaphoreType.DMA((2, bm)),
+                pltpu.SemaphoreType.DMA((2,)),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((num_blocks * bm, d_pad),
+                                       jnp.float32),
+        interpret=interpret,
+    )(blk_tag, blk_off, blk_coff, blk_L, cols_flat, vals_flat, x)
+
+
 def spmm_bcsr_fused_sharded(blk_tag: jax.Array, blk_off: jax.Array,
                             blk_coff: jax.Array, blk_L: jax.Array,
                             cols_flat: jax.Array, vals_flat: jax.Array,
                             x: jax.Array, *, mesh, bm: int = 8,
-                            bk: int = 8, interpret: bool = True
-                            ) -> jax.Array:
+                            bk: int = 8, interpret: bool = True,
+                            staging: str = "resident", span: int = 0,
+                            cspan: int = 0) -> jax.Array:
     """Run one mixed fused dispatch per chip under ``shard_map``.
 
     Descriptor tables are (C, ...) stacked per chip; X is replicated.
@@ -153,21 +333,34 @@ def spmm_bcsr_fused_sharded(blk_tag: jax.Array, blk_off: jax.Array,
     ``inv_perm`` gather.  The body is traced once and SPMD-replicated:
     a forward costs exactly C dispatches — the multi-chip form of the
     one-artifact-per-instance invariant, now covering the MXU path too.
+
+    ``staging="dma"`` lowers each chip through
+    :func:`spmm_bcsr_fused_staged` with the workspace's cross-chip
+    ``span``/``cspan`` windows; ``"resident"`` keeps the flat layout.
     """
-    return _sharded_callable(mesh, bm, bk, interpret)(
+    return _sharded_callable(mesh, bm, bk, interpret, staging, span,
+                             cspan)(
         blk_tag, blk_off, blk_coff, blk_L, cols_flat, vals_flat, x)
 
 
 @functools.lru_cache(maxsize=32)
-def _sharded_callable(mesh, bm: int, bk: int, interpret: bool):
+def _sharded_callable(mesh, bm: int, bk: int, interpret: bool,
+                      staging: str = "resident", span: int = 0,
+                      cspan: int = 0):
     """jit-wrapped shard_map closure, memoized per (mesh, bm, bk,
-    interpret) — same lifecycle as the ELL twin; evicted by
-    ``core.jit_cache.clear_global_cache``."""
+    interpret, staging, span, cspan) — same lifecycle as the ELL twin;
+    evicted by ``core.jit_cache.clear_global_cache``."""
     (axis,) = mesh.axis_names
 
     def per_chip(tag, off, coff, L, cols, vals, xp):
-        y = spmm_bcsr_fused(tag[0], off[0], coff[0], L[0], cols[0],
-                            vals[0], xp, bm=bm, bk=bk, interpret=interpret)
+        if staging == "dma":
+            y = spmm_bcsr_fused_staged(
+                tag[0], off[0], coff[0], L[0], cols[0], vals[0], xp,
+                span=span, cspan=cspan, bm=bm, bk=bk, interpret=interpret)
+        else:
+            y = spmm_bcsr_fused(tag[0], off[0], coff[0], L[0], cols[0],
+                                vals[0], xp, bm=bm, bk=bk,
+                                interpret=interpret)
         return y[None]
 
     shard = P(axis)

@@ -17,10 +17,23 @@ branching is still gone (padding removed it at plan time); only the
 trip count varies per block, carried in the scalar register file like
 the paper's ``r10/r11`` row bounds.
 
-Operand staging (DESIGN.md §7.3/§7.5): X is a resident (n, dt) column
-panel and the gathered value slots are a resident flat VMEM buffer —
-the same whole-panel staging the per-segment kernel used; a production
-TPU lowering would double-buffer per-block slot panels via DMA.
+Operand staging (DESIGN.md §7.3/§7.5/§7.7) comes in two modes:
+
+  resident  X is a resident (n, dt) column panel and the gathered value
+            slots are a resident flat VMEM buffer — the whole-panel
+            staging the per-segment kernel used.  Kept as the
+            interpret-mode default and the micro-oracle the staged path
+            is held bit-identical to.
+  dma       ``spmm_ell_fused_staged``: the slot and column streams stay
+            in HBM (``memory_space=ANY``) and each row-block's panel —
+            the contiguous ``[off, off + span)`` window its descriptor
+            names — is DMA'd into one of two VMEM/SMEM buffers, with
+            block N+1's panels prefetched by async copy while block N
+            computes (double buffering, DESIGN.md §7.7).  VMEM then
+            holds 2·max_span slots instead of the whole flat buffer.
+            The X column panel stays resident here (the scalar-row
+            gather touches arbitrary X rows); the mixed kernel's MXU
+            path streams X too (see spmm_bcsr_fused).
 
 The kernel writes workspace rows (segment order, padded); the caller
 maps them back to output rows with ONE inverse-permutation gather
@@ -72,6 +85,69 @@ def _kernel(off_ref, L_ref, cols_ref, vals_ref, x_ref, y_ref, *,
     y_ref[...] = acc.astype(y_ref.dtype)             # one store per block
 
 
+def _staged_kernel(off_ref, L_ref, cols_ref, vals_ref, x_ref, y_ref,
+                   cbuf, vbuf, csem, vsem, *, bm: int, dt: int,
+                   span: int, cspan: int):
+    """Double-buffered twin of :func:`_kernel` (DESIGN.md §7.7).
+
+    ``cols_ref``/``vals_ref`` live in HBM; each block's panel is the
+    fixed window ``[off, off + span)`` (the planner tail-pads the flat
+    streams so it is always in bounds).  Panels for block ``b + 1``
+    start copying into the alternate buffer while block ``b`` computes;
+    the descriptor stream itself stays scalar-prefetched.  Each DMA is
+    started exactly once (at the block's first d-tile) and waited
+    exactly once (at the consumer block's first d-tile).
+    """
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    nb = pl.num_programs(0)
+
+    def panel_dmas(slot, blk):
+        off = off_ref[blk]
+        return (
+            pltpu.make_async_copy(cols_ref.at[pl.ds(off, cspan)],
+                                  cbuf.at[slot], csem.at[slot]),
+            pltpu.make_async_copy(vals_ref.at[pl.ds(off, span)],
+                                  vbuf.at[slot], vsem.at[slot]),
+        )
+
+    @pl.when((b == 0) & (j == 0))
+    def _warmup():
+        for dma in panel_dmas(0, 0):
+            dma.start()
+
+    @pl.when((j == 0) & (b + 1 < nb))
+    def _prefetch_next():
+        for dma in panel_dmas((b + 1) % 2, b + 1):
+            dma.start()
+
+    @pl.when(j == 0)
+    def _arrive():
+        for dma in panel_dmas(b % 2, b):
+            dma.wait()
+
+    slot = b % 2
+    L = L_ref[b]
+
+    def nnz_step(nz, acc):
+        # identical accumulation order to the resident kernel — the
+        # staged path must stay BIT-identical, only the operand source
+        # moves from a resident flat buffer to the staged panel
+        xs, vs = [], []
+        for rr in range(bm):
+            s = rr * L + nz                          # panel-local slot
+            k = cbuf[slot, s]                        # SMEM scalar read
+            xs.append(x_ref[pl.ds(k, 1), :])         # (1, dt) CCM row
+            vs.append(vbuf[slot, pl.ds(s, 1)])       # (1,) slot value
+        xg = jnp.concatenate(xs, axis=0)             # (bm, dt)
+        v = jnp.concatenate(vs, axis=0)              # (bm,)
+        return acc + v[:, None].astype(jnp.float32) * xg.astype(jnp.float32)
+
+    acc = jnp.zeros((bm, dt), dtype=jnp.float32)
+    acc = jax.lax.fori_loop(0, L, nnz_step, acc)
+    y_ref[...] = acc.astype(y_ref.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("bm", "interpret"))
 def spmm_ell_fused(blk_off: jax.Array, blk_L: jax.Array,
                    cols_flat: jax.Array, vals_flat: jax.Array,
@@ -114,10 +190,61 @@ def spmm_ell_fused(blk_off: jax.Array, blk_L: jax.Array,
     )(blk_off, blk_L, cols_flat, vals_flat, x)
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "span", "cspan", "interpret"))
+def spmm_ell_fused_staged(blk_off: jax.Array, blk_L: jax.Array,
+                          cols_flat: jax.Array, vals_flat: jax.Array,
+                          x: jax.Array, *, span: int, cspan: int,
+                          bm: int = 8, interpret: bool = True
+                          ) -> jax.Array:
+    """The DMA-staged fused dispatch (DESIGN.md §7.7) — same contract as
+    :func:`spmm_ell_fused` and BIT-identical output.
+
+    ``span``/``cspan`` are the workspace's ``max_span``/``max_cspan``:
+    the static per-block DMA window over the slot/column streams.  The
+    streams keep ``memory_space=ANY`` (HBM on TPU) and only two
+    ``span``-slot panels are resident per buffer — the production
+    answer to the resident path's whole-flat-buffer VMEM footprint.
+    """
+    from ..core.ccm import kernel_lane_tile  # lazy: core imports kernels
+
+    num_blocks = blk_off.shape[0]
+    n, d_pad = x.shape
+    dt = kernel_lane_tile(d_pad)
+    grid = (num_blocks, d_pad // dt)
+
+    return pl.pallas_call(
+        functools.partial(_staged_kernel, bm=bm, dt=dt, span=span,
+                          cspan=cspan),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(memory_space=pltpu.ANY),     # cols (HBM)
+                pl.BlockSpec(memory_space=pltpu.ANY),     # vals (HBM)
+                pl.BlockSpec((n, dt), lambda b, j, off, L: (0, j)),
+            ],
+            out_specs=pl.BlockSpec((bm, dt),
+                                   lambda b, j, off, L: (b, j)),
+            scratch_shapes=[
+                pltpu.SMEM((2, cspan), jnp.int32),        # cols panels
+                pltpu.VMEM((2, span), jnp.float32),       # value panels
+                pltpu.SemaphoreType.DMA((2,)),
+                pltpu.SemaphoreType.DMA((2,)),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((num_blocks * bm, d_pad),
+                                       jnp.float32),
+        interpret=interpret,
+    )(blk_off, blk_L, cols_flat, vals_flat, x)
+
+
 def spmm_ell_fused_sharded(blk_off: jax.Array, blk_L: jax.Array,
                            cols_flat: jax.Array, vals_flat: jax.Array,
                            x: jax.Array, *, mesh, bm: int = 8,
-                           interpret: bool = True) -> jax.Array:
+                           interpret: bool = True,
+                           staging: str = "resident", span: int = 0,
+                           cspan: int = 0) -> jax.Array:
     """Run one fused dispatch per chip under ``shard_map``.
 
     blk_off/blk_L     : (C, B) int32 — per-chip descriptor tables
@@ -134,24 +261,37 @@ def spmm_ell_fused_sharded(blk_off: jax.Array, blk_L: jax.Array,
     executes exactly one ``pallas_call`` over its own descriptor shard,
     so a forward costs C dispatches total — the multi-chip extension of
     the one-artifact-per-instance invariant (paper Table IV).
+
+    ``staging="dma"`` lowers each chip's dispatch through
+    :func:`spmm_ell_fused_staged` with the workspace's cross-chip
+    ``span``/``cspan`` DMA windows; ``"resident"`` keeps the flat VMEM
+    layout.  Either way it is still one ``pallas_call`` per chip.
     """
-    return _sharded_callable(mesh, bm, interpret)(
+    return _sharded_callable(mesh, bm, interpret, staging, span, cspan)(
         blk_off, blk_L, cols_flat, vals_flat, x)
 
 
 @functools.lru_cache(maxsize=32)
-def _sharded_callable(mesh, bm: int, interpret: bool):
-    """jit-wrapped shard_map closure, memoized per (mesh, bm, interpret)
-    so repeated forwards reuse one compiled executable instead of
-    rebuilding and retracing the shard_map every call (Mesh is hashable;
-    input-shape specialization is jit's usual cache).  Bounded, and
-    evicted by ``core.jit_cache.clear_global_cache`` so compiled state
-    and device handles don't outlive the caches that reference them."""
+def _sharded_callable(mesh, bm: int, interpret: bool,
+                      staging: str = "resident", span: int = 0,
+                      cspan: int = 0):
+    """jit-wrapped shard_map closure, memoized per (mesh, bm, interpret,
+    staging, span, cspan) so repeated forwards reuse one compiled
+    executable instead of rebuilding and retracing the shard_map every
+    call (Mesh is hashable; input-shape specialization is jit's usual
+    cache).  Bounded, and evicted by
+    ``core.jit_cache.clear_global_cache`` so compiled state and device
+    handles don't outlive the caches that reference them."""
     (axis,) = mesh.axis_names
 
     def per_chip(off, L, cols, vals, xp):
-        y = spmm_ell_fused(off[0], L[0], cols[0], vals[0], xp,
-                           bm=bm, interpret=interpret)
+        if staging == "dma":
+            y = spmm_ell_fused_staged(off[0], L[0], cols[0], vals[0], xp,
+                                      span=span, cspan=cspan, bm=bm,
+                                      interpret=interpret)
+        else:
+            y = spmm_ell_fused(off[0], L[0], cols[0], vals[0], xp,
+                               bm=bm, interpret=interpret)
         return y[None]
 
     shard = P(axis)

@@ -93,11 +93,17 @@ def test_fused_workspace_descriptor_invariants():
         bm = plan.row_block
         assert ws.ws_rows == ws.num_blocks * bm
         assert ws.cols_flat.shape == ws.gather_flat.shape
-        # descriptors tile the slot array exactly, in order
+        # descriptors tile the real slot region exactly, in order; the
+        # buffer additionally carries the max_span DMA tail so the
+        # staged kernel's fixed window never runs out of bounds
         ends = ws.blk_off.astype(np.int64) + bm * ws.blk_L.astype(np.int64)
         assert ws.blk_off[0] == 0 if ws.num_blocks else True
         np.testing.assert_array_equal(ws.blk_off[1:], ends[:-1])
-        assert (ends[-1] if ws.num_blocks else 0) == ws.cols_flat.shape[0]
+        assert ((ends[-1] if ws.num_blocks else 0)
+                == ws.cols_flat.shape[0] - ws.max_cspan)
+        assert ws.max_span == ws.max_cspan  # pure-VPU: streams parallel
+        assert np.all(ws.blk_off + ws.max_span <= ws.gather_flat.shape[0])
+        assert np.all(ws.blk_coff + ws.max_cspan <= ws.cols_flat.shape[0])
         # inv_perm hits every output row exactly once, inside workspace
         assert sorted(ws.inv_perm.tolist()) == sorted(set(
             ws.inv_perm.tolist()))

@@ -7,8 +7,11 @@ the end-to-end oracles the deterministic suites spot-check:
   * fused pallas_ell == ref backend (allclose, f32 accumulate),
   * sharded fused == unsharded fused BIT-identical (same per-row
     accumulation order; sharding must be a pure re-partitioning),
+  * DMA-staged fused == resident fused BIT-identical across backends,
+    strategies, skew families and chip counts (staging only moves
+    operands, DESIGN.md §7.7 — it must not touch a bit),
   * plan/workspace balance invariants: efficiency in (0, 1], every
-    output row packed exactly once.
+    output row packed exactly once, staged DMA windows in bounds.
 
 Whole-module skip when hypothesis is absent (dev-only dependency), same
 policy as test_plan.py.  Kernel-executing properties keep instances
@@ -130,6 +133,44 @@ def test_sharded_mixed_bit_matches_fused(a, d, strategy, chips):
     assert np.array_equal(np.asarray(y), np.asarray(y0))
 
 
+@settings(max_examples=8, deadline=None)
+@given(a=csr_cases(), d=st.integers(1, 24),
+       strategy=st.sampled_from(STRATEGIES),
+       backend=st.sampled_from(("pallas_ell", "pallas_bcsr")))
+def test_staged_bit_matches_resident(a, d, strategy, backend):
+    """staging="dma" re-stages operands through double-buffered panel
+    DMA but must reproduce the resident lowering BIT-for-bit on every
+    adversarial structure family."""
+    x = jnp.asarray(
+        np.random.default_rng(d + 4).standard_normal((a.n, d)),
+        jnp.float32)
+    y_res = spmm(a, x, strategy=strategy, backend=backend,
+                 interpret=True, staging="resident", cache=JitCache())
+    y_dma = spmm(a, x, strategy=strategy, backend=backend,
+                 interpret=True, staging="dma", cache=JitCache())
+    assert np.array_equal(np.asarray(y_dma), np.asarray(y_res))
+
+
+@settings(max_examples=8, deadline=None)
+@given(a=csr_cases(), d=st.integers(1, 16),
+       strategy=st.sampled_from(STRATEGIES),
+       backend=st.sampled_from(("pallas_ell", "pallas_bcsr")),
+       chips=st.integers(1, 4))
+def test_staged_sharded_bit_matches_resident_sharded(a, d, strategy,
+                                                     backend, chips):
+    chips = min(chips, N_DEV)
+    x = jnp.asarray(
+        np.random.default_rng(d + 5).standard_normal((a.n, d)),
+        jnp.float32)
+    y_res = spmm(a, x, strategy=strategy, backend=backend,
+                 interpret=True, staging="resident", n_chips=chips,
+                 cache=JitCache())
+    y_dma = spmm(a, x, strategy=strategy, backend=backend,
+                 interpret=True, staging="dma", n_chips=chips,
+                 cache=JitCache())
+    assert np.array_equal(np.asarray(y_dma), np.asarray(y_res))
+
+
 @settings(max_examples=60, deadline=None)
 @given(a=csr_cases(), d=st.integers(1, 64),
        strategy=st.sampled_from(STRATEGIES))
@@ -169,3 +210,6 @@ def test_sharded_workspace_invariants(a, d, strategy, chips):
             assert ws.blk_off[c][0] == 0
         # gather stays inside the global concat(vals,[0]) buffer
         assert np.all(ws.gather_flat[c] <= a.nnz)
+    # staged-DMA windows (DESIGN.md §7.7) never read past the streams
+    assert np.all(ws.blk_off + ws.max_span <= ws.gather_flat.shape[1])
+    assert np.all(ws.blk_coff + ws.max_cspan <= ws.cols_flat.shape[1])

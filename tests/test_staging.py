@@ -1,0 +1,333 @@
+"""Acceptance suite for double-buffered slot-panel DMA staging
+(DESIGN.md §7.7, staging="dma" on the fused backends).
+
+What staging must preserve — and what this module pins:
+
+  * BIT-identity: the staged lowering reorders nothing, it only moves
+    operands from resident VMEM buffers to per-block DMA panels, so
+    staged == resident exactly (both backends, all three strategies,
+    single-chip and sharded).
+  * the Table IV invariant: still exactly ONE pallas_call per chip per
+    forward, asserted via DISPATCH_COUNTS and on the traced jaxpr.
+  * specialization identity: the resolved staging mode is part of the
+    jit-cache key ("resident" and "dma" artifacts never alias), and
+    "auto" resolves per backend (interpret -> resident, TPU -> dma).
+  * workspace metadata: every descriptor's fixed DMA window
+    [off, off + max_span) / [coff, coff + max_cspan) stays in bounds.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CSRMatrix, MXU_TAG, build_mixed_plan,
+                        build_fused_workspace, build_sharded_workspace,
+                        compile_spmm, random_csr, spmm)
+from repro.core.jit_cache import JitCache
+from repro.core.plan import STRATEGIES, STAGE_TILE
+from repro.kernels import ops
+from repro.kernels.ops import resolve_staging
+
+ROOT = Path(__file__).resolve().parents[1]
+N_DEV = len(jax.devices())
+MAX_CHIPS = min(N_DEV, 4)
+
+FUSED = ("pallas_ell", "pallas_bcsr")
+
+
+def _mixed_csr(seed=0, m=48, n=64):
+    """Dense block-rows (MXU bait) + ragged sparse tail (VPU bait) —
+    staging must survive both panel shapes in one dispatch."""
+    rng = np.random.default_rng(seed)
+    dense = np.zeros((m, n), np.float32)
+    for i in range(16):
+        j0 = (i // 8) * 16
+        dense[i, j0:j0 + 16] = rng.standard_normal(16)
+    for i in range(16, m):
+        k = rng.integers(1, 4)
+        dense[i, rng.choice(n, size=k, replace=False)] = (
+            rng.standard_normal(k))
+    return CSRMatrix.from_dense(dense)
+
+
+def _x(n, d, seed=1):
+    return jnp.asarray(
+        np.random.default_rng(seed).standard_normal((n, d)), jnp.float32)
+
+
+# -- bit-identity ----------------------------------------------------------
+
+@pytest.mark.parametrize("backend", FUSED)
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_staged_bit_identical_to_resident(backend, strategy):
+    a = _mixed_csr(seed=2)
+    x = _x(a.n, 20, seed=3)
+    y_res = spmm(a, x, strategy=strategy, backend=backend,
+                 interpret=True, staging="resident", cache=JitCache())
+    y_dma = spmm(a, x, strategy=strategy, backend=backend,
+                 interpret=True, staging="dma", cache=JitCache())
+    assert np.array_equal(np.asarray(y_dma), np.asarray(y_res))
+
+
+@pytest.mark.parametrize("backend", FUSED)
+def test_staged_bit_identical_on_skewed_powerlaw(backend):
+    a = random_csr(120, 96, density=0.06, family="powerlaw", seed=4)
+    x = _x(a.n, 24, seed=5)
+    y_res = spmm(a, x, backend=backend, interpret=True,
+                 staging="resident", cache=JitCache())
+    y_dma = spmm(a, x, backend=backend, interpret=True,
+                 staging="dma", cache=JitCache())
+    assert np.array_equal(np.asarray(y_dma), np.asarray(y_res))
+
+
+@pytest.mark.parametrize("backend", FUSED)
+def test_staged_sharded_bit_identical(backend):
+    """sharded+staged == sharded+resident == unsharded+staged: staging
+    and sharding must compose without touching a single bit."""
+    a = _mixed_csr(seed=6, m=56)
+    x = _x(a.n, 16, seed=7)
+    y0 = spmm(a, x, backend=backend, interpret=True, staging="dma",
+              cache=JitCache())
+    for chips in range(1, MAX_CHIPS + 1):
+        y_res = spmm(a, x, backend=backend, interpret=True,
+                     staging="resident", n_chips=chips, cache=JitCache())
+        y_dma = spmm(a, x, backend=backend, interpret=True,
+                     staging="dma", n_chips=chips, cache=JitCache())
+        assert np.array_equal(np.asarray(y_dma), np.asarray(y_res)), chips
+        assert np.array_equal(np.asarray(y_dma), np.asarray(y0)), chips
+
+
+def test_staged_gradients_bit_match_resident():
+    """The custom VJP routes the backward through a transposed artifact
+    that must inherit the staging mode (and stay bit-identical)."""
+    a = _mixed_csr(seed=8)
+    x = _x(a.n, 12, seed=9)
+    vals = jnp.asarray(a.vals)
+    for backend in FUSED:
+        c_res = compile_spmm(a, 12, backend=backend, interpret=True,
+                             staging="resident", cache=JitCache())
+        c_dma = compile_spmm(a, 12, backend=backend, interpret=True,
+                             staging="dma", cache=JitCache())
+
+        def loss(c):
+            return lambda v, xx: jnp.sum(jnp.tanh(c(v, xx)))
+
+        gr = jax.grad(loss(c_res), argnums=(0, 1))(vals, x)
+        gd = jax.grad(loss(c_dma), argnums=(0, 1))(vals, x)
+        assert np.array_equal(np.asarray(gr[0]), np.asarray(gd[0]))
+        assert np.array_equal(np.asarray(gr[1]), np.asarray(gd[1]))
+        assert c_dma._transpose is not None
+        assert c_dma._transpose.staging == "dma"
+
+
+# -- one pallas_call per chip ---------------------------------------------
+
+def _iter_eqns(jaxpr):
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            inner = v if hasattr(v, "eqns") else getattr(v, "jaxpr", None)
+            if hasattr(inner, "eqns"):
+                yield from _iter_eqns(inner)
+
+
+@pytest.mark.parametrize("backend,counter",
+                         [("pallas_ell", "ell_fused"),
+                          ("pallas_bcsr", "bcsr_fused")])
+def test_staged_trace_is_one_pallas_call(backend, counter):
+    a = _mixed_csr(seed=10)
+    x = _x(a.n, 16, seed=11)
+    c = compile_spmm(a, 16, backend=backend, interpret=True,
+                     staging="dma", cache=JitCache())
+    jaxpr = jax.make_jaxpr(lambda v, xx: c(v, xx))(jnp.asarray(a.vals), x)
+    pallas = [e for e in _iter_eqns(jaxpr.jaxpr)
+              if e.primitive.name == "pallas_call"]
+    assert len(pallas) == 1
+
+    ops.reset_dispatch_counts()
+    y = c(jnp.asarray(a.vals), x)
+    jax.block_until_ready(y)
+    assert ops.DISPATCH_COUNTS[counter] == 1
+    assert ops.DISPATCH_COUNTS[counter + "_dma"] == 1
+
+
+@pytest.mark.parametrize("backend,counter",
+                         [("pallas_ell", "ell_fused"),
+                          ("pallas_bcsr", "bcsr_fused")])
+def test_staged_sharded_trace_is_one_pallas_call_per_chip(backend,
+                                                          counter):
+    a = _mixed_csr(seed=12, m=56)
+    x = _x(a.n, 16, seed=13)
+    c = compile_spmm(a, 16, backend=backend, interpret=True,
+                     staging="dma", n_chips=MAX_CHIPS, cache=JitCache())
+    jaxpr = jax.make_jaxpr(lambda v, xx: c(v, xx))(jnp.asarray(a.vals), x)
+    eqns = list(_iter_eqns(jaxpr.jaxpr))
+    shard_eqns = [e for e in eqns if e.primitive.name == "shard_map"]
+    assert len(shard_eqns) == 1
+    body = shard_eqns[0].params["jaxpr"]
+    body = body if hasattr(body, "eqns") else body.jaxpr
+    in_body = [e for e in _iter_eqns(body)
+               if e.primitive.name == "pallas_call"]
+    assert len(in_body) == 1
+
+    ops.reset_dispatch_counts()
+    y = c(jnp.asarray(a.vals), x)
+    jax.block_until_ready(y)
+    assert ops.DISPATCH_COUNTS[counter] == MAX_CHIPS
+    assert ops.DISPATCH_COUNTS[counter + "_dma"] == MAX_CHIPS
+
+
+def test_resident_forward_counts_no_dma_dispatch():
+    a = _mixed_csr(seed=14)
+    x = _x(a.n, 8, seed=15)
+    c = compile_spmm(a, 8, backend="pallas_bcsr", interpret=True,
+                     staging="resident", cache=JitCache())
+    ops.reset_dispatch_counts()
+    jax.block_until_ready(c(jnp.asarray(a.vals), x))
+    assert ops.DISPATCH_COUNTS["bcsr_fused"] == 1
+    assert ops.DISPATCH_COUNTS["bcsr_fused_dma"] == 0
+
+
+# -- specialization identity ----------------------------------------------
+
+def test_jit_cache_keys_on_staging_mode():
+    a = _mixed_csr(seed=16)
+    cache = JitCache()
+    c_res = compile_spmm(a, 8, backend="pallas_bcsr", interpret=True,
+                         staging="resident", cache=cache)
+    c_dma = compile_spmm(a, 8, backend="pallas_bcsr", interpret=True,
+                         staging="dma", cache=cache)
+    assert c_res is not c_dma
+    assert cache.stats()["entries"] == 2
+    # repeat hits, and "auto" under interpret mode resolves to resident
+    assert compile_spmm(a, 8, backend="pallas_bcsr", interpret=True,
+                        staging="dma", cache=cache) is c_dma
+    assert compile_spmm(a, 8, backend="pallas_bcsr", interpret=True,
+                        staging="auto", cache=cache) is c_res
+    assert compile_spmm(a, 8, backend="pallas_bcsr", interpret=True,
+                        cache=cache) is c_res
+
+
+def test_resolve_staging_contract():
+    assert resolve_staging(None, True) == "resident"
+    assert resolve_staging("auto", True) == "resident"
+    assert resolve_staging(None, False) == "dma"
+    assert resolve_staging("dma", True) == "dma"
+    assert resolve_staging("resident", False) == "resident"
+    with pytest.raises(ValueError):
+        resolve_staging("mmap", True)
+    # the knob only exists on the fused dispatch
+    a = _mixed_csr(seed=17)
+    with pytest.raises(ValueError):
+        compile_spmm(a, 8, backend="ref", staging="dma", cache=JitCache())
+
+
+def test_op_wrappers_refuse_dma_without_windows():
+    """Direct kernel-layer callers that never built a workspace must not
+    be auto-routed onto the staged path with zero-size scratch: auto
+    falls back to resident, an explicit "dma" without windows raises."""
+    a = _mixed_csr(seed=20)
+    x = _x(a.n, 8, seed=21)
+    c = compile_spmm(a, 8, backend="pallas_ell", interpret=True,
+                     staging="resident", cache=JitCache())
+    fw = c._fused
+    vals_flat = jnp.concatenate(
+        [jnp.asarray(a.vals, jnp.float32), jnp.zeros((1,))])[fw.gather_flat]
+    x_pad = jnp.pad(x, ((0, 0), (0, 128 - x.shape[1])))
+    with pytest.raises(ValueError):
+        ops.spmm_ell_fused_op(fw.blk_off, fw.blk_L, fw.cols_flat,
+                              vals_flat, x_pad, interpret=True,
+                              staging="dma")       # no span/cspan
+    # auto (None) without windows stays resident even if it would
+    # otherwise resolve to dma — and produces the right answer
+    ops.reset_dispatch_counts()
+    y = ops.spmm_ell_fused_op(fw.blk_off, fw.blk_L, fw.cols_flat,
+                              vals_flat, x_pad, interpret=True)
+    assert ops.DISPATCH_COUNTS["ell_fused_dma"] == 0
+    y_ref = spmm(a, x, backend="ref", cache=JitCache())
+    np.testing.assert_allclose(np.asarray(y[fw.inv_perm, :8]),
+                               np.asarray(y_ref), rtol=1e-4, atol=1e-4)
+
+
+# -- workspace DMA-window metadata ----------------------------------------
+
+def test_workspace_staging_metadata_invariants():
+    a = _mixed_csr(seed=18, m=50)
+    plan = build_mixed_plan(a.row_ptr, a.col_indices, a.shape, 16)
+    ws = build_fused_workspace(plan)
+    assert np.any(ws.blk_tag == MXU_TAG)
+    bm, bk = ws.row_block, ws.bk
+    L = ws.blk_L.astype(np.int64)
+    mxu = ws.blk_tag == MXU_TAG
+    np.testing.assert_array_equal(
+        ws.blk_span, np.where(mxu, L * bm * bk, bm * L))
+    np.testing.assert_array_equal(
+        ws.blk_cspan, np.where(mxu, L, bm * L))
+    assert ws.max_span % STAGE_TILE == 0
+    assert ws.max_cspan % STAGE_TILE == 0
+    assert ws.max_span >= int(ws.blk_span.max(initial=0))
+    # the fixed window never reads past either stream
+    assert np.all(ws.blk_off + ws.max_span <= ws.gather_flat.shape[0])
+    assert np.all(ws.blk_coff + ws.max_cspan <= ws.cols_flat.shape[0])
+
+
+def test_sharded_workspace_windows_cover_every_chip():
+    a = _mixed_csr(seed=19, m=50)
+    for backend in FUSED:
+        sw = build_sharded_workspace(a.row_ptr, a.col_indices, a.shape,
+                                     16, n_chips=3, backend=backend)
+        # one traced kernel serves every chip: the global window must
+        # cover the largest block on ANY chip (pad blocks span 0)
+        L = sw.blk_L.astype(np.int64)
+        spans = np.where(sw.blk_tag == MXU_TAG,
+                         L * sw.row_block * sw.bk, sw.row_block * L)
+        cspans = np.where(sw.blk_tag == MXU_TAG, L, sw.row_block * L)
+        assert sw.max_span >= int(spans.max(initial=0))
+        assert sw.max_cspan >= int(cspans.max(initial=0))
+        assert np.all(sw.blk_off + sw.max_span
+                      <= sw.gather_flat.shape[1])
+        assert np.all(sw.blk_coff + sw.max_cspan
+                      <= sw.cols_flat.shape[1])
+
+
+# -- 8-device acceptance ---------------------------------------------------
+
+def test_acceptance_staged_on_8_device_mesh():
+    """ISSUE acceptance: staged == resident BIT-identical on an 8-chip
+    host mesh for both fused backends, with exactly n_chips staged
+    dispatches per forward."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(ROOT / "src")
+    code = textwrap.dedent("""
+        import jax, numpy as np, jax.numpy as jnp
+        assert len(jax.devices()) == 8
+        from repro.core import random_csr, spmm
+        from repro.core.jit_cache import JitCache
+        from repro.kernels import ops
+        a = random_csr(128, 96, density=0.06, family="powerlaw", seed=21)
+        x = jnp.asarray(np.random.default_rng(22)
+                        .standard_normal((96, 16)), jnp.float32)
+        for backend, counter in (("pallas_ell", "ell_fused"),
+                                 ("pallas_bcsr", "bcsr_fused")):
+            y_res = spmm(a, x, backend=backend, interpret=True,
+                         staging="resident", n_chips=8, cache=JitCache())
+            ops.reset_dispatch_counts()
+            y_dma = spmm(a, x, backend=backend, interpret=True,
+                         staging="dma", n_chips=8, cache=JitCache())
+            assert ops.DISPATCH_COUNTS[counter] == 8, backend
+            assert ops.DISPATCH_COUNTS[counter + "_dma"] == 8, backend
+            assert np.array_equal(np.asarray(y_dma),
+                                  np.asarray(y_res)), backend
+        print("STAGED-8DEV-OK")
+    """)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "STAGED-8DEV-OK" in out.stdout

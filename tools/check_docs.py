@@ -1,0 +1,118 @@
+"""Doc-reference checker (CI lint tier).
+
+Two classes of silent doc rot this gate catches:
+
+  1. dangling design citations — the source tree annotates decisions as
+     ``DESIGN.md §N[.M]``; every cited section must exist as a numbered
+     heading in ``docs/DESIGN.md`` (the repo shipped for three PRs with
+     citations into a file that did not exist);
+  2. stale README paths — every repo-relative path named in
+     ``README.md`` code spans/blocks must exist (generated artifacts
+     like ``BENCH_pr.json`` are allowlisted).
+
+Run from anywhere inside the repo:
+
+    python tools/check_docs.py
+
+Exit status 0 = clean; 1 = dangling references (each printed with its
+location).
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+DESIGN = ROOT / "docs" / "DESIGN.md"
+README = ROOT / "README.md"
+SRC = ROOT / "src"
+
+# produced by running the benchmarks/CI, intentionally not checked in
+GENERATED = {"BENCH_pr.json"}
+
+# a "DESIGN.md" mention followed by one or more §refs (possibly
+# slash/comma-separated, possibly wrapped across a docstring line
+# break: "DESIGN.md §7.3/§7.5", "(DESIGN.md\n§7.2)")
+_CITE = re.compile(r"DESIGN\.md((?:[\s(,/]*§\d+(?:\.\d+)*)+)")
+_SECTION = re.compile(r"§(\d+(?:\.\d+)*)")
+# numbered markdown headings: "## 7. Kernel lowering", "### 7.3 CCM ..."
+_HEADING = re.compile(r"^#{1,6}\s+(\d+(?:\.\d+)*)[.\s]", re.MULTILINE)
+# repo-relative paths inside README code spans/fences
+_PATHLIKE = re.compile(r"[A-Za-z0-9_.][A-Za-z0-9_./-]*\.(?:py|md|json|yml|txt)\b")
+
+
+def design_sections() -> set:
+    if not DESIGN.exists():
+        return set()
+    return set(_HEADING.findall(DESIGN.read_text()))
+
+
+def cited_sections(py_root: pathlib.Path):
+    """Yield (file, lineno, section) for every DESIGN.md §N citation.
+
+    Scans whole files (not lines): docstring wrapping routinely splits
+    a citation across a line break, and a line-based scanner would
+    silently skip exactly the references most likely to rot.
+    """
+    for path in sorted(py_root.rglob("*.py")):
+        text = path.read_text()
+        for match in _CITE.finditer(text):
+            lineno = text.count("\n", 0, match.start()) + 1
+            for sec in _SECTION.findall(match.group(1)):
+                yield path.relative_to(ROOT), lineno, sec
+
+
+def check_design_citations() -> list:
+    sections = design_sections()
+    failures = []
+    if not DESIGN.exists():
+        failures.append(f"{DESIGN.relative_to(ROOT)}: missing entirely")
+        sections = set()
+    seen = False
+    for rel, lineno, sec in cited_sections(SRC):
+        seen = True
+        if sec not in sections:
+            failures.append(
+                f"{rel}:{lineno}: cites DESIGN.md §{sec} — no such "
+                f"section in docs/DESIGN.md")
+    if not seen:
+        failures.append(
+            "no DESIGN.md citations found under src/ — the scanner "
+            "regex is probably broken (the tree is known to cite it)")
+    return failures
+
+
+def check_readme_paths() -> list:
+    if not README.exists():
+        return ["README.md: missing entirely"]
+    text = README.read_text()
+    # only look inside code spans/fences — prose may name moved files
+    spans = re.findall(r"``?([^`]+)``?", text)
+    failures = []
+    for span in spans:
+        for token in _PATHLIKE.findall(span):
+            name = pathlib.PurePosixPath(token).name
+            if name in GENERATED:
+                continue
+            if not (ROOT / token).exists():
+                failures.append(
+                    f"README.md: code span names {token!r} which does "
+                    f"not exist in the repo")
+    return sorted(set(failures))
+
+
+def main() -> int:
+    failures = check_design_citations() + check_readme_paths()
+    for f in failures:
+        print(f"[check_docs] DANGLING {f}", file=sys.stderr)
+    if failures:
+        return 1
+    n_cites = sum(1 for _ in cited_sections(SRC))
+    print(f"[check_docs] OK: {n_cites} DESIGN.md citations resolve, "
+          f"README paths exist")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
