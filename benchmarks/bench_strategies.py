@@ -120,7 +120,7 @@ def run(n_chips: int = 0) -> list:
 
 
 def _timed_cell(bench, strategy, backend, n_chips, a, x, *, counter,
-                extra=(), staging=None):
+                extra=(), staging=None, x_sharding=None):
     """One smoke cell: compile, time, count launches per call."""
     kw = dict(strategy=strategy, backend=backend, interpret=True,
               cache=JitCache())
@@ -128,6 +128,8 @@ def _timed_cell(bench, strategy, backend, n_chips, a, x, *, counter,
         kw["n_chips"] = n_chips
     if staging:
         kw["staging"] = staging
+    if x_sharding:
+        kw["x_sharding"] = x_sharding
     c = compile_spmm(a, x.shape[1], **kw)
     vals = jnp.asarray(a.vals)
     ops.reset_dispatch_counts()
@@ -188,6 +190,27 @@ def smoke_records() -> list:
     records.append(_timed_cell("fused_mixed_dma_sharded", "nnz_split",
                                "pallas_bcsr", 1, a, x,
                                counter="bcsr_fused", staging="dma"))
+    # X-sharded cells: the "_xshard" bench-name suffix is the X-placement
+    # axis (x_sharding="rows" — fetch-table exchange + remapped column
+    # streams), pinned to 1 chip like the other sharded cells so record
+    # keys never depend on visible devices.  1 chip still exercises the
+    # whole exchange path (all_to_all, strip packing, remap); the wall
+    # cell tracks its plumbing cost, the dispatch count pins the
+    # one-call-per-chip invariant on the x-sharded lowering.
+    records.append(_timed_cell("fused_ell_xshard", "nnz_split",
+                               "pallas_ell", 1, a, x,
+                               counter="ell_fused", x_sharding="rows"))
+    records.append(_timed_cell("fused_mixed_xshard", "nnz_split",
+                               "pallas_bcsr", 1, a, x,
+                               counter="bcsr_fused", x_sharding="rows"))
+    records.append(_timed_cell("fused_ell_dma_xshard", "nnz_split",
+                               "pallas_ell", 1, a, x,
+                               counter="ell_fused", staging="dma",
+                               x_sharding="rows"))
+    records.append(_timed_cell("fused_mixed_dma_xshard", "nnz_split",
+                               "pallas_bcsr", 1, a, x,
+                               counter="bcsr_fused", staging="dma",
+                               x_sharding="rows"))
     return records
 
 

@@ -26,7 +26,10 @@ Axes beyond the four key fields are encoded in the ``bench`` name so
 old baselines stay comparable: the DMA-staged fused cells (operand
 staging, DESIGN.md §7.7 — staging="dma" vs the default resident
 lowering) carry a ``_dma`` suffix, e.g. ``fused_ell_dma`` /
-``fused_mixed_dma_sharded``.
+``fused_mixed_dma_sharded``, and the X-sharded cells (X placement,
+DESIGN.md §7.8 — x_sharding="rows" vs the default replicated X) carry
+an ``_xshard`` suffix, e.g. ``fused_ell_xshard`` /
+``fused_mixed_dma_xshard``.
 
 Wall-clock comparisons are normalized by the ``calib`` record — a fixed
 dense matmul timed on the same process — so a uniformly slower CI

@@ -21,6 +21,12 @@ ap = argparse.ArgumentParser()
 ap.add_argument("--n-chips", type=int, default=0,
                 help="shard the A_hat aggregation across this many chips "
                      "via the fused pallas_ell path (0 = ref backend)")
+ap.add_argument("--x-sharding", default="auto",
+                choices=["auto", "replicated", "rows"],
+                help="feature-matrix placement on the chip mesh: "
+                     "replicated per chip, or rows = each chip fetches "
+                     "exactly the H panels its rows touch (exact-panel "
+                     "exchange; bit-identical either way)")
 args = ap.parse_args()
 
 # -- synthetic 2-community graph -------------------------------------------
@@ -57,7 +63,8 @@ if args.n_chips:
     if n_chips < args.n_chips:
         print(f"clamping --n-chips {args.n_chips} -> {n_chips} "
               f"(devices present)")
-    agg_kw = dict(backend="pallas_ell", interpret=None, n_chips=n_chips)
+    agg_kw = dict(backend="pallas_ell", interpret=None, n_chips=n_chips,
+                  x_sharding=args.x_sharding)
 else:
     agg_kw = dict(backend="ref")
 agg_h = compile_spmm(a_hat, D_H, strategy="nnz_split", cache=cache,
@@ -65,7 +72,8 @@ agg_h = compile_spmm(a_hat, D_H, strategy="nnz_split", cache=cache,
 agg_out = compile_spmm(a_hat, CLASSES, strategy="nnz_split", cache=cache,
                        **agg_kw)
 print(f"aggregation backend: {agg_h.backend}"
-      + (f" sharded over {agg_h.n_chips} chip(s)" if agg_h.n_chips else ""))
+      + (f" sharded over {agg_h.n_chips} chip(s), "
+         f"x_sharding={agg_h.x_sharding}" if agg_h.n_chips else ""))
 a_vals = jnp.asarray(a_hat.vals)
 
 def init(rng_key):

@@ -9,7 +9,8 @@ from .plan import (SpmmPlan, MixedPlan, MxuBlockRow, FusedEllWorkspace,
 from .jit_cache import (GLOBAL_CACHE, JitCache, clear_global_cache,
                         mesh_fingerprint)
 from .spmm import (CompiledSpmm, compile_spmm, spmm, chip_mesh,
-                   resolve_chip_mesh, BACKENDS, FUSED_BACKENDS)
+                   resolve_chip_mesh, BACKENDS, FUSED_BACKENDS,
+                   X_SHARDING_MODES)
 from . import moe_spmm
 
 __all__ = [
@@ -22,6 +23,6 @@ __all__ = [
     "MXU_TAG", "VPU_TAG",
     "GLOBAL_CACHE", "JitCache", "clear_global_cache", "mesh_fingerprint",
     "CompiledSpmm", "compile_spmm", "spmm", "chip_mesh",
-    "resolve_chip_mesh", "BACKENDS", "FUSED_BACKENDS",
+    "resolve_chip_mesh", "BACKENDS", "FUSED_BACKENDS", "X_SHARDING_MODES",
     "moe_spmm",
 ]

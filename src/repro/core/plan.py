@@ -635,8 +635,18 @@ def partition_rows_for_chips(row_ptr: np.ndarray, n_chips: int,
     bounds = np.clip(bounds.astype(np.int64), 0, m)
     if align > 1:
         bounds[1:-1] = ((bounds[1:-1] + align // 2) // align) * align
-        bounds = np.maximum.accumulate(np.clip(bounds, 0, m))
-    return bounds
+        bounds = np.clip(bounds, 0, m)
+    bounds = np.maximum.accumulate(bounds)
+    # degenerate-shard clamp: rounding (or a hot head row) can leave a
+    # chip empty while LATER chips still hold rows — e.g. align=8 on a
+    # single block-row used to give [0, 0, 8, 8] (chip 0 empty, chip 1
+    # everything).  Every chip before the end of the matrix gets at
+    # least one align-unit (the tail block-row may be ragged); surplus
+    # chips drain to empty ranges AT THE END, never in the middle.
+    for i in range(1, n_chips):
+        if bounds[i] <= bounds[i - 1] and bounds[i - 1] < m:
+            bounds[i] = min(bounds[i - 1] + align, m)
+    return np.maximum.accumulate(bounds)
 
 
 # ---------------------------------------------------------------------------
@@ -666,11 +676,33 @@ class ShardedFusedWorkspace:
     ``i`` lives at row ``inv_perm[i]`` of the flattened
     ``(n_chips * ws_rows, d)`` workspace output.
 
-    ``max_span``/``max_cspan`` are the cross-chip maxima of the per-chip
-    DMA windows (see :class:`FusedEllWorkspace`): the staged kernel is
-    traced once and SPMD-replicated, so every chip's panel copy uses the
-    same static window and ``S``/``Sc`` include the global max-window
-    tail.
+    DMA windows are PER CHIP (``chip_span``/``chip_cspan``): each chip's
+    staged scratch ring is sized from its own largest block, so one hot
+    shard (all-nnz-in-one-row) no longer inflates every chip's VMEM ring
+    and stream tail to the cross-chip max.  The stacking stays
+    rectangular for shard_map (``S = max_c(real_slots_c + span_c)``),
+    and the dispatch layer specializes the staged kernel per distinct
+    window (``lax.switch`` on the chip axis index) — still exactly one
+    ``pallas_call`` executed per chip.  ``max_span``/``max_cspan`` keep
+    the cross-chip maxima for introspection and the unsharded contract.
+
+    Cross-chip X sharding (``x_sharding="rows"``): X rows are split into
+    ``bk``-row panels owned contiguously by chips (chip ``c`` owns
+    panels ``[c*x_own_panels, (c+1)*x_own_panels)``), and the planner
+    derives each chip's TOUCHED panel set from its descriptor stream —
+    the same AOT-vs-JIT information gap the paper exploits for
+    registers, applied to placement.  ``cols_flat`` is then remapped
+    into each chip's compact local panel space, and the fetch tables
+    drive a plan-time exact-panel exchange (DESIGN.md §7.8):
+
+      x_fetch[c, t]    global panel id of chip c's t-th local panel
+                       (sorted; padded by panel 0),
+      x_send[c, j, t]  owner-local panel ids chip c sends chip j,
+      x_recv[c, t]     flat index into chip c's (C*T2,) received-panel
+                       buffer for local panel t.
+
+    ``x_sharding="replicated"`` leaves all of these empty and keeps the
+    PR 2 layout (X replicated per chip, cols global).
     """
     blk_off: np.ndarray      # (C, B) int32 — first slot per row-block
     blk_L: np.ndarray        # (C, B) int32 — loop trips (0 == pad block)
@@ -685,19 +717,38 @@ class ShardedFusedWorkspace:
     blk_tag: Optional[np.ndarray] = None   # (C, B) int32 VPU_TAG/MXU_TAG
     blk_coff: Optional[np.ndarray] = None  # (C, B) int32 into cols_flat
     bk: int = 8
-    max_span: int = 0        # cross-chip DMA window over slots
-    max_cspan: int = 0       # cross-chip DMA window over cols entries
+    max_span: int = 0        # cross-chip max DMA window over slots
+    max_cspan: int = 0       # cross-chip max DMA window over cols entries
+    chip_span: Optional[np.ndarray] = None   # (C,) int32 per-chip window
+    chip_cspan: Optional[np.ndarray] = None  # (C,) int32 per-chip window
+    # cross-chip X fetch schedule (x_sharding="rows"; DESIGN.md §7.8)
+    x_sharding: str = "replicated"
+    x_panels: int = 0        # global bk-row X panels (ceil(n_pad / bk))
+    x_own_panels: int = 0    # panels owned per chip (contiguous split)
+    x_fetch: Optional[np.ndarray] = None  # (C, T) int32 global panel ids
+    x_send: Optional[np.ndarray] = None   # (C, C, T2) int32 local panels
+    x_recv: Optional[np.ndarray] = None   # (C, T) int32 into (C*T2,) recv
 
     def __post_init__(self):
         if self.blk_tag is None:
             self.blk_tag = np.zeros_like(self.blk_L)
         if self.blk_coff is None:
             self.blk_coff = self.blk_off.copy()
+        if self.chip_span is None:
+            self.chip_span = np.full(self.n_chips, self.max_span, np.int32)
+        if self.chip_cspan is None:
+            self.chip_cspan = np.full(self.n_chips, self.max_cspan,
+                                      np.int32)
 
     @property
     def num_blocks(self) -> int:
         """Common per-chip block count B (0 iff the matrix has no rows)."""
         return int(self.blk_off.shape[1])
+
+    @property
+    def x_local_panels(self) -> int:
+        """Per-chip local X panel count T (x_sharding="rows" only)."""
+        return 0 if self.x_fetch is None else int(self.x_fetch.shape[1])
 
     @property
     def has_mxu(self) -> bool:
@@ -723,13 +774,32 @@ class ShardedFusedWorkspace:
         return self.nnz / max(self.padded_nnz, 1)
 
 
+def _chip_x_panels(ws: FusedEllWorkspace, real_cols: int, bk: int):
+    """Per-entry X panel ids (and the MXU-entry mask) for one chip's
+    real column stream.
+
+    A VPU slot names an X row ``k`` (panel ``k // bk``); an MXU column
+    entry IS a block-column id, i.e. already a panel id (the MXU X panel
+    is exactly rows ``[bc*bk, bc*bk + bk)``).  Sentinel entries are 0,
+    so panel 0 is force-included — every remapped id stays in bounds.
+    """
+    cols = ws.cols_flat[:real_cols].astype(np.int64)
+    mxu_entry = np.zeros(real_cols, bool)
+    for tag, coff, L in zip(ws.blk_tag, ws.blk_coff, ws.blk_L):
+        if tag == MXU_TAG:
+            mxu_entry[coff:coff + L] = True
+    pan = np.where(mxu_entry, cols, cols // bk)
+    return pan, mxu_entry
+
+
 def build_sharded_workspace(row_ptr: np.ndarray, col_indices: np.ndarray,
                             shape, d: int, *, n_chips: int,
                             strategy: str = "nnz_split", row_block: int = 8,
                             fingerprint: str = "", max_dt: int = 512,
                             merge_target_segments: int = 16,
                             backend: str = "pallas_ell", bk: int = 8,
-                            mxu_gain: float = 4.0
+                            mxu_gain: float = 4.0,
+                            x_sharding: str = "replicated"
                             ) -> ShardedFusedWorkspace:
     """Partition rows across ``n_chips`` and pack one fused workspace per
     chip (see :class:`ShardedFusedWorkspace`).  Host-only — needs no
@@ -739,9 +809,19 @@ def build_sharded_workspace(row_ptr: np.ndarray, col_indices: np.ndarray,
     plan (see :func:`build_mixed_plan`) and aligns the chip boundaries
     to ``row_block`` so the partitioner sees block-row — not scalar-row
     — boundaries and no (bm x bk) block straddles a chip.
+
+    ``x_sharding="rows"`` additionally splits X into ``bk``-row panels
+    owned contiguously by chips, remaps each chip's column stream into
+    its compact touched-panel space, and emits the fetch/send/recv
+    tables the dispatch layer's exact-panel exchange consumes
+    (DESIGN.md §7.8) — instance size then scales with the mesh instead
+    of one chip's HBM.
     """
     if n_chips < 1:
         raise ValueError(f"n_chips must be >= 1, got {n_chips}")
+    if x_sharding not in ("replicated", "rows"):
+        raise ValueError(
+            f"x_sharding must be 'replicated' or 'rows', got {x_sharding!r}")
     mixed = backend == "pallas_bcsr"
     row_ptr = np.asarray(row_ptr)
     col_indices = np.asarray(col_indices)
@@ -775,16 +855,19 @@ def build_sharded_workspace(row_ptr: np.ndarray, col_indices: np.ndarray,
         bases.append(base)
 
     B = max(ws.num_blocks for ws in shards)
-    # one traced kernel serves every chip, so the staged DMA window is
-    # the cross-chip max — re-tail each chip's streams to that window
-    # (real entries never reach into a chip's own tail, so growing it
-    # just extends the sentinel region)
-    gspan = max((ws.max_span for ws in shards), default=0)
-    gcspan = max((ws.max_cspan for ws in shards), default=0)
-    S = max((int(ws.gather_flat.shape[0]) - ws.max_span
-             for ws in shards), default=0) + gspan
-    Sc = max((int(ws.cols_flat.shape[0]) - ws.max_cspan
-              for ws in shards), default=0) + gcspan
+    # per-chip DMA windows (hot-shard fix): each chip's staged ring is
+    # sized from ITS OWN largest block, floored at one STAGE_TILE so an
+    # empty chip's (SPMD-replicated) window copies stay non-degenerate.
+    # The stream width only has to admit each chip's own window, so one
+    # hot shard no longer tail-pads every chip to the cross-chip max.
+    real_s = [int(ws.gather_flat.shape[0]) - ws.max_span for ws in shards]
+    real_c = [int(ws.cols_flat.shape[0]) - ws.max_cspan for ws in shards]
+    chip_span = np.asarray([max(ws.max_span, STAGE_TILE) for ws in shards],
+                           np.int32)
+    chip_cspan = np.asarray(
+        [max(ws.max_cspan, STAGE_TILE) for ws in shards], np.int32)
+    S = max(r + int(s) for r, s in zip(real_s, chip_span))
+    Sc = max(r + int(s) for r, s in zip(real_c, chip_cspan))
     ws_rows = B * row_block
     blk_off = np.zeros((n_chips, B), np.int32)
     blk_L = np.zeros((n_chips, B), np.int32)       # pad blocks: L == 0
@@ -793,25 +876,97 @@ def build_sharded_workspace(row_ptr: np.ndarray, col_indices: np.ndarray,
     cols_flat = np.zeros((n_chips, Sc), np.int32)
     gather_flat = np.full((n_chips, S), nnz, np.int64)  # pad -> 0.0 sentinel
     inv_perm = np.zeros(m, np.int32)
+    needs: List[np.ndarray] = []
+    x_panels = max(-(-int(n) // bk), 1)
     for c, ws in enumerate(shards):
         nb = ws.num_blocks
-        ns, nc = int(ws.gather_flat.shape[0]), int(ws.cols_flat.shape[0])
         blk_off[c, :nb] = ws.blk_off
         blk_L[c, :nb] = ws.blk_L
         blk_tag[c, :nb] = ws.blk_tag
         blk_coff[c, :nb] = ws.blk_coff
-        cols_flat[c, :nc] = ws.cols_flat
+        chip_cols = ws.cols_flat[:real_c[c]]
+        if x_sharding == "rows":
+            # remap this chip's column stream into its compact local
+            # panel space: global row k -> local_panel(k//bk)*bk + k%bk
+            # for VPU slots, global block-column -> local panel for MXU
+            # entries (sentinel 0 stays 0: panel 0 is always fetched)
+            pan, mxu_entry = _chip_x_panels(ws, real_c[c], bk)
+            need = np.unique(np.concatenate(
+                [np.zeros(1, np.int64), pan]))
+            lut = np.zeros(x_panels, np.int64)
+            lut[need] = np.arange(need.size)
+            k = chip_cols.astype(np.int64)
+            chip_cols = np.where(mxu_entry, lut[pan],
+                                 lut[pan] * bk + k % bk).astype(np.int32)
+            needs.append(need)
+        cols_flat[c, :real_c[c]] = chip_cols
         # re-base shard-local value indices to the global vals buffer;
         # the shard's zero sentinel (its local nnz) becomes the global one
         sub_nnz = int(plans[c].nnz)
-        g = ws.gather_flat
-        gather_flat[c, :ns] = np.where(g < sub_nnz, g + bases[c], nnz)
+        g = ws.gather_flat[:real_s[c]]
+        gather_flat[c, :real_s[c]] = np.where(g < sub_nnz, g + bases[c],
+                                              nnz)
         r0, r1 = int(bounds[c]), int(bounds[c + 1])
         inv_perm[r0:r1] = c * ws_rows + ws.inv_perm
+
+    x_own = x_fetch = x_send = x_recv = None
+    own_panels = 0
+    if x_sharding == "rows":
+        own_panels = -(-x_panels // n_chips)
+        x_fetch, x_send, x_recv = _x_fetch_tables(needs, own_panels,
+                                                  n_chips)
 
     return ShardedFusedWorkspace(
         blk_off=blk_off, blk_L=blk_L, cols_flat=cols_flat,
         gather_flat=gather_flat, inv_perm=inv_perm, bounds=bounds,
         ws_rows=ws_rows, row_block=row_block, n_chips=n_chips,
         shard_plans=plans, blk_tag=blk_tag, blk_coff=blk_coff, bk=bk,
-        max_span=gspan, max_cspan=gcspan)
+        max_span=int(chip_span.max(initial=0)),
+        max_cspan=int(chip_cspan.max(initial=0)),
+        chip_span=chip_span, chip_cspan=chip_cspan,
+        x_sharding=x_sharding, x_panels=x_panels,
+        x_own_panels=own_panels, x_fetch=x_fetch, x_send=x_send,
+        x_recv=x_recv)
+
+
+def _x_fetch_tables(needs: List[np.ndarray], own_panels: int,
+                    n_chips: int):
+    """Rectangular fetch/send/recv tables for the exact-panel exchange.
+
+    ``needs[c]`` is chip ``c``'s sorted touched-panel set (0 always
+    included, so table padding — which reuses panel 0 — never invents a
+    panel nobody owns).  Panel ``p`` is owned by chip ``p //
+    own_panels``; ``rank`` is ``p``'s position among the panels chip
+    ``j`` needs from that owner, which is exactly its slot in the
+    owner's send row — so the flat receive index is ``owner * T2 +
+    rank`` whatever the mesh size.
+    """
+    T = max(need.size for need in needs)
+    send_lists = [[[] for _ in range(n_chips)] for _ in range(n_chips)]
+    recv_pairs = []
+    for j, need in enumerate(needs):
+        counts: dict = {}
+        pairs = []
+        for p in need.tolist():
+            src = p // own_panels
+            rank = counts.get(src, 0)
+            counts[src] = rank + 1
+            send_lists[src][j].append(p - src * own_panels)
+            pairs.append((src, rank))
+        recv_pairs.append(pairs)
+    T2 = max((len(send_lists[s][j]) for s in range(n_chips)
+              for j in range(n_chips)), default=0)
+    T2 = max(T2, 1)
+    x_fetch = np.zeros((n_chips, T), np.int32)
+    x_send = np.zeros((n_chips, n_chips, T2), np.int32)
+    x_recv = np.zeros((n_chips, T), np.int32)
+    for j, need in enumerate(needs):
+        x_fetch[j, :need.size] = need
+        for t, (src, rank) in enumerate(recv_pairs[j]):
+            x_recv[j, t] = src * T2 + rank
+        # padding entries (t >= need.size) stay 0 == panel 0's slot
+    for s in range(n_chips):
+        for j in range(n_chips):
+            row = send_lists[s][j]
+            x_send[s, j, :len(row)] = row
+    return x_fetch, x_send, x_recv

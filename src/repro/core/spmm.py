@@ -50,8 +50,51 @@ from ..kernels.ops import resolve_interpret, resolve_staging
 BACKENDS = ("pallas_ell", "pallas_bcsr", "ref", "dense", "auto")
 
 # backends that lower through the fused descriptor-table dispatch (and
-# therefore support mesh/n_chips sharding and the staging knob)
+# therefore support mesh/n_chips sharding and the staging/x_sharding
+# knobs)
 FUSED_BACKENDS = ("pallas_ell", "pallas_bcsr")
+
+# X placement on the sharded fused path (DESIGN.md §7.8):
+#   replicated  every chip holds all of X (the PR 2 layout) — n·d_pad
+#               is bounded by ONE chip's HBM
+#   rows        X rows are split into bk-row panels owned contiguously
+#               by chips; each chip fetches exactly the panels its
+#               descriptor stream touches via the planner's exact-panel
+#               exchange — instance size scales with the mesh
+X_SHARDING_MODES = ("replicated", "rows")
+
+
+def _resolve_x_sharding_for(backend: str, x_sharding, interpret: bool,
+                            mesh) -> str:
+    """The effective X placement — resolved ONCE, same contract as the
+    staging knob: ``None``/``"auto"`` picks ``"rows"`` on a real multi-
+    chip mesh (the scale default) and ``"replicated"`` under interpret
+    mode or single-chip/unsharded dispatch; the resolved string joins
+    every jit-cache key that touches it (including the transpose
+    artifact).  ``"rows"`` without a mesh, or any non-replicated value
+    on a non-fused backend, is an error — the knob only exists where
+    the fetch-table machinery does."""
+    if backend in FUSED_BACKENDS:
+        if x_sharding in (None, "auto"):
+            if mesh is not None and mesh.size > 1 and not interpret:
+                return "rows"
+            return "replicated"
+        if x_sharding not in X_SHARDING_MODES:
+            raise ValueError(
+                f"x_sharding must be 'auto' or one of {X_SHARDING_MODES}, "
+                f"got {x_sharding!r}")
+        if x_sharding == "rows" and mesh is None:
+            raise ValueError(
+                "x_sharding='rows' shards X over the chip mesh — pass "
+                "mesh= or n_chips= (unsharded dispatch has no chips to "
+                "own X panels)")
+        return x_sharding
+    if x_sharding not in (None, "auto", "replicated"):
+        raise ValueError(
+            f"x_sharding is a fused-dispatch knob "
+            f"({'/'.join(FUSED_BACKENDS)}); backend={backend!r} has no "
+            f"sharded lowering")
+    return "replicated"
 
 
 def _resolve_staging_for(backend: str, staging, interpret: bool) -> str:
@@ -146,8 +189,18 @@ class _ShardedConsts:
     mesh: Mesh
     blk_tag: Optional[jax.Array] = None   # (C, B) int32 — VPU/MXU tag
     blk_coff: Optional[jax.Array] = None  # (C, B) int32 into cols_flat
-    max_span: int = 0        # cross-chip staged-DMA slot window
-    max_cspan: int = 0       # cross-chip staged-DMA cols window
+    max_span: int = 0        # cross-chip max staged-DMA slot window
+    max_cspan: int = 0       # cross-chip max staged-DMA cols window
+    chip_span: tuple = ()    # (C,) per-chip staged-DMA slot windows
+    chip_cspan: tuple = ()   # (C,) per-chip staged-DMA cols windows
+    # cross-chip X fetch schedule (x_sharding="rows"; DESIGN.md §7.8).
+    # Only the send/recv tables reach the dispatch; the fetch table
+    # stays host-side on ShardedFusedWorkspace for introspection.
+    x_sharding: str = "replicated"
+    x_panels: int = 0
+    x_own_panels: int = 0
+    x_send: Optional[jax.Array] = None    # (C, C, T2) int32 local panels
+    x_recv: Optional[jax.Array] = None    # (C, T) int32 into (C*T2,)
 
 
 class CompiledSpmm:
@@ -159,6 +212,7 @@ class CompiledSpmm:
                  mesh: Optional[Mesh] = None, n_chips: Optional[int] = None,
                  bk: int = 8, mxu_gain: float = 4.0,
                  staging: Optional[str] = None,
+                 x_sharding: Optional[str] = None,
                  cache: JitCache = GLOBAL_CACHE):
         self.backend = _resolve_backend(
             backend, sharded=mesh is not None or n_chips is not None)
@@ -172,6 +226,8 @@ class CompiledSpmm:
         self.staging = _resolve_staging_for(self.backend, staging,
                                             self.interpret)
         self.mesh = resolve_chip_mesh(mesh, n_chips)
+        self.x_sharding = _resolve_x_sharding_for(
+            self.backend, x_sharding, self.interpret, self.mesh)
         self.n_chips = None if self.mesh is None else int(self.mesh.size)
         if self.mesh is not None and self.backend not in FUSED_BACKENDS:
             raise ValueError(
@@ -203,7 +259,7 @@ class CompiledSpmm:
                 a.row_ptr, a.col_indices, a.shape, d,
                 n_chips=self.n_chips, strategy=strategy, row_block=bm,
                 fingerprint=a.fingerprint, backend=self.backend,
-                bk=bk, mxu_gain=mxu_gain)
+                bk=bk, mxu_gain=mxu_gain, x_sharding=self.x_sharding)
             self.sharded_workspace = sw
             self._sharded = _ShardedConsts(
                 blk_off=jnp.asarray(sw.blk_off),
@@ -218,7 +274,16 @@ class CompiledSpmm:
                 blk_tag=jnp.asarray(sw.blk_tag),
                 blk_coff=jnp.asarray(sw.blk_coff),
                 max_span=sw.max_span,
-                max_cspan=sw.max_cspan)
+                max_cspan=sw.max_cspan,
+                chip_span=tuple(int(s) for s in sw.chip_span),
+                chip_cspan=tuple(int(s) for s in sw.chip_cspan),
+                x_sharding=sw.x_sharding,
+                x_panels=sw.x_panels,
+                x_own_panels=sw.x_own_panels,
+                x_send=None if sw.x_send is None
+                else jnp.asarray(sw.x_send),
+                x_recv=None if sw.x_recv is None
+                else jnp.asarray(sw.x_recv))
         elif self.backend == "pallas_bcsr":
             self.mixed_plan = build_mixed_plan(
                 a.row_ptr, a.col_indices, a.shape, d, strategy=strategy,
@@ -283,6 +348,34 @@ class CompiledSpmm:
                           np.diff(self._row_ptr)).astype(np.int32))
         return self._erows
 
+    def _x_row_strips(self, x_pad):
+        """Stack the dense operand into the (C, P, bk, d_pad) owned-
+        panel strips the x-sharded dispatch consumes: rows padded to
+        whole bk-row panels, panels padded to a rectangular per-chip
+        strip.  The strips are pinned to the chip mesh either way —
+        ``device_put`` for eager callers, a GSPMD sharding constraint
+        under a trace — so when the CALLER supplies an already
+        row-sharded X (the at-scale entry point, see DESIGN.md §7.8),
+        the pad/reshape partitions instead of replicating and no chip
+        ever materializes a full X; steady-state per-chip residency is
+        then the owned strip plus the touched-panel working set."""
+        from ..distributed.sharding import chip_row_sharding
+        sw = self._sharded
+        n_rows = sw.x_panels * self.bk
+        if x_pad.shape[0] < n_rows:
+            x_pad = jnp.pad(x_pad, ((0, n_rows - x_pad.shape[0]), (0, 0)))
+        strips = x_pad.reshape(sw.x_panels, self.bk, x_pad.shape[1])
+        tot = sw.n_chips * sw.x_own_panels
+        if sw.x_panels < tot:
+            strips = jnp.pad(
+                strips, ((0, tot - sw.x_panels), (0, 0), (0, 0)))
+        strips = strips.reshape(sw.n_chips, sw.x_own_panels, self.bk,
+                                x_pad.shape[1])
+        if isinstance(strips, jax.core.Tracer):
+            return jax.lax.with_sharding_constraint(
+                strips, chip_row_sharding(sw.mesh))
+        return jax.device_put(strips, chip_row_sharding(sw.mesh))
+
     # -- forward -----------------------------------------------------------
     def _forward(self, vals, x):
         m, n = self.shape
@@ -311,11 +404,14 @@ class CompiledSpmm:
                 # one dispatch PER CHIP for the whole plan: shard_map
                 # splits the stacked descriptor tables on the chip axis
                 vals_flat = vals_ext[sw.gather_flat]
+                xarg = (self._x_row_strips(x_pad)
+                        if sw.x_sharding == "rows" else x_pad)
                 y_ws = spmm_ell_fused_sharded_op(
-                    sw.blk_off, sw.blk_L, sw.cols_flat, vals_flat, x_pad,
+                    sw.blk_off, sw.blk_L, sw.cols_flat, vals_flat, xarg,
                     mesh=sw.mesh, bm=self.bm, interpret=self.interpret,
-                    staging=self.staging, span=sw.max_span,
-                    cspan=sw.max_cspan)
+                    staging=self.staging, span=sw.chip_span,
+                    cspan=sw.chip_cspan, x_sharding=sw.x_sharding,
+                    x_send=sw.x_send, x_recv=sw.x_recv)
                 # sharded inverse-permutation gather over the flattened
                 # (n_chips * ws_rows) workspace recovers row order
                 y_flat = y_ws.reshape(sw.n_chips * sw.ws_rows, -1)
@@ -346,12 +442,15 @@ class CompiledSpmm:
                 if sw.num_blocks == 0:
                     return jnp.zeros((m, d), jnp.float32)
                 vals_flat = vals_ext[sw.gather_flat]
+                xarg = (self._x_row_strips(x_pad)
+                        if sw.x_sharding == "rows" else x_pad)
                 y_ws = spmm_bcsr_fused_sharded_op(
                     sw.blk_tag, sw.blk_off, sw.blk_coff, sw.blk_L,
-                    sw.cols_flat, vals_flat, x_pad, mesh=sw.mesh,
+                    sw.cols_flat, vals_flat, xarg, mesh=sw.mesh,
                     bm=self.bm, bk=self.bk, interpret=self.interpret,
-                    staging=self.staging, span=sw.max_span,
-                    cspan=sw.max_cspan)
+                    staging=self.staging, span=sw.chip_span,
+                    cspan=sw.chip_cspan, x_sharding=sw.x_sharding,
+                    x_send=sw.x_send, x_recv=sw.x_recv)
                 y_flat = y_ws.reshape(sw.n_chips * sw.ws_rows, -1)
                 return y_flat[sw.inv_perm, :d]
             from ..kernels.ops import spmm_bcsr_fused_op
@@ -380,15 +479,15 @@ class CompiledSpmm:
             t_struct, order = a.transpose_structure()
             key = ("spmmT", self._fingerprint, self.d, self.strategy,
                    self.backend, self.bm, self.bk, self.mxu_gain,
-                   self.interpret, self.staging,
+                   self.interpret, self.staging, self.x_sharding,
                    mesh_fingerprint(self.mesh))
             self._transpose = self.cache.get_or_build(
                 key, lambda: CompiledSpmm(
                     t_struct, self.d, strategy=self.strategy,
                     backend=self.backend, bm=self.bm, bk=self.bk,
                     mxu_gain=self.mxu_gain, interpret=self.interpret,
-                    staging=self.staging, mesh=self.mesh,
-                    cache=self.cache))
+                    staging=self.staging, x_sharding=self.x_sharding,
+                    mesh=self.mesh, cache=self.cache))
             self._t_order = jnp.asarray(order.astype(np.int32))
         vals_t = vals[self._t_order]
         return self._transpose._forward(vals_t, dy)
@@ -403,6 +502,7 @@ def compile_spmm(a: CSRMatrix, d: int, *, strategy: str = "nnz_split",
                  mesh: Optional[Mesh] = None, n_chips: Optional[int] = None,
                  bk: int = 8, mxu_gain: float = 4.0,
                  staging: Optional[str] = None,
+                 x_sharding: Optional[str] = None,
                  cache: JitCache = GLOBAL_CACHE) -> CompiledSpmm:
     """Build (or fetch) the structure-specialized SpMM artifact.
 
@@ -421,19 +521,30 @@ def compile_spmm(a: CSRMatrix, d: int, *, strategy: str = "nnz_split",
     mixed backend, per-trip X panels) from HBM.  ``"auto"``/``None``
     resolves to ``"dma"`` on a real TPU and ``"resident"`` under
     interpret mode; the resolved mode is part of the cache key and the
-    two lowerings are bit-identical."""
+    two lowerings are bit-identical.
+
+    ``x_sharding`` selects X placement on the sharded path (DESIGN.md
+    §7.8): ``"replicated"`` keeps all of X on every chip, ``"rows"``
+    splits X into bk-row panels owned by chips and fetches exactly the
+    panels each chip's plan touches (exact-panel exchange).
+    ``"auto"``/``None`` resolves to ``"rows"`` on a real multi-chip
+    mesh and ``"replicated"`` otherwise; the resolved mode is part of
+    the cache key and the two placements are bit-identical."""
     backend = _resolve_backend(
         backend, sharded=mesh is not None or n_chips is not None)
     interpret = resolve_interpret(interpret)
     staging = _resolve_staging_for(backend, staging, interpret)
     mesh = resolve_chip_mesh(mesh, n_chips)
+    x_sharding = _resolve_x_sharding_for(backend, x_sharding, interpret,
+                                         mesh)
     key = ("spmm", a.fingerprint, d, strategy, backend, bm, bk, mxu_gain,
-           interpret, staging, mesh_fingerprint(mesh))
+           interpret, staging, x_sharding, mesh_fingerprint(mesh))
     return cache.get_or_build(
         key, lambda: CompiledSpmm(a, d, strategy=strategy, backend=backend,
                                   bm=bm, bk=bk, mxu_gain=mxu_gain,
                                   interpret=interpret, staging=staging,
-                                  mesh=mesh, cache=cache))
+                                  x_sharding=x_sharding, mesh=mesh,
+                                  cache=cache))
 
 
 def spmm(a: CSRMatrix, x, *, strategy: str = "nnz_split",
@@ -442,11 +553,12 @@ def spmm(a: CSRMatrix, x, *, strategy: str = "nnz_split",
          mesh: Optional[Mesh] = None, n_chips: Optional[int] = None,
          bk: int = 8, mxu_gain: float = 4.0,
          staging: Optional[str] = None,
+         x_sharding: Optional[str] = None,
          cache: JitCache = GLOBAL_CACHE) -> jax.Array:
     """Y = A·X, specialized to A's structure and x's column count."""
     compiled = compile_spmm(a, x.shape[1], strategy=strategy,
                             backend=backend, bm=bm, interpret=interpret,
                             mesh=mesh, n_chips=n_chips, bk=bk,
                             mxu_gain=mxu_gain, staging=staging,
-                            cache=cache)
+                            x_sharding=x_sharding, cache=cache)
     return compiled(jnp.asarray(a.vals), x)

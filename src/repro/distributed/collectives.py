@@ -48,6 +48,36 @@ def compressed_psum(x: jax.Array, mesh: Mesh, axis: str = "data"):
                      out_specs=specs, check_rep=False)(x)
 
 
+def exact_panel_exchange(own: jax.Array, send_tbl: jax.Array,
+                         recv_sel: jax.Array, axis: str) -> jax.Array:
+    """Per-chip body of the plan-time exact-panel X exchange
+    (DESIGN.md §7.8) — runs INSIDE a shard_map over ``axis``.
+
+    Each chip owns a contiguous strip of bk-row X panels; the planner
+    (``build_sharded_workspace(x_sharding="rows")``) knows exactly which
+    panels each chip's descriptor stream touches and emits the send/recv
+    schedule — the collective analogue of the paper's "load exactly the
+    operands the instance needs", instead of replicating all of X per
+    chip.  The schedule is rectangular for shard_map: every (src, dst)
+    pair pads to the global max pairwise panel count T2, so under
+    pairwise skew the wire carries up to C·T2 panels per chip rather
+    than the exact touched set (see the DESIGN.md §7.8 padding note).
+
+    own      : (P, bk, d) this chip's owned panel strip
+    send_tbl : (C, T2) int32 — own-local panel ids to send each chip
+    recv_sel : (T,) int32 — flat (C*T2,) receive-buffer index of each
+               local panel, in the chip's fetch order
+    returns  : (T*bk, d) the chip's compact local X workspace, rows laid
+               out exactly as the remapped column stream addresses them
+    """
+    send = own[send_tbl]                          # (C, T2, bk, d)
+    recv = jax.lax.all_to_all(send, axis, split_axis=0, concat_axis=0)
+    flat = recv.reshape((-1,) + recv.shape[2:])   # (C*T2, bk, d)
+    panels = flat[recv_sel]                       # (T, bk, d)
+    return panels.reshape(panels.shape[0] * panels.shape[1],
+                          panels.shape[2])
+
+
 def wire_bytes_ratio(shape: Tuple[int, ...]) -> float:
     """f32 ring-AR payload vs int8 all-gather payload per participant."""
     import numpy as np

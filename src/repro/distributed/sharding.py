@@ -212,3 +212,15 @@ def logits_sharding(mesh: Mesh, batch: int, vocab: int):
 
 def replicated(mesh: Mesh):
     return NamedSharding(mesh, P())
+
+
+def chip_row_sharding(mesh: Mesh) -> NamedSharding:
+    """Placement for the x-sharded fused SpMM operands (DESIGN.md §7.8):
+    arrays stacked per chip on their leading axis — the (C, P, bk, d)
+    owned-panel X strips and the (C, ...) fetch tables — shard over the
+    1-D chip mesh, so each chip materializes only its own panels instead
+    of a full X replica."""
+    if len(mesh.axis_names) != 1:
+        raise ValueError(
+            f"x-sharded spmm uses a 1-D chip mesh, got {mesh.axis_names}")
+    return NamedSharding(mesh, P(mesh.axis_names[0]))

@@ -25,8 +25,21 @@ class Watchdog:
     factor: float = 3.0            # deadline = factor * median step time
     min_deadline_s: float = 1.0
     window: int = 20
+    # the time source is injectable so tests run the WHOLE deadline
+    # pipeline — calibration window, median, timeout — on a fake clock:
+    # with clock=lambda: 0.0 the measured part of every step is exactly
+    # 0 and only fault_injector seconds count, so a loaded CI host can
+    # never skew a test's deadline math (production keeps perf_counter)
+    clock: Callable[[], float] = time.perf_counter
     _times: Deque[float] = dataclasses.field(
         default_factory=lambda: deque(maxlen=20))
+
+    def __post_init__(self):
+        # the history deque must honor the CONFIGURED window — the field
+        # default bakes in maxlen=20, so a non-default window previously
+        # kept 20 samples and the deadline median lagged reality
+        if self._times.maxlen != self.window:
+            self._times = deque(self._times, maxlen=self.window)
 
     def deadline(self) -> float:
         if not self._times:
@@ -42,9 +55,9 @@ class Watchdog:
         """Run one step under the deadline.  fault_injector (tests)
         returns extra simulated seconds for this step."""
         deadline = self.deadline()
-        t0 = time.perf_counter()
+        t0 = self.clock()
         out = fn(*args)
-        elapsed = time.perf_counter() - t0
+        elapsed = self.clock() - t0
         if fault_injector is not None:
             elapsed += fault_injector()
         if elapsed > deadline:

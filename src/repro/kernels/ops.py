@@ -19,8 +19,8 @@ import collections
 import jax
 
 from .spmm_csr import spmm_ell_segment
-from .spmm_ell_fused import (spmm_ell_fused, spmm_ell_fused_sharded,
-                             spmm_ell_fused_staged)
+from .spmm_ell_fused import (_chip_windows, spmm_ell_fused,
+                             spmm_ell_fused_sharded, spmm_ell_fused_staged)
 from .spmm_bcsr import spmm_bcsr
 from .spmm_bcsr_fused import (spmm_bcsr_fused, spmm_bcsr_fused_sharded,
                               spmm_bcsr_fused_staged)
@@ -115,24 +115,35 @@ def spmm_ell_fused_op(blk_off, blk_L, cols_flat, vals_flat, x, *,
 
 def spmm_ell_fused_sharded_op(blk_off, blk_L, cols_flat, vals_flat, x, *,
                               mesh, bm: int = 8, interpret=None,
-                              staging=None, span: int = 0,
-                              cspan: int = 0):
+                              staging=None, span=0, cspan=0,
+                              x_sharding: str = "replicated",
+                              x_send=None, x_recv=None):
     """One fused dispatch per chip: counts ``mesh.size`` pallas_calls
     under the ``ell_fused`` key (the per-forward invariant the sharded
-    tests assert) plus one ``ell_fused_sharded`` wrapper call — and
-    ``mesh.size`` under ``ell_fused_dma`` when staged."""
+    tests assert) plus one ``ell_fused_sharded`` wrapper call —
+    ``mesh.size`` under ``ell_fused_dma`` when staged, and ``mesh.size``
+    under ``ell_fused_xshard`` when X is row-sharded (the fetch-table
+    exchange path; ``span``/``cspan`` accept per-chip tuples)."""
     interpret = resolve_interpret(interpret)
-    staging = _resolve_op_staging(staging, interpret, span, cspan)
+    span = _chip_windows(span, mesh.size)
+    cspan = _chip_windows(cspan, mesh.size)
+    staging = _resolve_op_staging(staging, interpret, min(span),
+                                  min(cspan))
     DISPATCH_COUNTS["ell_fused"] += mesh.size
     DISPATCH_COUNTS["ell_fused_sharded"] += 1
+    if x_sharding == "rows":
+        DISPATCH_COUNTS["ell_fused_xshard"] += mesh.size
     if staging == "dma":
         DISPATCH_COUNTS["ell_fused_dma"] += mesh.size
     else:
-        span = cspan = 0     # resident ignores the windows: keep them
-                             # out of the memoized shard_map cache key
+        span = cspan = (0,) * mesh.size   # resident ignores the windows:
+                                          # keep them out of the memoized
+                                          # shard_map cache key
     return spmm_ell_fused_sharded(blk_off, blk_L, cols_flat, vals_flat, x,
                                   mesh=mesh, bm=bm, interpret=interpret,
-                                  staging=staging, span=span, cspan=cspan)
+                                  staging=staging, span=span, cspan=cspan,
+                                  x_sharding=x_sharding, x_send=x_send,
+                                  x_recv=x_recv)
 
 
 def spmm_bcsr_op(block_cols_pad, block_vals_pad, x, *, kmax: int,
@@ -166,21 +177,30 @@ def spmm_bcsr_fused_op(blk_tag, blk_off, blk_coff, blk_L, cols_flat,
 def spmm_bcsr_fused_sharded_op(blk_tag, blk_off, blk_coff, blk_L,
                                cols_flat, vals_flat, x, *, mesh,
                                bm: int = 8, bk: int = 8, interpret=None,
-                               staging=None, span: int = 0,
-                               cspan: int = 0):
+                               staging=None, span=0, cspan=0,
+                               x_sharding: str = "replicated",
+                               x_send=None, x_recv=None):
     """One mixed fused dispatch per chip: counts ``mesh.size``
     pallas_calls under the ``bcsr_fused`` key plus one
     ``bcsr_fused_sharded`` wrapper call — same accounting shape as the
-    ELL sharded path, with ``bcsr_fused_dma`` tracking staged chips."""
+    ELL sharded path, with ``bcsr_fused_dma`` tracking staged chips and
+    ``bcsr_fused_xshard`` tracking row-sharded-X chips."""
     interpret = resolve_interpret(interpret)
-    staging = _resolve_op_staging(staging, interpret, span, cspan)
+    span = _chip_windows(span, mesh.size)
+    cspan = _chip_windows(cspan, mesh.size)
+    staging = _resolve_op_staging(staging, interpret, min(span),
+                                  min(cspan))
     DISPATCH_COUNTS["bcsr_fused"] += mesh.size
     DISPATCH_COUNTS["bcsr_fused_sharded"] += 1
+    if x_sharding == "rows":
+        DISPATCH_COUNTS["bcsr_fused_xshard"] += mesh.size
     if staging == "dma":
         DISPATCH_COUNTS["bcsr_fused_dma"] += mesh.size
     else:
-        span = cspan = 0     # resident ignores the windows (see above)
+        span = cspan = (0,) * mesh.size   # resident ignores the windows
     return spmm_bcsr_fused_sharded(blk_tag, blk_off, blk_coff, blk_L,
                                    cols_flat, vals_flat, x, mesh=mesh,
                                    bm=bm, bk=bk, interpret=interpret,
-                                   staging=staging, span=span, cspan=cspan)
+                                   staging=staging, span=span, cspan=cspan,
+                                   x_sharding=x_sharding, x_send=x_send,
+                                   x_recv=x_recv)

@@ -57,6 +57,8 @@ try:                                   # jax >= 0.6 promotes it to jax.*
 except ImportError:                    # jax 0.4/0.5
     from jax.experimental.shard_map import shard_map as _shard_map
 
+from .spmm_ell_fused import _chip_windows, _staged_dispatch
+
 
 def _kernel(tag_ref, off_ref, coff_ref, L_ref, cols_ref, vals_ref, x_ref,
             y_ref, *, bm: int, bk: int, dt: int):
@@ -323,48 +325,70 @@ def spmm_bcsr_fused_sharded(blk_tag: jax.Array, blk_off: jax.Array,
                             cols_flat: jax.Array, vals_flat: jax.Array,
                             x: jax.Array, *, mesh, bm: int = 8,
                             bk: int = 8, interpret: bool = True,
-                            staging: str = "resident", span: int = 0,
-                            cspan: int = 0) -> jax.Array:
+                            staging: str = "resident", span=0,
+                            cspan=0, x_sharding: str = "replicated",
+                            x_send=None, x_recv=None) -> jax.Array:
     """Run one mixed fused dispatch per chip under ``shard_map``.
 
-    Descriptor tables are (C, ...) stacked per chip; X is replicated.
-    Returns (C, B*bm, d_pad) workspace rows sharded over the chip axis;
-    the caller flattens and applies the sharded workspace's GLOBAL
-    ``inv_perm`` gather.  The body is traced once and SPMD-replicated:
-    a forward costs exactly C dispatches — the multi-chip form of the
+    Descriptor tables are (C, ...) stacked per chip; ``x`` is either the
+    replicated (n_pad, d_pad) operand or — under ``x_sharding="rows"`` —
+    the stacked (C, P, bk, d_pad) owned-panel strips, assembled into
+    each chip's compact local X workspace by the planner's exact-panel
+    exchange before the kernel (DESIGN.md §7.8).  Returns (C, B*bm,
+    d_pad) workspace rows sharded over the chip axis; the caller
+    flattens and applies the sharded workspace's GLOBAL ``inv_perm``
+    gather.  The body is traced once and SPMD-replicated: a forward
+    costs exactly C dispatches — the multi-chip form of the
     one-artifact-per-instance invariant, now covering the MXU path too.
 
     ``staging="dma"`` lowers each chip through
-    :func:`spmm_bcsr_fused_staged` with the workspace's cross-chip
-    ``span``/``cspan`` windows; ``"resident"`` keeps the flat layout.
+    :func:`spmm_bcsr_fused_staged`; ``span``/``cspan`` may be per-chip
+    tuples — chips are grouped by distinct window and each group gets a
+    ring sized for its own span (see ``spmm_ell_fused._staged_dispatch``).
     """
-    return _sharded_callable(mesh, bm, bk, interpret, staging, span,
-                             cspan)(
-        blk_tag, blk_off, blk_coff, blk_L, cols_flat, vals_flat, x)
+    fn = _sharded_callable(mesh, bm, bk, interpret, staging,
+                           _chip_windows(span, mesh.size),
+                           _chip_windows(cspan, mesh.size), x_sharding)
+    if x_sharding == "rows":
+        return fn(blk_tag, blk_off, blk_coff, blk_L, cols_flat,
+                  vals_flat, x, x_send, x_recv)
+    return fn(blk_tag, blk_off, blk_coff, blk_L, cols_flat, vals_flat, x)
 
 
 @functools.lru_cache(maxsize=32)
 def _sharded_callable(mesh, bm: int, bk: int, interpret: bool,
-                      staging: str = "resident", span: int = 0,
-                      cspan: int = 0):
+                      staging: str = "resident", spans: tuple = (0,),
+                      cspans: tuple = (0,),
+                      x_sharding: str = "replicated"):
     """jit-wrapped shard_map closure, memoized per (mesh, bm, bk,
-    interpret, staging, span, cspan) — same lifecycle as the ELL twin;
-    evicted by ``core.jit_cache.clear_global_cache``."""
+    interpret, staging, spans, cspans, x_sharding) — same lifecycle as
+    the ELL twin; evicted by ``core.jit_cache.clear_global_cache``."""
+    from ..distributed.collectives import exact_panel_exchange
+
     (axis,) = mesh.axis_names
 
-    def per_chip(tag, off, coff, L, cols, vals, xp):
-        if staging == "dma":
-            y = spmm_bcsr_fused_staged(
-                tag[0], off[0], coff[0], L[0], cols[0], vals[0], xp,
-                span=span, cspan=cspan, bm=bm, bk=bk, interpret=interpret)
-        else:
-            y = spmm_bcsr_fused(tag[0], off[0], coff[0], L[0], cols[0],
-                                vals[0], xp, bm=bm, bk=bk,
-                                interpret=interpret)
-        return y[None]
+    if staging == "dma":
+        def call(sp, cs):
+            return functools.partial(spmm_bcsr_fused_staged, span=sp,
+                                     cspan=cs, bm=bm, bk=bk,
+                                     interpret=interpret)
+        kernel = _staged_dispatch(axis, spans, cspans, call)
+    else:
+        kernel = functools.partial(spmm_bcsr_fused, bm=bm, bk=bk,
+                                   interpret=interpret)
 
     shard = P(axis)
-    specs = dict(in_specs=(shard,) * 6 + (P(),), out_specs=shard)
+    if x_sharding == "rows":
+        def per_chip(tag, off, coff, L, cols, vals, xo, xs, xr):
+            xp = exact_panel_exchange(xo[0], xs[0], xr[0], axis)
+            return kernel(tag[0], off[0], coff[0], L[0], cols[0],
+                          vals[0], xp)[None]
+        specs = dict(in_specs=(shard,) * 9, out_specs=shard)
+    else:
+        def per_chip(tag, off, coff, L, cols, vals, xp):
+            return kernel(tag[0], off[0], coff[0], L[0], cols[0],
+                          vals[0], xp)[None]
+        specs = dict(in_specs=(shard,) * 6 + (P(),), out_specs=shard)
     try:
         fn = _shard_map(per_chip, mesh=mesh, check_rep=False, **specs)
     except TypeError:      # jax >= 0.7 renamed the replication check

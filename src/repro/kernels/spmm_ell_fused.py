@@ -43,8 +43,10 @@ Multi-chip (``spmm_ell_fused_sharded``): the planner's
 ``ShardedFusedWorkspace`` stacks one descriptor table per chip row
 range, and ``shard_map`` over a 1-D ``("chips",)`` mesh runs the SAME
 single-dispatch kernel on every chip — one ``pallas_call`` per chip per
-forward, with X replicated and the descriptor/slot arrays sharded on
-their leading chip axis.
+forward, descriptor/slot arrays sharded on their leading chip axis, X
+either replicated or row-sharded with a plan-time exact-panel exchange
+(``x_sharding="rows"``, DESIGN.md §7.8).  Staged DMA windows are per
+chip (``_staged_dispatch``) so a hot shard sizes only its own ring.
 """
 from __future__ import annotations
 
@@ -239,18 +241,61 @@ def spmm_ell_fused_staged(blk_off: jax.Array, blk_L: jax.Array,
     )(blk_off, blk_L, cols_flat, vals_flat, x)
 
 
+def _chip_windows(v, n_chips: int) -> tuple:
+    """Normalize a DMA window argument to a per-chip tuple: ints (the
+    uniform/legacy spelling) broadcast; sequences — tuple/list/ndarray,
+    e.g. ``ShardedFusedWorkspace.chip_span`` — pass through."""
+    if hasattr(v, "__len__"):
+        if len(v) != n_chips:
+            raise ValueError(
+                f"per-chip DMA windows need one entry per chip: got "
+                f"{len(v)} for {n_chips} chips")
+        return tuple(int(s) for s in v)
+    return (int(v),) * n_chips
+
+
+def _staged_dispatch(axis: str, spans: tuple, cspans: tuple, call):
+    """Per-chip staged-kernel specialization (the hot-shard window fix).
+
+    Chips are grouped by distinct (span, cspan) window and each group
+    gets its own staged kernel with a scratch ring sized for THAT
+    window; ``lax.switch`` on the chip axis index picks the group, so a
+    cold chip's VMEM ring no longer scales with the hottest shard's
+    span.  Each chip still executes exactly one ``pallas_call`` (with a
+    uniform window the switch collapses to a direct call and the traced
+    body keeps a single pallas_call, as before).
+
+    ``call(span, cspan)`` must return the kernel callable for one
+    window; returns a function of the per-chip operands.
+    """
+    groups = sorted(set(zip(spans, cspans)))
+    if len(groups) == 1:
+        return call(*groups[0])
+    idx = [groups.index(w) for w in zip(spans, cspans)]
+
+    def dispatch(*operands):
+        branch = jnp.asarray(idx, jnp.int32)[jax.lax.axis_index(axis)]
+        return jax.lax.switch(branch, [call(*g) for g in groups],
+                              *operands)
+    return dispatch
+
+
 def spmm_ell_fused_sharded(blk_off: jax.Array, blk_L: jax.Array,
                            cols_flat: jax.Array, vals_flat: jax.Array,
                            x: jax.Array, *, mesh, bm: int = 8,
                            interpret: bool = True,
-                           staging: str = "resident", span: int = 0,
-                           cspan: int = 0) -> jax.Array:
+                           staging: str = "resident", span=0,
+                           cspan=0, x_sharding: str = "replicated",
+                           x_send=None, x_recv=None) -> jax.Array:
     """Run one fused dispatch per chip under ``shard_map``.
 
     blk_off/blk_L     : (C, B) int32 — per-chip descriptor tables
-    cols_flat         : (C, S) int32 — per-chip slot -> X row
+    cols_flat         : (C, S) int32 — per-chip slot -> X row (LOCAL
+                        panel-space rows when ``x_sharding="rows"``)
     vals_flat         : (C, S) float — per-chip slot values
-    x                 : (n, d_pad) float — replicated on every chip
+    x                 : the dense operand, in the layout ``x_sharding``
+                        demands — (n, d_pad) replicated, or the stacked
+                        (C, P, bk, d_pad) owned-panel strips for "rows"
     mesh              : 1-D mesh of C devices (axis name is free)
 
     Returns (C, B*bm, d_pad) workspace rows, sharded over the chip axis;
@@ -263,40 +308,57 @@ def spmm_ell_fused_sharded(blk_off: jax.Array, blk_L: jax.Array,
     the one-artifact-per-instance invariant (paper Table IV).
 
     ``staging="dma"`` lowers each chip's dispatch through
-    :func:`spmm_ell_fused_staged` with the workspace's cross-chip
-    ``span``/``cspan`` DMA windows; ``"resident"`` keeps the flat VMEM
-    layout.  Either way it is still one ``pallas_call`` per chip.
+    :func:`spmm_ell_fused_staged`; ``span``/``cspan`` may be per-chip
+    tuples (see :func:`_staged_dispatch`).  ``x_sharding="rows"``
+    assembles each chip's compact X workspace from the owning chips via
+    the planner's exact-panel exchange (``x_send``/``x_recv`` tables,
+    DESIGN.md §7.8) before the kernel runs — one collective plus one
+    ``pallas_call`` per chip, bit-identical to the replicated path.
     """
-    return _sharded_callable(mesh, bm, interpret, staging, span, cspan)(
-        blk_off, blk_L, cols_flat, vals_flat, x)
+    fn = _sharded_callable(mesh, bm, interpret, staging,
+                           _chip_windows(span, mesh.size),
+                           _chip_windows(cspan, mesh.size), x_sharding)
+    if x_sharding == "rows":
+        return fn(blk_off, blk_L, cols_flat, vals_flat, x, x_send, x_recv)
+    return fn(blk_off, blk_L, cols_flat, vals_flat, x)
 
 
 @functools.lru_cache(maxsize=32)
 def _sharded_callable(mesh, bm: int, interpret: bool,
-                      staging: str = "resident", span: int = 0,
-                      cspan: int = 0):
+                      staging: str = "resident", spans: tuple = (0,),
+                      cspans: tuple = (0,),
+                      x_sharding: str = "replicated"):
     """jit-wrapped shard_map closure, memoized per (mesh, bm, interpret,
-    staging, span, cspan) so repeated forwards reuse one compiled
-    executable instead of rebuilding and retracing the shard_map every
-    call (Mesh is hashable; input-shape specialization is jit's usual
-    cache).  Bounded, and evicted by
+    staging, spans, cspans, x_sharding) so repeated forwards reuse one
+    compiled executable instead of rebuilding and retracing the
+    shard_map every call (Mesh is hashable; input-shape specialization
+    is jit's usual cache).  Bounded, and evicted by
     ``core.jit_cache.clear_global_cache`` so compiled state and device
     handles don't outlive the caches that reference them."""
+    from ..distributed.collectives import exact_panel_exchange
+
     (axis,) = mesh.axis_names
 
-    def per_chip(off, L, cols, vals, xp):
-        if staging == "dma":
-            y = spmm_ell_fused_staged(off[0], L[0], cols[0], vals[0], xp,
-                                      span=span, cspan=cspan, bm=bm,
-                                      interpret=interpret)
-        else:
-            y = spmm_ell_fused(off[0], L[0], cols[0], vals[0], xp,
-                               bm=bm, interpret=interpret)
-        return y[None]
+    if staging == "dma":
+        def call(sp, cs):
+            return functools.partial(spmm_ell_fused_staged, span=sp,
+                                     cspan=cs, bm=bm, interpret=interpret)
+        kernel = _staged_dispatch(axis, spans, cspans, call)
+    else:
+        kernel = functools.partial(spmm_ell_fused, bm=bm,
+                                   interpret=interpret)
 
     shard = P(axis)
-    specs = dict(in_specs=(shard, shard, shard, shard, P()),
-                 out_specs=shard)
+    if x_sharding == "rows":
+        def per_chip(off, L, cols, vals, xo, xs, xr):
+            xp = exact_panel_exchange(xo[0], xs[0], xr[0], axis)
+            return kernel(off[0], L[0], cols[0], vals[0], xp)[None]
+        specs = dict(in_specs=(shard,) * 7, out_specs=shard)
+    else:
+        def per_chip(off, L, cols, vals, xp):
+            return kernel(off[0], L[0], cols[0], vals[0], xp)[None]
+        specs = dict(in_specs=(shard, shard, shard, shard, P()),
+                     out_specs=shard)
     try:
         fn = _shard_map(per_chip, mesh=mesh, check_rep=False, **specs)
     except TypeError:      # jax >= 0.7 renamed the replication check

@@ -29,7 +29,8 @@ from .mesh import make_chip_mesh, make_host_mesh
 
 
 def spmm_shard_preflight(n_chips: int,
-                         backend: str = "pallas_ell") -> int:
+                         backend: str = "pallas_ell",
+                         x_sharding: str = "auto") -> int:
     """Validate the sharded fused SpMM path on this host's devices before
     committing to a long run (same ethos as the dry-run): compile a small
     sharded plan and check it against the ref backend.  Fails fast —
@@ -39,12 +40,20 @@ def spmm_shard_preflight(n_chips: int,
     ``backend`` selects the fused dispatch the run will use: the VPU ELL
     path (``pallas_ell``) or the mixed VPU/MXU path (``pallas_bcsr``),
     which exercises block-row-aligned chip partitioning and the MXU
-    descriptor stream."""
-    from ..core import FUSED_BACKENDS, JitCache, random_csr, spmm
+    descriptor stream.  ``x_sharding`` selects X placement on the mesh
+    ("replicated", "rows" = exact-panel fetch from owning chips, or
+    "auto" — the same resolution the run itself will get), so a
+    fetch-table/exchange lowering failure surfaces before step 0 too."""
+    from ..core import (FUSED_BACKENDS, JitCache, X_SHARDING_MODES,
+                        random_csr, spmm)
     if backend not in FUSED_BACKENDS:
         raise ValueError(
             f"--spmm-backend must be one of {FUSED_BACKENDS}, "
             f"got {backend!r}")
+    if x_sharding not in ("auto", *X_SHARDING_MODES):
+        raise ValueError(
+            f"--x-sharding must be 'auto' or one of {X_SHARDING_MODES}, "
+            f"got {x_sharding!r}")
     avail = len(jax.devices())
     if not 1 <= n_chips <= avail:
         raise ValueError(
@@ -60,12 +69,13 @@ def spmm_shard_preflight(n_chips: int,
     # (native on TPU, interpret on CPU) — the whole point is to surface
     # lowering failures of the real path before step 0
     y = spmm(a, x, strategy="nnz_split", backend=backend,
-             interpret=None, mesh=mesh, cache=cache)
+             interpret=None, mesh=mesh, x_sharding=x_sharding,
+             cache=cache)
     y_ref = spmm(a, x, strategy="nnz_split", backend="ref", cache=cache)
     np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
                                rtol=1e-4, atol=1e-4)
     print(f"[train] spmm shard preflight OK on {n_chips} chip(s) "
-          f"({backend})", flush=True)
+          f"({backend}, x_sharding={x_sharding})", flush=True)
     return n_chips
 
 
@@ -74,6 +84,7 @@ def run_training(cfg, *, steps: int, global_batch: int, seq_len: int,
                  microbatches: int = 1, remat: str = "full",
                  data_parallel: int = 1, model_parallel: int = 1,
                  spmm_chips: int = 0, spmm_backend: str = "pallas_ell",
+                 spmm_x_sharding: str = "auto",
                  log_every: int = 10,
                  fault_injector=None, watchdog: Watchdog = None,
                  seed: int = 0, stop_at: int = None):
@@ -81,7 +92,7 @@ def run_training(cfg, *, steps: int, global_batch: int, seq_len: int,
     if spmm_chips:
         # the sparse-aggregation chips share the host devices with the
         # train mesh; fail fast here rather than mid-run
-        spmm_shard_preflight(spmm_chips, spmm_backend)
+        spmm_shard_preflight(spmm_chips, spmm_backend, spmm_x_sharding)
     mesh = make_host_mesh(data=data_parallel, model=model_parallel)
     opt = AdamW(learning_rate=warmup_cosine(lr, min(20, steps // 10 + 1),
                                             steps))
@@ -190,6 +201,12 @@ def main():
                     choices=["pallas_ell", "pallas_bcsr"],
                     help="fused SpMM dispatch the preflight validates: "
                          "VPU ELL or the mixed VPU/MXU (BCSR) path")
+    ap.add_argument("--x-sharding", default="auto",
+                    choices=["auto", "replicated", "rows"],
+                    help="X placement the preflight validates on the "
+                         "chip mesh: replicated per chip, or rows = "
+                         "exact-panel fetch from owning chips "
+                         "(DESIGN.md §7.8); auto matches the run")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -201,7 +218,8 @@ def main():
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every, lr=args.lr,
         microbatches=args.microbatches, remat=args.remat,
         data_parallel=args.dp, model_parallel=args.tp,
-        spmm_chips=args.spmm_chips, spmm_backend=args.spmm_backend)
+        spmm_chips=args.spmm_chips, spmm_backend=args.spmm_backend,
+        spmm_x_sharding=args.x_sharding)
     print(f"[train] done: first loss {losses[0]:.4f} "
           f"last loss {losses[-1]:.4f} ({time.time()-t0:.1f}s)")
 

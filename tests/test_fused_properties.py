@@ -171,6 +171,56 @@ def test_staged_sharded_bit_matches_resident_sharded(a, d, strategy,
     assert np.array_equal(np.asarray(y_dma), np.asarray(y_res))
 
 
+@settings(max_examples=8, deadline=None)
+@given(a=csr_cases(), d=st.integers(1, 16),
+       strategy=st.sampled_from(STRATEGIES),
+       backend=st.sampled_from(("pallas_ell", "pallas_bcsr")),
+       staging=st.sampled_from(("resident", "dma")),
+       chips=st.integers(1, 4))
+def test_xshard_bit_matches_replicated(a, d, strategy, backend, staging,
+                                       chips):
+    """x_sharding="rows" swaps X replication for the plan-time exact-
+    panel exchange, but the kernel reads the same row VALUES in the
+    same order — bit-identical on every adversarial structure family
+    (skewed / empty-row / single-row / powerlaw), either staging."""
+    chips = min(chips, N_DEV)
+    x = jnp.asarray(
+        np.random.default_rng(d + 6).standard_normal((a.n, d)),
+        jnp.float32)
+    y_rep = spmm(a, x, strategy=strategy, backend=backend,
+                 interpret=True, staging=staging, n_chips=chips,
+                 x_sharding="replicated", cache=JitCache())
+    y_row = spmm(a, x, strategy=strategy, backend=backend,
+                 interpret=True, staging=staging, n_chips=chips,
+                 x_sharding="rows", cache=JitCache())
+    assert np.array_equal(np.asarray(y_row), np.asarray(y_rep))
+
+
+@settings(max_examples=40, deadline=None)
+@given(a=csr_cases(), d=st.integers(1, 32),
+       strategy=st.sampled_from(STRATEGIES),
+       chips=st.integers(1, 8))
+def test_xshard_fetch_table_invariants(a, d, strategy, chips):
+    """Host-only fetch-table invariants, any chip count: panel ids in
+    range, padding sentinel is panel 0, owners' send rows stay inside
+    their strip, and the remapped column stream addresses only the
+    compact local workspace."""
+    ws = build_sharded_workspace(a.row_ptr, a.col_indices, a.shape, d,
+                                 n_chips=chips, strategy=strategy,
+                                 x_sharding="rows")
+    assert ws.x_panels == max(-(-a.n // ws.bk), 1)
+    assert ws.x_own_panels * ws.n_chips >= ws.x_panels
+    T = ws.x_local_panels
+    assert T >= 1
+    for c in range(ws.n_chips):
+        assert ws.x_fetch[c, 0] == 0
+        assert np.all((ws.x_fetch[c] >= 0)
+                      & (ws.x_fetch[c] < ws.x_panels))
+        assert np.all(ws.cols_flat[c] < T * ws.bk)
+        assert np.all(ws.x_send[c] < ws.x_own_panels)
+        assert np.all(ws.x_recv[c] < ws.n_chips * ws.x_send.shape[2])
+
+
 @settings(max_examples=60, deadline=None)
 @given(a=csr_cases(), d=st.integers(1, 64),
        strategy=st.sampled_from(STRATEGIES))
@@ -210,6 +260,11 @@ def test_sharded_workspace_invariants(a, d, strategy, chips):
             assert ws.blk_off[c][0] == 0
         # gather stays inside the global concat(vals,[0]) buffer
         assert np.all(ws.gather_flat[c] <= a.nnz)
-    # staged-DMA windows (DESIGN.md §7.7) never read past the streams
-    assert np.all(ws.blk_off + ws.max_span <= ws.gather_flat.shape[1])
-    assert np.all(ws.blk_coff + ws.max_cspan <= ws.cols_flat.shape[1])
+    # staged-DMA windows (DESIGN.md §7.7) never read past the streams;
+    # windows are PER CHIP since the hot-shard fix (each chip's staged
+    # kernel uses its own chip_span, not the cross-chip max)
+    assert int(np.asarray(ws.chip_span).max(initial=0)) == ws.max_span
+    assert np.all(ws.blk_off + np.asarray(ws.chip_span)[:, None]
+                  <= ws.gather_flat.shape[1])
+    assert np.all(ws.blk_coff + np.asarray(ws.chip_cspan)[:, None]
+                  <= ws.cols_flat.shape[1])

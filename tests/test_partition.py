@@ -2,6 +2,7 @@
 sharded-workspace packing built on it — runs even without hypothesis
 (the property-based twin lives in test_plan.py /
 test_fused_properties.py)."""
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -92,6 +93,80 @@ def test_all_nnz_in_one_row(strategy):
         chip = int(np.searchsorted(ws.bounds[1:], 11, side="right"))
         per_chip = ws.row_block * ws.blk_L.astype(np.int64).sum(axis=1)
         assert per_chip[chip] >= 37
+
+
+# -- align=bm degenerate cases (the block-row clamp bugfix) ----------------
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_align_more_chips_than_block_rows(strategy):
+    """n_chips > block-rows with align=bm: rounding used to leave empty
+    chips BEFORE populated ones ([0, 0, 8, 8, 8] on a single block-row
+    — chip 0 empty, chip 1 everything).  Populated chips must come
+    first, one block-row minimum each, surplus chips empty at the end."""
+    for n_rows, chips in ((8, 4), (16, 4), (24, 7)):
+        row_ptr = _row_ptr([3] * n_rows)
+        bounds = partition_rows_for_chips(row_ptr, chips, strategy,
+                                          align=8)
+        sizes = np.diff(bounds)
+        assert bounds[0] == 0 and bounds[-1] == n_rows
+        assert np.all(sizes >= 0)
+        # interior bounds stay block-row aligned
+        assert np.all(bounds[1:-1] % 8 == 0), (strategy, bounds)
+        # no empty chip before a populated one
+        populated = np.nonzero(sizes)[0]
+        assert populated.size == min(chips, n_rows // 8), (strategy,
+                                                           bounds)
+        assert np.array_equal(populated,
+                              np.arange(populated.size)), (strategy,
+                                                           bounds)
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_align_single_block_row(strategy):
+    """One (ragged) block-row, several chips: chip 0 owns everything."""
+    row_ptr = _row_ptr([2] * 5)      # m=5 < bm=8: one ragged block-row
+    bounds = partition_rows_for_chips(row_ptr, 3, strategy, align=8)
+    assert np.array_equal(bounds, [0, 5, 5, 5]), (strategy, bounds)
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+@pytest.mark.parametrize("align", [1, 8])
+def test_align_empty_matrix(strategy, align):
+    bounds = partition_rows_for_chips(_row_ptr([]), 4, strategy,
+                                      align=align)
+    assert np.array_equal(bounds, [0, 0, 0, 0, 0]), (strategy, bounds)
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_align_no_middle_empty_chip_on_skew(strategy):
+    """A hot head block-row must not strand later chips empty while
+    block-rows remain: every chip before the end gets >= 1 block-row."""
+    row_ptr = _row_ptr([200] * 8 + [1] * 24)     # hot first block-row
+    bounds = partition_rows_for_chips(row_ptr, 4, strategy, align=8)
+    sizes = np.diff(bounds)
+    populated = np.nonzero(sizes)[0]
+    assert np.array_equal(populated, np.arange(populated.size))
+    if strategy != "row_split":
+        assert sizes[0] >= 8      # the hot block-row stays on chip 0
+
+
+def test_align_sharded_workspace_packs_degenerate_shards():
+    """End-to-end: the mixed (align=bm) sharded workspace on more chips
+    than block-rows still packs every row exactly once and matches the
+    unsharded fused dispatch bit-for-bit."""
+    a = random_csr(10, 32, density=0.3, family="uniform", seed=7)
+    ws = build_sharded_workspace(a.row_ptr, a.col_indices, a.shape, 8,
+                                 n_chips=6, backend="pallas_bcsr")
+    assert len(set(ws.inv_perm.tolist())) == a.m
+    assert ws.nnz == a.nnz
+    x = jnp.asarray(
+        np.random.default_rng(8).standard_normal((a.n, 8)), jnp.float32)
+    y0 = spmm(a, x, backend="pallas_bcsr", interpret=True,
+              cache=JitCache())
+    if len(jax.devices()) >= 2:
+        y = spmm(a, x, backend="pallas_bcsr", interpret=True, n_chips=2,
+                 cache=JitCache())
+        assert np.array_equal(np.asarray(y), np.asarray(y0))
 
 
 def test_n_chips_1_bit_matches_unsharded_fused():

@@ -282,17 +282,22 @@ def test_sharded_workspace_windows_cover_every_chip():
     for backend in FUSED:
         sw = build_sharded_workspace(a.row_ptr, a.col_indices, a.shape,
                                      16, n_chips=3, backend=backend)
-        # one traced kernel serves every chip: the global window must
-        # cover the largest block on ANY chip (pad blocks span 0)
+        # windows are PER CHIP since the hot-shard fix: each chip's
+        # window must cover ITS OWN largest block (pad blocks span 0),
+        # and max_span stays the cross-chip max for introspection
         L = sw.blk_L.astype(np.int64)
         spans = np.where(sw.blk_tag == MXU_TAG,
                          L * sw.row_block * sw.bk, sw.row_block * L)
         cspans = np.where(sw.blk_tag == MXU_TAG, L, sw.row_block * L)
-        assert sw.max_span >= int(spans.max(initial=0))
-        assert sw.max_cspan >= int(cspans.max(initial=0))
-        assert np.all(sw.blk_off + sw.max_span
+        chip_span = np.asarray(sw.chip_span)
+        chip_cspan = np.asarray(sw.chip_cspan)
+        assert np.all(chip_span >= spans.max(axis=1, initial=0))
+        assert np.all(chip_cspan >= cspans.max(axis=1, initial=0))
+        assert sw.max_span == int(chip_span.max(initial=0))
+        assert sw.max_cspan == int(chip_cspan.max(initial=0))
+        assert np.all(sw.blk_off + chip_span[:, None]
                       <= sw.gather_flat.shape[1])
-        assert np.all(sw.blk_coff + sw.max_cspan
+        assert np.all(sw.blk_coff + chip_cspan[:, None]
                       <= sw.cols_flat.shape[1])
 
 
