@@ -15,9 +15,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import build_plan, compile_spmm, random_csr
+from repro.core import (TuneConfig, autotune_spmm, build_plan,
+                        compile_spmm, random_csr)
 from repro.core.jit_cache import JitCache
 from repro.core.plan import build_fused_workspace, build_mixed_plan
+from repro.kernels import ops
 
 from .common import bench_record, csv_row, time_fn
 
@@ -82,4 +84,31 @@ def smoke_records() -> list:
             a.row_ptr, a.col_indices, a.shape, 16, strategy=strategy)))
         records.append(bench_record("codegen_plan", strategy,
                                     "pallas_bcsr", 0, mixed_ms, 0))
+    # per-key build seconds as the DISPATCH plumbing reports them
+    # (kernels.ops.BUILD_SECONDS, fed by compile_spmm): plan + pack of
+    # one fused compile — the Table IV "codegen" figure users actually
+    # pay, as opposed to the isolated med_ms cells above.  Sub-ms cells
+    # gate on coverage only (min_wall_ms), so noise can't trip them.
+    small = random_csr(256, 256, density=0.03, family="powerlaw", seed=3)
+    ops.reset_dispatch_counts()
+    compile_spmm(small, 16, backend="pallas_ell", interpret=True,
+                 cache=JitCache())
+    records.append(bench_record("codegen_build_plan_s", "nnz_split",
+                                "pallas_ell", 0,
+                                ops.BUILD_SECONDS["plan"] * 1e3, 0))
+    records.append(bench_record("codegen_build_pack_s", "nnz_split",
+                                "pallas_ell", 0,
+                                ops.BUILD_SECONDS["pack"] * 1e3, 0))
+    # the autotune search cost (DESIGN.md §11) on the same fixture —
+    # one predict pass over 4 candidates + 1 measured compile; the
+    # point the cell tracks is that the search stays codegen-sized
+    ops.reset_dispatch_counts()
+    autotune_spmm(small, 16, backend="pallas_ell", interpret=True,
+                  candidates=[TuneConfig(strategy=s, merge_threshold=t)
+                              for s in ("row_split", "nnz_split")
+                              for t in (0, 16)],
+                  top_k=1, measure=lambda c, v, x: 0.0,
+                  cache=JitCache())
+    records.append(bench_record("codegen_tune_s", "auto", "pallas_ell",
+                                0, ops.BUILD_SECONDS["tune"] * 1e3, 0))
     return records

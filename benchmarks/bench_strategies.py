@@ -36,7 +36,9 @@ except ImportError:          # plain-script run: python benchmarks/...
     sys.path.insert(0, str(_ROOT))           # benchmarks package
     from benchmarks.common import bench_record, csv_row, time_fn
 
-from repro.core import build_plan, compile_spmm, random_csr
+from repro.core import (CSRMatrix, TuneConfig, autotune_spmm_with_result,
+                        build_plan, build_workspace, compile_spmm,
+                        random_csr)
 from repro.core.jit_cache import JitCache
 from repro.kernels import ops
 
@@ -120,7 +122,8 @@ def run(n_chips: int = 0) -> list:
 
 
 def _timed_cell(bench, strategy, backend, n_chips, a, x, *, counter,
-                extra=(), staging=None, x_sharding=None):
+                extra=(), staging=None, x_sharding=None,
+                merge_threshold=0):
     """One smoke cell: compile, time, count launches per call."""
     kw = dict(strategy=strategy, backend=backend, interpret=True,
               cache=JitCache())
@@ -130,6 +133,8 @@ def _timed_cell(bench, strategy, backend, n_chips, a, x, *, counter,
         kw["staging"] = staging
     if x_sharding:
         kw["x_sharding"] = x_sharding
+    if merge_threshold:
+        kw["merge_threshold"] = merge_threshold
     c = compile_spmm(a, x.shape[1], **kw)
     vals = jnp.asarray(a.vals)
     ops.reset_dispatch_counts()
@@ -143,6 +148,60 @@ def _timed_cell(bench, strategy, backend, n_chips, a, x, *, counter,
                      for k in (counter, *extra)) / calls
     return bench_record(bench, strategy, backend, n_chips, us / 1e3,
                         dispatches)
+
+
+def _skewed_csr(seed: int = 13) -> CSRMatrix:
+    """The CGCM motivating fixture: a long tail of 1-nnz rows plus a few
+    hot rows — short block-rows dominate, so merging collapses most of
+    the grid while the hot rows keep their own trips."""
+    rng = np.random.default_rng(seed)
+    n = 128
+    lengths = np.asarray([1] * 120 + [96] * 8, np.int64)
+    row_ptr = np.concatenate([[0], np.cumsum(lengths)])
+    cols = np.concatenate(
+        [np.sort(rng.choice(n, size=int(ln), replace=False))
+         for ln in lengths]).astype(np.int32)
+    vals = rng.standard_normal(int(row_ptr[-1])).astype(np.float32)
+    return CSRMatrix((len(lengths), n), row_ptr, cols, vals)
+
+
+def _tuned_suite(bench, backend, a, x, *, counter, fixed=()):
+    """Autotuned smoke cells (DESIGN.md §11): every candidate — the
+    strategy × merge-threshold grid ⊇ the fixed cells' configs — is
+    MEASURED with the identical min-of-7 timer, so the tuned cell's
+    wall is min over the fixed configs BY CONSTRUCTION.  ``fixed`` is
+    a list of ``(bench_name, TuneConfig)`` sibling cells emitted from
+    the SAME measurement pass (single-timing-pass suites keep that
+    ordering exact instead of noise-approximate).  The tuned record's
+    strategy field is pinned to "auto": the winner's identity may
+    legitimately drift run to run, the record key must not."""
+    cands = [TuneConfig(strategy=s, merge_threshold=t)
+             for s in ("row_split", "nnz_split", "merge_split")
+             for t in (0, 16)]
+
+    def measure(c, vals, xx):
+        return time_fn(c, vals, xx, warmup=2, iters=7, stat="min") / 1e6
+
+    cache = JitCache()
+    c, res = autotune_spmm_with_result(
+        a, x.shape[1], backend=backend, interpret=True, candidates=cands,
+        top_k=len(cands), measure=measure, cache=cache)
+    vals = jnp.asarray(a.vals)
+    records = []
+    for name, cfg in fixed:
+        cc = compile_spmm(a, x.shape[1], backend=backend, interpret=True,
+                          cache=cache, **cfg.compile_kwargs())
+        ops.reset_dispatch_counts()
+        jax.block_until_ready(cc(vals, x))
+        records.append(bench_record(name, cfg.strategy, backend, 0,
+                                    res.measured_s[cfg] * 1e3,
+                                    ops.DISPATCH_COUNTS[counter]))
+    ops.reset_dispatch_counts()
+    jax.block_until_ready(c(vals, x))
+    records.append(bench_record(bench, "auto", backend, 0,
+                                res.best_measured_s * 1e3,
+                                ops.DISPATCH_COUNTS[counter]))
+    return records
 
 
 def smoke_records() -> list:
@@ -211,6 +270,44 @@ def smoke_records() -> list:
                                "pallas_bcsr", 1, a, x,
                                counter="bcsr_fused", staging="dma",
                                x_sharding="rows"))
+    # CGCM-merged cells (DESIGN.md §7.9): the "_merged" bench-name
+    # suffix is the merge axis (merge_threshold=16 vs the default 0).
+    # Structurally the merged powerlaw plan MUST run strictly fewer
+    # grid steps — assert it here so the bench can never silently
+    # report a merged cell that didn't merge.
+    ws0 = build_workspace(a.row_ptr, a.col_indices, a.shape, 16,
+                          merge_threshold=0)
+    ws1 = build_workspace(a.row_ptr, a.col_indices, a.shape, 16,
+                          merge_threshold=16)
+    assert ws1.num_trips < ws0.num_blocks, \
+        "CGCM must shrink the powerlaw grid (merge stage inert?)"
+    records.append(_timed_cell("fused_ell_merged", "nnz_split",
+                               "pallas_ell", 0, a, x,
+                               counter="ell_fused", merge_threshold=16))
+    records.append(_timed_cell("fused_mixed_merged", "nnz_split",
+                               "pallas_bcsr", 0, a, x,
+                               counter="bcsr_fused", merge_threshold=16))
+    records.append(_timed_cell("fused_ell_dma_merged", "nnz_split",
+                               "pallas_ell", 0, a, x,
+                               counter="ell_fused", staging="dma",
+                               merge_threshold=16))
+    # autotuned cells (DESIGN.md §11) + the skewed long-tail suite
+    # merging exists for: the skew fixed/merged cells are emitted from
+    # the SAME measurement pass as the search, so tuned ≤ fixed and
+    # tuned ≤ merged hold exactly, not just within timer noise
+    sk = _skewed_csr()
+    xs = jnp.asarray(rng.standard_normal((sk.n, 16)), jnp.float32)
+    records += _tuned_suite(
+        "fused_ell_skew_tuned", "pallas_ell", sk, xs,
+        counter="ell_fused",
+        fixed=[("fused_ell_skew", TuneConfig(strategy="nnz_split",
+                                             merge_threshold=0)),
+               ("fused_ell_skew_merged",
+                TuneConfig(strategy="nnz_split", merge_threshold=16))])
+    records += _tuned_suite("fused_ell_tuned", "pallas_ell", a, x,
+                            counter="ell_fused")
+    records += _tuned_suite("fused_mixed_tuned", "pallas_bcsr", a, x,
+                            counter="bcsr_fused")
     return records
 
 

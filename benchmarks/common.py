@@ -29,7 +29,12 @@ lowering) carry a ``_dma`` suffix, e.g. ``fused_ell_dma`` /
 ``fused_mixed_dma_sharded``, and the X-sharded cells (X placement,
 DESIGN.md §7.8 — x_sharding="rows" vs the default replicated X) carry
 an ``_xshard`` suffix, e.g. ``fused_ell_xshard`` /
-``fused_mixed_dma_xshard``.
+``fused_mixed_dma_xshard``.  The CGCM-merged cells (DESIGN.md §7.9 —
+merge_threshold=16 vs the default unmerged 0) carry a ``_merged``
+suffix, the skewed long-tail fixture a ``_skew`` suffix, and the
+autotuned cells (DESIGN.md §11) a ``_tuned`` suffix with the strategy
+field pinned to ``"auto"`` — the search's winner may drift between
+runs, the record key must not.
 
 Wall-clock comparisons are normalized by the ``calib`` record — a fixed
 dense matmul timed on the same process — so a uniformly slower CI

@@ -13,10 +13,11 @@ and gate against the checked-in baseline.
 
 Record schema and gate semantics: benchmarks/common.py.  Cells come
 from ``bench_strategies.smoke_records`` (fused VPU + mixed VPU/MXU
-dispatch wall/launch counts, resident AND ``_dma``-staged lowerings)
-and ``bench_codegen_overhead.smoke_records`` (plan+pack host cost),
-plus the ``calib`` record that normalizes wall-clock across runner
-speeds.
+dispatch wall/launch counts: resident AND ``_dma``-staged lowerings,
+CGCM-``_merged`` and autotuned ``_tuned`` cells on the powerlaw and
+``_skew`` suites) and ``bench_codegen_overhead.smoke_records``
+(plan/pack/tune host cost via ``kernels.ops.BUILD_SECONDS``), plus the
+``calib`` record that normalizes wall-clock across runner speeds.
 """
 from __future__ import annotations
 

@@ -27,6 +27,12 @@ ap.add_argument("--x-sharding", default="auto",
                      "replicated per chip, or rows = each chip fetches "
                      "exactly the H panels its rows touch (exact-panel "
                      "exchange; bit-identical either way)")
+ap.add_argument("--autotune", action="store_true",
+                help="search strategy x CGCM merge x staging per "
+                     "aggregation instance (docs/DESIGN.md §11) instead "
+                     "of the fixed nnz_split plan; the winner is "
+                     "memoized, so only the first compile searches "
+                     "(needs a fused backend, i.e. --n-chips >= 1)")
 args = ap.parse_args()
 
 # -- synthetic 2-community graph -------------------------------------------
@@ -65,15 +71,25 @@ if args.n_chips:
               f"(devices present)")
     agg_kw = dict(backend="pallas_ell", interpret=None, n_chips=n_chips,
                   x_sharding=args.x_sharding)
+elif args.autotune:
+    # the search needs a fused backend; unsharded pallas_ell is the
+    # single-chip one (interpret-mode on CPU, native on TPU)
+    agg_kw = dict(backend="pallas_ell", interpret=None)
 else:
     agg_kw = dict(backend="ref")
-agg_h = compile_spmm(a_hat, D_H, strategy="nnz_split", cache=cache,
-                     **agg_kw)
-agg_out = compile_spmm(a_hat, CLASSES, strategy="nnz_split", cache=cache,
-                       **agg_kw)
+if args.autotune:
+    agg_kw["autotune"] = True          # DESIGN.md §11: per-instance
+    agg_kw.pop("strategy", None)       # search picks the strategy
+else:
+    agg_kw["strategy"] = "nnz_split"
+agg_h = compile_spmm(a_hat, D_H, cache=cache, **agg_kw)
+agg_out = compile_spmm(a_hat, CLASSES, cache=cache, **agg_kw)
 print(f"aggregation backend: {agg_h.backend}"
       + (f" sharded over {agg_h.n_chips} chip(s), "
-         f"x_sharding={agg_h.x_sharding}" if agg_h.n_chips else ""))
+         f"x_sharding={agg_h.x_sharding}" if agg_h.n_chips else "")
+      + (f", autotuned: strategy={agg_h.strategy} "
+         f"merge_threshold={agg_h.merge_threshold}"
+         if args.autotune else ""))
 a_vals = jnp.asarray(a_hat.vals)
 
 def init(rng_key):

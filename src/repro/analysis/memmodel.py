@@ -117,3 +117,25 @@ def memory_seconds(cfg, shape, *, multi_pod: bool, remat: str = "full",
     tr = hbm_traffic(cfg, shape, multi_pod=multi_pod, remat=remat,
                      chunk_q=chunk_q)
     return sum(tr.values()) / hbm_bw
+
+
+def spmm_hbm_traffic(*, slots: int, cols_entries: int, padded_nnz: int,
+                     ws_rows: int, d_pad: int,
+                     itemsize: int = F32) -> Dict[str, float]:
+    """Per-forward HBM bytes of one fused SpMM dispatch, from the packed
+    workspace's own counts — the memory term ``core.autotune`` ranks
+    candidate plans with (same materialization-point philosophy as
+    :func:`hbm_traffic`: only streams that actually cross HBM).
+
+      vals_stream  the flat slot buffer, read once per d-tile sweep
+      cols_stream  the descriptor column stream (int32)
+      x_gather     one (1, d_pad) X row (VPU) or (bk, d_pad)-panel slice
+                   amortized per slot — padded_nnz gathers of d_pad lanes
+      y_write      the workspace output rows, written once
+    """
+    return {
+        "vals_stream": float(slots) * itemsize,
+        "cols_stream": float(cols_entries) * 4,
+        "x_gather": float(padded_nnz) * d_pad * itemsize,
+        "y_write": float(ws_rows) * d_pad * itemsize,
+    }

@@ -4,13 +4,16 @@ from .ccm import ccm_register_decomposition, plan_d_tiles, DTiling
 from .plan import (SpmmPlan, MixedPlan, MxuBlockRow, FusedEllWorkspace,
                    ShardedFusedWorkspace, build_fused_workspace,
                    build_mixed_plan, build_sharded_workspace,
-                   build_plan, partition_rows_for_chips, STRATEGIES,
-                   MXU_TAG, VPU_TAG)
+                   build_plan, build_workspace, choose_merge_width,
+                   tag_block_rows, partition_rows_for_chips, STRATEGIES,
+                   PLAN_STAGES, MAX_MERGE_WIDTH, MXU_TAG, VPU_TAG)
 from .jit_cache import (GLOBAL_CACHE, JitCache, clear_global_cache,
                         mesh_fingerprint)
 from .spmm import (CompiledSpmm, compile_spmm, spmm, chip_mesh,
                    resolve_chip_mesh, BACKENDS, FUSED_BACKENDS,
                    X_SHARDING_MODES)
+from .autotune import (TuneConfig, TuneResult, autotune_spmm,
+                       autotune_spmm_with_result, default_candidates)
 from . import moe_spmm
 
 __all__ = [
@@ -19,10 +22,13 @@ __all__ = [
     "SpmmPlan", "MixedPlan", "MxuBlockRow", "FusedEllWorkspace",
     "ShardedFusedWorkspace", "build_fused_workspace", "build_mixed_plan",
     "build_sharded_workspace",
-    "build_plan", "partition_rows_for_chips", "STRATEGIES",
-    "MXU_TAG", "VPU_TAG",
+    "build_plan", "build_workspace", "choose_merge_width",
+    "tag_block_rows", "partition_rows_for_chips", "STRATEGIES",
+    "PLAN_STAGES", "MAX_MERGE_WIDTH", "MXU_TAG", "VPU_TAG",
     "GLOBAL_CACHE", "JitCache", "clear_global_cache", "mesh_fingerprint",
     "CompiledSpmm", "compile_spmm", "spmm", "chip_mesh",
     "resolve_chip_mesh", "BACKENDS", "FUSED_BACKENDS", "X_SHARDING_MODES",
+    "TuneConfig", "TuneResult", "autotune_spmm",
+    "autotune_spmm_with_result", "default_candidates",
     "moe_spmm",
 ]

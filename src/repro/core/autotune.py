@@ -1,0 +1,224 @@
+"""Runtime-feedback autotuner for the fused SpMM dispatch.
+
+The paper's JIT thesis is that the *instance* should pick the code
+shape; the plan pipeline (DESIGN.md §7.9) already exposes the knobs —
+``strategy`` (row/nnz/merge split), ``bm``/``bk`` tiling, ``mxu_gain``
+tagging, the CGCM ``merge_threshold`` and the operand ``staging`` mode.
+This module closes the loop in two stages (DESIGN.md §11):
+
+  predict  rank every candidate :class:`TuneConfig` with the analytic
+           roofline terms (``analysis.roofline`` hardware constants +
+           ``analysis.memmodel.spmm_hbm_traffic`` on the candidate's
+           OWN packed workspace) plus a per-grid-step launch overhead —
+           the term CGCM merging shrinks.  Host-only, no compilation.
+  measure  compile the top-K predicted candidates through
+           ``compile_spmm`` (same jit cache — the search warms it) and
+           time real forwards; the measurement hook is injectable so
+           tests run on a deterministic fake timer.
+
+The winning config is memoized in the :class:`~repro.core.jit_cache.
+JitCache` under a ``("spmm_tune", ...)`` key, so the search cost
+amortizes across recompiles exactly like the paper's Table IV codegen
+cost — the second ``autotune=True`` compile is a cache hit and runs no
+search at all.  Search wall-time is surfaced through
+``kernels.ops.BUILD_SECONDS["tune"]``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .csr import CSRMatrix
+from .jit_cache import GLOBAL_CACHE, JitCache, mesh_fingerprint
+from .plan import build_workspace
+from ..analysis.memmodel import spmm_hbm_traffic
+from ..analysis.roofline import HBM_BW, PEAK_FLOPS
+
+# amortized per-grid-step launch/descriptor overhead (s).  The absolute
+# value only has to be the right order of magnitude: it breaks ties
+# between plans whose streamed bytes are close, in favor of fewer
+# merged trips — exactly the skew CGCM targets.
+TRIP_OVERHEAD_S = 2e-6
+
+STRATEGIES = ("row_split", "nnz_split", "merge_split")
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneConfig:
+    """One point of the search space — the per-instance knobs the
+    dispatch stack bakes into its jit-cache keys."""
+    strategy: str = "nnz_split"
+    bm: int = 8
+    bk: int = 8
+    mxu_gain: float = 4.0
+    merge_threshold: int = 0
+    staging: str = "resident"
+
+    def compile_kwargs(self) -> dict:
+        return {"strategy": self.strategy, "bm": self.bm, "bk": self.bk,
+                "mxu_gain": self.mxu_gain,
+                "merge_threshold": self.merge_threshold,
+                "staging": self.staging}
+
+
+@dataclasses.dataclass
+class TuneResult:
+    """The memoized outcome of one search: the winner plus the full
+    ranking (predicted seconds for every candidate, measured seconds
+    for the finalists) for introspection and the bench tables."""
+    config: TuneConfig
+    predicted_s: dict           # TuneConfig -> predicted seconds
+    measured_s: dict            # TuneConfig -> measured seconds (top-K)
+    tune_seconds: float = 0.0
+
+    @property
+    def best_measured_s(self) -> float:
+        return self.measured_s[self.config]
+
+
+def default_candidates(*, bm: int = 8, bk: int = 8,
+                       mxu_gain: float = 4.0,
+                       staging: str = "resident",
+                       merge_thresholds: Sequence[int] = (0, 8, 32)
+                       ) -> List[TuneConfig]:
+    """The default grid: every strategy × CGCM threshold at the caller's
+    tiling/staging.  Callers with wider budgets pass their own list
+    (any ``TuneConfig`` field may vary — bm/bk/mxu_gain/staging
+    included); the default keeps the measured stage to a handful of
+    compiles so autotuning stays cheaper than one training step."""
+    return [TuneConfig(strategy=s, bm=bm, bk=bk, mxu_gain=mxu_gain,
+                       merge_threshold=t, staging=staging)
+            for s in STRATEGIES for t in merge_thresholds]
+
+
+def predict_seconds(a: CSRMatrix, d: int, cfg: TuneConfig, *,
+                    mixed: bool = False) -> float:
+    """Analytic forward-time estimate for one candidate: the roofline
+    max of compute and HBM terms on the candidate's own packed
+    workspace, plus the per-trip launch overhead.  Host-only."""
+    ws = build_workspace(
+        a.row_ptr, a.col_indices, a.shape, d, strategy=cfg.strategy,
+        row_block=cfg.bm, mixed=mixed, bk=cfg.bk, mxu_gain=cfg.mxu_gain,
+        merge_threshold=cfg.merge_threshold)
+    d_pad = max(-(-d // 128) * 128, 128)
+    traffic = spmm_hbm_traffic(
+        slots=int(ws.gather_flat.shape[0]),
+        cols_entries=int(ws.cols_flat.shape[0]),
+        padded_nnz=int(ws.gather_flat.shape[0]),
+        ws_rows=ws.ws_rows, d_pad=d_pad)
+    compute_s = 2.0 * a.nnz * d / PEAK_FLOPS
+    memory_s = sum(traffic.values()) / HBM_BW
+    return max(compute_s, memory_s) + ws.num_trips * TRIP_OVERHEAD_S
+
+
+def _wall_time_measure(compiled, vals, x, *, repeats: int = 3) -> float:
+    """Default measurement hook: min-of-N blocked wall time after one
+    warmup forward (which also pays tracing/compilation, keeping it out
+    of the timed region)."""
+    jax.block_until_ready(compiled(vals, x))
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(compiled(vals, x))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def autotune_spmm(a: CSRMatrix, d: int, *, backend: str = "auto",
+                  bm: int = 8, bk: int = 8, mxu_gain: float = 4.0,
+                  interpret: Optional[bool] = None,
+                  mesh=None, n_chips: Optional[int] = None,
+                  staging: Optional[str] = None,
+                  x_sharding: Optional[str] = None,
+                  candidates: Optional[Sequence[TuneConfig]] = None,
+                  measure: Optional[Callable] = None, top_k: int = 3,
+                  cache: JitCache = GLOBAL_CACHE):
+    """Search the plan space for this instance and return the winning
+    compiled artifact (``compile_spmm`` of the winner — a jit-cache hit
+    when the search already ran).  ``measure(compiled, vals, x) ->
+    seconds`` is injectable for deterministic tests."""
+    compiled, _ = autotune_spmm_with_result(
+        a, d, backend=backend, bm=bm, bk=bk, mxu_gain=mxu_gain,
+        interpret=interpret, mesh=mesh, n_chips=n_chips, staging=staging,
+        x_sharding=x_sharding, candidates=candidates, measure=measure,
+        top_k=top_k, cache=cache)
+    return compiled
+
+
+def autotune_spmm_with_result(
+        a: CSRMatrix, d: int, *, backend: str = "auto", bm: int = 8,
+        bk: int = 8, mxu_gain: float = 4.0,
+        interpret: Optional[bool] = None, mesh=None,
+        n_chips: Optional[int] = None, staging: Optional[str] = None,
+        x_sharding: Optional[str] = None,
+        candidates: Optional[Sequence[TuneConfig]] = None,
+        measure: Optional[Callable] = None, top_k: int = 3,
+        cache: JitCache = GLOBAL_CACHE) -> Tuple[object, TuneResult]:
+    """:func:`autotune_spmm` plus the full :class:`TuneResult` (the
+    bench tables report the per-candidate rankings)."""
+    from .spmm import (FUSED_BACKENDS, _resolve_backend,
+                       _resolve_staging_for, _resolve_x_sharding_for,
+                       compile_spmm, resolve_chip_mesh)
+    from ..kernels.ops import record_build_seconds, resolve_interpret
+
+    backend = _resolve_backend(
+        backend, sharded=mesh is not None or n_chips is not None)
+    if backend not in FUSED_BACKENDS:
+        raise ValueError(
+            f"autotune searches the fused plan space "
+            f"({'/'.join(FUSED_BACKENDS)}); backend={backend!r} has "
+            f"nothing to tune")
+    interpret = resolve_interpret(interpret)
+    staging_r = _resolve_staging_for(backend, staging, interpret)
+    mesh = resolve_chip_mesh(mesh, n_chips)
+    x_sharding = _resolve_x_sharding_for(backend, x_sharding, interpret,
+                                         mesh)
+    if candidates is None:
+        candidates = default_candidates(bm=bm, bk=bk, mxu_gain=mxu_gain,
+                                        staging=staging_r)
+    candidates = list(candidates)
+    if not candidates:
+        raise ValueError("autotune needs at least one candidate config")
+    measure = measure or _wall_time_measure
+    mixed = backend == "pallas_bcsr"
+
+    key = ("spmm_tune", a.fingerprint, d, backend, interpret, x_sharding,
+           mesh_fingerprint(mesh),
+           tuple(dataclasses.astuple(c) for c in candidates))
+
+    def _search() -> TuneResult:
+        t0 = time.perf_counter()
+        predicted = {c: predict_seconds(a, d, c, mixed=mixed)
+                     for c in candidates}
+        ranked = sorted(candidates, key=lambda c: predicted[c])
+        finalists = ranked[:max(int(top_k), 1)]
+        vals = jnp.asarray(a.vals)
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal((a.shape[1], d)), jnp.float32)
+        measured = {}
+        for c in finalists:
+            compiled_c = compile_spmm(
+                a, d, backend=backend, interpret=interpret, mesh=mesh,
+                x_sharding=x_sharding, cache=cache, **c.compile_kwargs())
+            measured[c] = float(measure(compiled_c, vals, x))
+        # stable tie-break: measured time, then predicted rank — a
+        # constant fake timer degenerates to the predicted order
+        winner = min(finalists,
+                     key=lambda c: (measured[c], predicted[c]))
+        res = TuneResult(config=winner, predicted_s=predicted,
+                         measured_s=measured,
+                         tune_seconds=time.perf_counter() - t0)
+        record_build_seconds("tune", res.tune_seconds)
+        return res
+
+    result: TuneResult = cache.get_or_build(key, _search)
+    compiled = compile_spmm(
+        a, d, backend=backend, interpret=interpret, mesh=mesh,
+        x_sharding=x_sharding, cache=cache,
+        **result.config.compile_kwargs())
+    return compiled, result

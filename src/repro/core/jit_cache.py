@@ -15,13 +15,20 @@ call).
 threads, so ``get_or_build`` is thread-safe with single-flight builds:
 concurrent requests for the same key block on one builder instead of
 racing N redundant (and expensive) plan+lower passes.
+
+The cache is capacity-bounded with LRU eviction (``capacity=None`` =
+unbounded, the pre-existing behavior): the autotuner memoizes search
+results and every candidate artifact it measured, so a long-lived
+serving process would otherwise grow without bound.  ``stats()``
+reports hits/misses/evictions for the serving tier.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import threading
 import time
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Optional, Tuple
 
 Key = Tuple
 
@@ -51,12 +58,18 @@ class CacheEntry:
 
 
 class JitCache:
-    def __init__(self):
-        self._entries: Dict[Key, CacheEntry] = {}
+    def __init__(self, capacity: Optional[int] = None):
+        if capacity is not None and capacity < 1:
+            raise ValueError(f"capacity must be >= 1 or None, "
+                             f"got {capacity}")
+        self.capacity = capacity
+        self._entries: "collections.OrderedDict[Key, CacheEntry]" = \
+            collections.OrderedDict()
         self._lock = threading.Lock()
-        self._inflight: Dict[Key, threading.Event] = {}
+        self._inflight: dict = {}
         self.misses = 0
         self.hits = 0
+        self.evictions = 0
 
     def get_or_build(self, key: Key, builder: Callable[[], Any]) -> Any:
         """Return the cached value for ``key``, building it at most once
@@ -69,6 +82,7 @@ class JitCache:
                 if ent is not None:
                     ent.hits += 1
                     self.hits += 1
+                    self._entries.move_to_end(key)
                     return ent.value
                 event = self._inflight.get(key)
                 if event is None:
@@ -94,6 +108,11 @@ class JitCache:
             with self._lock:
                 self._entries[key] = CacheEntry(
                     value, time.perf_counter() - t0)
+                self._entries.move_to_end(key)
+                while (self.capacity is not None
+                       and len(self._entries) > self.capacity):
+                    self._entries.popitem(last=False)   # LRU out
+                    self.evictions += 1
                 self._inflight.pop(key, None)
             event.set()
             return value
@@ -111,14 +130,15 @@ class JitCache:
     def stats(self) -> dict:
         with self._lock:
             return {"entries": len(self._entries), "hits": self.hits,
-                    "misses": self.misses,
+                    "misses": self.misses, "evictions": self.evictions,
+                    "capacity": self.capacity,
                     "total_build_seconds": sum(
                         e.build_seconds for e in self._entries.values())}
 
     def clear(self):
         with self._lock:
             self._entries.clear()
-            self.hits = self.misses = 0
+            self.hits = self.misses = self.evictions = 0
 
 
 GLOBAL_CACHE = JitCache()

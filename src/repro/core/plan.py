@@ -26,6 +26,25 @@ locality they trade:
 The padded-gather trick keeps *values* dynamic: ``gather_idx`` maps each
 ELL slot to an index in ``concat(vals, [0])`` so the same compiled plan
 serves any values with this structure (jit-function semantics).
+
+Plan construction is a **transform pipeline** (DESIGN.md §7.9):
+
+  build   group rows into ELL segments (:func:`build_plan`)
+  merge   pick the CGCM merge width ``W`` from the global row-length
+          distribution (:func:`choose_merge_width`) — the paper's
+          coarse-grain merging applied to descriptor trips: runs of
+          short/empty block-rows share ONE merged grid step
+  tag     per-block-row execution-unit selection for the mixed backend
+          (:func:`tag_block_rows`, folded into :func:`build_mixed_plan`)
+  pack    flatten everything into the descriptor stream
+          (:func:`_pack_workspace`, merge-width aware)
+  shard   partition rows across chips at merged-trip boundaries and run
+          the same pipeline per chip (:func:`build_sharded_workspace`)
+
+:func:`build_workspace` composes build/merge/tag/pack for the
+single-chip path; each stage stays independently callable so the
+autotuner (``core.autotune``) can re-run cheap stages per candidate
+without repacking everything.
 """
 from __future__ import annotations
 
@@ -55,6 +74,62 @@ STAGE_TILE = 128
 
 def _stage_tile_ceil(v: int) -> int:
     return -(-int(v) // STAGE_TILE) * STAGE_TILE
+
+
+# CGCM merge widths are powers of two so merged trips nest evenly in the
+# descriptor stream and the kernels' static unroll stays small
+MAX_MERGE_WIDTH = 8
+
+
+def choose_merge_width(row_ptr, *, row_block: int = 8,
+                       merge_threshold: int = 0,
+                       wmax: int = MAX_MERGE_WIDTH) -> int:
+    """The CGCM **merge** stage (DESIGN.md §7.9): pick how many
+    consecutive block-row descriptors share one merged grid step.
+
+    The paper's coarse-grain merging coalesces short rows so no hardware
+    lane idles on a near-empty row; here the wasted resource is a whole
+    *grid step* — a block-row with one nonzero still costs a descriptor
+    trip, its output store, and (staged) a DMA window round-trip.  On a
+    powerlaw instance most block-rows are short, so the fixed per-step
+    cost dominates.
+
+    ``merge_threshold`` is the target trip count per merged step: the
+    width ``W`` (a power of two, capped at ``wmax``) doubles while the
+    *typical* trips a merged step would execute stays within the
+    threshold.  "Typical" is the median per-block trip count over the
+    length-sorted row order (the nnz_split view, where short rows group
+    together) — a mean would be dominated by exactly the hot rows a
+    skewed instance has, masking the short-block majority merging
+    exists for.  ``0`` (the default) disables merging — every existing
+    plan layout is byte-identical to the pre-CGCM packer.  Long-row
+    instances keep ``W == 1`` automatically: their median per-block
+    trip count already exceeds any sane threshold, and merging would
+    only inflate the staged DMA windows.
+
+    Deterministic, structure-only, and computed from the GLOBAL
+    ``row_ptr`` — the sharded path calls this once before
+    :func:`partition_rows_for_chips` so every chip packs with the same
+    width and chip bounds cut at merged-trip boundaries.
+    """
+    if merge_threshold <= 0:
+        return 1
+    lengths = np.diff(np.asarray(row_ptr))
+    m = int(lengths.shape[0])
+    if m == 0:
+        return 1
+    # per-block-row trip count = max row length in the block, over the
+    # length-sorted order (the padded ELL trip count a short-row bucket
+    # pays whatever the grouping strategy chooses later)
+    nblk = -(-m // row_block)
+    padded = np.zeros(nblk * row_block, dtype=np.int64)
+    padded[:m] = np.sort(lengths)
+    trips = np.maximum(padded.reshape(nblk, row_block).max(axis=1), 1)
+    typical = float(np.median(trips))
+    w = 1
+    while w < wmax and typical * (w * 2) <= merge_threshold:
+        w *= 2
+    return w
 
 
 @dataclasses.dataclass
@@ -261,13 +336,27 @@ class FusedEllWorkspace:
     undoes it with a single gather: ``y = y_ws[inv_perm]``.
 
     DMA staging metadata (DESIGN.md §7.7): ``blk_span``/``blk_cspan``
-    are each descriptor's contiguous slot/column footprint — ``bm * L``
-    slots for a VPU block, ``L * bm * bk`` slots but only ``L`` column
-    entries for an MXU block-row.  ``max_span``/``max_cspan`` round the
-    per-block maxima up to :data:`STAGE_TILE`, and the flat buffers are
-    tail-padded with inert sentinels so the staged kernels can issue a
-    fixed ``[off, off + max_span)`` async copy for ANY block without a
-    bounds branch.
+    are each **merged trip's** contiguous slot/column footprint — with
+    ``merge_width == 1`` (the default) that is the per-block extent:
+    ``bm * L`` slots for a VPU block, ``L * bm * bk`` slots but only
+    ``L`` column entries for an MXU block-row.  With ``merge_width ==
+    W > 1`` (CGCM, DESIGN.md §7.9) each entry covers ``W`` consecutive
+    descriptors and equals the sum of the member extents — valid
+    because the packer emits both streams contiguously, so a merged
+    trip's window is one contiguous ``[off[g*W], off[g*W] + span)``
+    copy.  ``max_span``/``max_cspan`` round the per-trip maxima up to
+    :data:`STAGE_TILE`, and the flat buffers are tail-padded with inert
+    sentinels so the staged kernels can issue a fixed-size async copy
+    for ANY merged trip without a bounds branch.
+
+    CGCM merging pads the descriptor table to a multiple of
+    ``merge_width`` with inert blocks (``blk_L == 0`` — zero trips,
+    ``blk_off``/``blk_coff`` at the stream end, zero span) so the grid
+    is exactly ``num_blocks // merge_width`` steps; the descriptor
+    table itself is the merged trip's per-row segment table (each
+    member keeps its own ``off``/``L``, so every row still reduces its
+    lanes separately in-register and the output is bit-identical to
+    the unmerged plan).
     """
     cols_flat: np.ndarray    # (Sc,) int32 — VPU: X row per slot;
                              #               MXU: block-column per step
@@ -285,10 +374,13 @@ class FusedEllWorkspace:
     # hand-built workspace would advertise staged-DMA safety its
     # buffers don't have, so there is deliberately no fallback here
     # (max_span == 0 means: no staged dispatch for this workspace)
-    blk_span: Optional[np.ndarray] = None   # (B,) int32 slots per block
-    blk_cspan: Optional[np.ndarray] = None  # (B,) int32 col entries per blk
+    blk_span: Optional[np.ndarray] = None   # (B//W,) int32 slots per trip
+    blk_cspan: Optional[np.ndarray] = None  # (B//W,) int32 cols per trip
     max_span: int = 0        # DMA window over gather/vals slots
     max_cspan: int = 0       # DMA window over cols entries
+    merge_width: int = 1     # CGCM: descriptors per merged grid step
+    pack_seconds: float = 0.0  # host cost of _pack_workspace (satellite
+                               # of the Table IV amortization story)
 
     def __post_init__(self):
         # pure-VPU packings (the pre-mixed layout): every block is VPU
@@ -303,21 +395,32 @@ class FusedEllWorkspace:
         return int(self.blk_off.shape[0])
 
     @property
+    def num_trips(self) -> int:
+        """Merged grid steps along the block axis — ``num_blocks`` when
+        merging is off, ``num_blocks // merge_width`` under CGCM (the
+        quantity the powerlaw bench asserts shrinks)."""
+        return self.num_blocks // max(self.merge_width, 1)
+
+    @property
     def has_mxu(self) -> bool:
         return bool(np.any(self.blk_tag == MXU_TAG))
 
 
-def build_fused_workspace(plan) -> FusedEllWorkspace:
+def build_fused_workspace(plan, *, merge_width: int = 1
+                          ) -> FusedEllWorkspace:
     """Pack a plan into the single-dispatch descriptor-table layout.
 
     Accepts either a pure-VPU :class:`SpmmPlan` (the original ELL
     layout: tags all ``VPU_TAG``, column stream slot-parallel) or a
     :class:`MixedPlan`, whose MXU block-rows join the same descriptor
     stream with ``MXU_TAG`` so the whole mixed plan still lowers as ONE
-    ``pallas_call``.
+    ``pallas_call``.  ``merge_width`` is the CGCM width from the merge
+    stage (:func:`choose_merge_width`); 1 reproduces the pre-CGCM
+    layout byte-for-byte.
     """
     if isinstance(plan, MixedPlan):
-        return _pack_workspace(plan, mixed_kernel=True)
+        return _pack_workspace(plan, mixed_kernel=True,
+                               merge_width=merge_width)
     # a pure-VPU SpmmPlan is the degenerate mixed plan (identity nnz
     # map, no MXU block-rows) — ONE packing loop serves both layouts,
     # so a packing-invariant fix can never diverge the two backends.
@@ -330,7 +433,51 @@ def build_fused_workspace(plan) -> FusedEllWorkspace:
         vpu_nnz_map=np.arange(plan.nnz, dtype=np.int64),
         mxu_rows=[], plan_seconds=plan.plan_seconds,
         fingerprint=plan.fingerprint)
-    return _pack_workspace(trivial, mixed_kernel=False)
+    return _pack_workspace(trivial, mixed_kernel=False,
+                           merge_width=merge_width)
+
+
+# the plan-transform pipeline's stage order (DESIGN.md §7.9); "shard"
+# wraps the first four per chip range (build_sharded_workspace)
+PLAN_STAGES = ("build", "merge", "tag", "pack", "shard")
+
+
+def build_workspace(row_ptr: np.ndarray, col_indices: np.ndarray, shape,
+                    d: int, *, strategy: str = "nnz_split",
+                    row_block: int = 8, mixed: bool = False, bk: int = 8,
+                    mxu_gain: float = 4.0, merge_threshold: int = 0,
+                    merge_width: Optional[int] = None,
+                    fingerprint: str = "", max_dt: int = 512,
+                    merge_target_segments: int = 16
+                    ) -> FusedEllWorkspace:
+    """Run the single-chip plan-transform pipeline end to end:
+
+      merge  :func:`choose_merge_width` (skipped when ``merge_width``
+             is pinned — the sharded path decides globally, the
+             autotuner per candidate)
+      build / tag  :func:`build_plan`, or :func:`build_mixed_plan`
+             (``mixed=True``) whose tag stage is
+             :func:`tag_block_rows`
+      pack   :func:`build_fused_workspace` → :func:`_pack_workspace`
+
+    Every stage is also callable on its own; this wrapper is the
+    canonical composition the dispatch layer and the benches use.
+    """
+    if merge_width is None:
+        merge_width = choose_merge_width(
+            row_ptr, row_block=row_block, merge_threshold=merge_threshold)
+    if mixed:
+        plan = build_mixed_plan(
+            row_ptr, col_indices, shape, d, strategy=strategy,
+            row_block=row_block, bk=bk, mxu_gain=mxu_gain,
+            fingerprint=fingerprint, max_dt=max_dt,
+            merge_target_segments=merge_target_segments)
+    else:
+        plan = build_plan(
+            row_ptr, col_indices, shape, d, strategy=strategy,
+            row_block=row_block, fingerprint=fingerprint, max_dt=max_dt,
+            merge_target_segments=merge_target_segments)
+    return build_fused_workspace(plan, merge_width=merge_width)
 
 
 # ---------------------------------------------------------------------------
@@ -409,27 +556,25 @@ class MixedPlan:
         }
 
 
-def build_mixed_plan(row_ptr: np.ndarray, col_indices: np.ndarray, shape,
-                     d: int, *, strategy: str = "nnz_split",
-                     row_block: int = 8, bk: int = 8,
-                     mxu_gain: float = 4.0, fingerprint: str = "",
-                     max_dt: int = 512,
-                     merge_target_segments: int = 16) -> MixedPlan:
-    """Tag each bm-aligned block-row VPU or MXU and plan both halves.
+def tag_block_rows(row_ptr: np.ndarray, col_indices: np.ndarray, shape,
+                   *, row_block: int = 8, bk: int = 8,
+                   mxu_gain: float = 4.0):
+    """The **tag** stage of the plan pipeline: assign each bm-aligned
+    block-row its execution unit.
 
     A block-row goes MXU when ``K * bk <= mxu_gain * Lmax`` — its padded
     matmul work, discounted by the MXU's per-MAC throughput advantage
     ``mxu_gain``, beats the ELL path's padded FMA work.  ``mxu_gain=0``
     forces a pure-VPU plan; ``mxu_gain=inf`` a pure-BCSR one.  Dense or
-    block-clustered regions go MXU, ragged sparse rows stay VPU — one
-    plan, both units, still one dispatch after packing.
+    block-clustered regions go MXU, ragged sparse rows stay VPU.
+
+    Returns ``(mxu_rows, vpu_rows)``: the packed
+    :class:`MxuBlockRow` list and the (ascending) original row ids left
+    on the VPU path.
     """
-    t0 = time.perf_counter()
-    if strategy not in STRATEGIES:
-        raise ValueError(f"strategy must be one of {STRATEGIES}")
     row_ptr = np.asarray(row_ptr)
     col_indices = np.asarray(col_indices)
-    m, n = shape
+    m, _ = shape
     nnz = int(col_indices.shape[0])
     lengths = np.diff(row_ptr)
     bm = row_block
@@ -460,6 +605,31 @@ def build_mixed_plan(row_ptr: np.ndarray, col_indices: np.ndarray, shape,
 
     vpu_rows = (np.concatenate(vpu_row_parts) if vpu_row_parts
                 else np.zeros(0, dtype=np.int64))
+    return mxu_rows, vpu_rows
+
+
+def build_mixed_plan(row_ptr: np.ndarray, col_indices: np.ndarray, shape,
+                     d: int, *, strategy: str = "nnz_split",
+                     row_block: int = 8, bk: int = 8,
+                     mxu_gain: float = 4.0, fingerprint: str = "",
+                     max_dt: int = 512,
+                     merge_target_segments: int = 16) -> MixedPlan:
+    """Tag each bm-aligned block-row VPU or MXU and plan both halves —
+    the tag+build composition of the plan pipeline (the tagging
+    heuristic itself lives in :func:`tag_block_rows`)."""
+    t0 = time.perf_counter()
+    if strategy not in STRATEGIES:
+        raise ValueError(f"strategy must be one of {STRATEGIES}")
+    row_ptr = np.asarray(row_ptr)
+    col_indices = np.asarray(col_indices)
+    m, n = shape
+    nnz = int(col_indices.shape[0])
+    lengths = np.diff(row_ptr)
+    bm = row_block
+
+    mxu_rows, vpu_rows = tag_block_rows(
+        row_ptr, col_indices, shape, row_block=bm, bk=bk,
+        mxu_gain=mxu_gain)
     # sub-structure of the VPU rows (original relative order) plus the
     # map from sub-nnz ids back to global nnz ids for gather re-basing
     sub_lengths = lengths[vpu_rows]
@@ -486,8 +656,8 @@ def build_mixed_plan(row_ptr: np.ndarray, col_indices: np.ndarray, shape,
                      fingerprint=fingerprint)
 
 
-def _pack_workspace(plan: MixedPlan, *,
-                    mixed_kernel: bool) -> FusedEllWorkspace:
+def _pack_workspace(plan: MixedPlan, *, mixed_kernel: bool,
+                    merge_width: int = 1) -> FusedEllWorkspace:
     """Pack a :class:`MixedPlan` into one tagged descriptor stream —
     THE packing loop, shared by both fused backends (pure-VPU plans
     arrive as degenerate mixed plans, see ``build_fused_workspace``).
@@ -498,7 +668,15 @@ def _pack_workspace(plan: MixedPlan, *,
     marks workspaces destined for ``spmm_bcsr_fused`` (identity remap
     skipped only when False, and the slot-stream floor applied only
     when True — the pure ELL kernel needs neither).
+
+    ``merge_width == W > 1`` (CGCM, DESIGN.md §7.9) pads the descriptor
+    table to a multiple of ``W`` with inert zero-trip blocks and emits
+    PER-MERGED-TRIP spans (each the sum of its ``W`` members' extents —
+    both streams are contiguous across consecutive descriptors, so a
+    merged trip is still one contiguous DMA window).
     """
+    t_pack0 = time.perf_counter()
+    mw = max(int(merge_width), 1)
     bm = plan.row_block
     nnz = plan.nnz
     sub_nnz = int(plan.vpu_nnz_map.shape[0])
@@ -560,12 +738,32 @@ def _pack_workspace(plan: MixedPlan, *,
     assert slot < (1 << 31), ("mixed workspace exceeds int32 slot space",
                               slot)
 
+    # CGCM (DESIGN.md §7.9): pad the descriptor table to a multiple of
+    # the merge width with inert blocks — zero trips, zero span, offsets
+    # at the stream end — so the grid is exactly num_blocks // W merged
+    # steps and a partially-filled final trip reads nothing extra.  The
+    # pad blocks cost bm zero output rows each (inv_perm never points at
+    # them), bounded by (W - 1) * bm rows total.
+    while len(Ls) % mw:
+        tags.append(VPU_TAG)
+        offs.append(slot)
+        coffs.append(cpos)
+        Ls.append(0)
+        spans.append(0)
+        cspans.append(0)
+        ws_row += bm
+
     # fixed-size DMA windows for the staged kernels (DESIGN.md §7.7):
-    # every block's panel copy is [off, off + max_span) whatever its own
-    # span, so the flat streams get a max-window tail of inert sentinels
-    # (gather -> the zero slot, cols -> row/block-column 0)
-    max_span = _stage_tile_ceil(max(spans, default=0))
-    max_cspan = _stage_tile_ceil(max(cspans, default=0))
+    # every merged trip's panel copy is [off, off + max_span) whatever
+    # its own span, so the flat streams get a max-window tail of inert
+    # sentinels (gather -> the zero slot, cols -> row/block-column 0).
+    # Per-trip spans are the sum over the trip's W members (contiguous
+    # streams make that the exact contiguous footprint); W == 1 keeps
+    # the historical per-block arrays byte-for-byte.
+    trip_spans = np.asarray(spans, np.int64).reshape(-1, mw).sum(axis=1)
+    trip_cspans = np.asarray(cspans, np.int64).reshape(-1, mw).sum(axis=1)
+    max_span = _stage_tile_ceil(trip_spans.max(initial=0))
+    max_cspan = _stage_tile_ceil(trip_cspans.max(initial=0))
 
     def cat(parts, dtype, floor, min_size, tail):
         out = (np.concatenate(parts).astype(dtype) if parts
@@ -593,11 +791,14 @@ def _pack_workspace(plan: MixedPlan, *,
         blk_tag=np.asarray(tags, np.int32),
         blk_coff=np.asarray(coffs, np.int32),
         bk=plan.bk,
-        blk_span=np.asarray(spans, np.int32),
-        blk_cspan=np.asarray(cspans, np.int32),
+        blk_span=trip_spans.astype(np.int32),
+        blk_cspan=trip_cspans.astype(np.int32),
         max_span=max_span,
-        max_cspan=max_cspan)
+        max_cspan=max_cspan,
+        merge_width=mw,
+        pack_seconds=time.perf_counter() - t_pack0)
     assert ws.ws_rows == ws.num_blocks * bm
+    assert ws.num_blocks % mw == 0
     return ws
 
 
@@ -728,6 +929,11 @@ class ShardedFusedWorkspace:
     x_fetch: Optional[np.ndarray] = None  # (C, T) int32 global panel ids
     x_send: Optional[np.ndarray] = None   # (C, C, T2) int32 local panels
     x_recv: Optional[np.ndarray] = None   # (C, T) int32 into (C*T2,) recv
+    # CGCM (DESIGN.md §7.9): decided ONCE from the global row_ptr before
+    # partitioning, so every chip packs with the same width and chip
+    # bounds cut at merged-trip boundaries
+    merge_width: int = 1
+    pack_seconds: float = 0.0  # summed host cost of the per-chip packs
 
     def __post_init__(self):
         if self.blk_tag is None:
@@ -744,6 +950,11 @@ class ShardedFusedWorkspace:
     def num_blocks(self) -> int:
         """Common per-chip block count B (0 iff the matrix has no rows)."""
         return int(self.blk_off.shape[1])
+
+    @property
+    def num_trips(self) -> int:
+        """Per-chip merged grid steps along the block axis."""
+        return self.num_blocks // max(self.merge_width, 1)
 
     @property
     def x_local_panels(self) -> int:
@@ -799,7 +1010,8 @@ def build_sharded_workspace(row_ptr: np.ndarray, col_indices: np.ndarray,
                             merge_target_segments: int = 16,
                             backend: str = "pallas_ell", bk: int = 8,
                             mxu_gain: float = 4.0,
-                            x_sharding: str = "replicated"
+                            x_sharding: str = "replicated",
+                            merge_threshold: int = 0
                             ) -> ShardedFusedWorkspace:
     """Partition rows across ``n_chips`` and pack one fused workspace per
     chip (see :class:`ShardedFusedWorkspace`).  Host-only — needs no
@@ -816,6 +1028,12 @@ def build_sharded_workspace(row_ptr: np.ndarray, col_indices: np.ndarray,
     tables the dispatch layer's exact-panel exchange consumes
     (DESIGN.md §7.8) — instance size then scales with the mesh instead
     of one chip's HBM.
+
+    ``merge_threshold`` drives the CGCM merge stage (DESIGN.md §7.9).
+    The width is chosen ONCE from the GLOBAL ``row_ptr`` — the shard
+    stage runs AFTER merge in the pipeline — and the chip bounds are
+    aligned to ``row_block * W`` rows so every chip's block count is a
+    whole number of merged trips and no merged trip straddles a chip.
     """
     if n_chips < 1:
         raise ValueError(f"n_chips must be >= 1, got {n_chips}")
@@ -827,8 +1045,14 @@ def build_sharded_workspace(row_ptr: np.ndarray, col_indices: np.ndarray,
     col_indices = np.asarray(col_indices)
     m, n = shape
     nnz = int(col_indices.shape[0])
+    # merge BEFORE partitioning (pipeline order: ... merge → ... →
+    # shard): one global width, chip cuts at merged-trip boundaries
+    merge_width = choose_merge_width(row_ptr, row_block=row_block,
+                                     merge_threshold=merge_threshold)
+    align = 1 if (not mixed and merge_width == 1) else (row_block
+                                                        * merge_width)
     bounds = partition_rows_for_chips(row_ptr, n_chips, strategy,
-                                      align=row_block if mixed else 1)
+                                      align=align)
 
     plans: List = []
     shards: List[FusedEllWorkspace] = []
@@ -851,10 +1075,15 @@ def build_sharded_workspace(row_ptr: np.ndarray, col_indices: np.ndarray,
                               max_dt=max_dt,
                               merge_target_segments=merge_target_segments)
         plans.append(plan)
-        shards.append(build_fused_workspace(plan))
+        shards.append(build_fused_workspace(plan,
+                                            merge_width=merge_width))
         bases.append(base)
 
+    # every chip's block count is a multiple of W (the packer pads), so
+    # the common stacked count is too — stacked pad blocks (L == 0,
+    # off == 0) only ever fill whole merged trips at the tail
     B = max(ws.num_blocks for ws in shards)
+    assert B % merge_width == 0
     # per-chip DMA windows (hot-shard fix): each chip's staged ring is
     # sized from ITS OWN largest block, floored at one STAGE_TILE so an
     # empty chip's (SPMD-replicated) window copies stay non-degenerate.
@@ -926,7 +1155,8 @@ def build_sharded_workspace(row_ptr: np.ndarray, col_indices: np.ndarray,
         chip_span=chip_span, chip_cspan=chip_cspan,
         x_sharding=x_sharding, x_panels=x_panels,
         x_own_panels=own_panels, x_fetch=x_fetch, x_send=x_send,
-        x_recv=x_recv)
+        x_recv=x_recv, merge_width=merge_width,
+        pack_seconds=sum(ws.pack_seconds for ws in shards))
 
 
 def _x_fetch_tables(needs: List[np.ndarray], own_panels: int,

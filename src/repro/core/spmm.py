@@ -44,7 +44,7 @@ from .csr import CSRMatrix
 from .jit_cache import GLOBAL_CACHE, JitCache, mesh_fingerprint
 from .plan import (MixedPlan, ShardedFusedWorkspace, SpmmPlan,
                    build_fused_workspace, build_mixed_plan, build_plan,
-                   build_sharded_workspace)
+                   build_sharded_workspace, choose_merge_width)
 from ..kernels.ops import resolve_interpret, resolve_staging
 
 BACKENDS = ("pallas_ell", "pallas_bcsr", "ref", "dense", "auto")
@@ -153,6 +153,15 @@ def resolve_chip_mesh(mesh: Optional[Mesh],
     return chip_mesh(n_chips)
 
 
+def _record_build(plan_seconds: float, pack_seconds: float) -> None:
+    """Surface host-side plan/pack cost through the dispatch-count
+    plumbing (the Table IV JIT-cost side — ``bench_codegen_overhead``
+    reads these to show the amortization story for the tuned path)."""
+    from ..kernels.ops import record_build_seconds
+    record_build_seconds("plan", plan_seconds)
+    record_build_seconds("pack", pack_seconds)
+
+
 @dataclasses.dataclass
 class _FusedConsts:
     """Device-resident fused-plan constants: ONE descriptor table + flat
@@ -170,6 +179,7 @@ class _FusedConsts:
     blk_coff: Optional[jax.Array] = None  # (B,) int32 into cols_flat
     max_span: int = 0        # staged-DMA slot window (DESIGN.md §7.7)
     max_cspan: int = 0       # staged-DMA cols window
+    merge_width: int = 1     # CGCM width (DESIGN.md §7.9)
 
 
 @dataclasses.dataclass
@@ -201,6 +211,7 @@ class _ShardedConsts:
     x_own_panels: int = 0
     x_send: Optional[jax.Array] = None    # (C, C, T2) int32 local panels
     x_recv: Optional[jax.Array] = None    # (C, T) int32 into (C*T2,)
+    merge_width: int = 1     # CGCM width, global across chips (§7.9)
 
 
 class CompiledSpmm:
@@ -213,6 +224,7 @@ class CompiledSpmm:
                  bk: int = 8, mxu_gain: float = 4.0,
                  staging: Optional[str] = None,
                  x_sharding: Optional[str] = None,
+                 merge_threshold: int = 0,
                  cache: JitCache = GLOBAL_CACHE):
         self.backend = _resolve_backend(
             backend, sharded=mesh is not None or n_chips is not None)
@@ -220,6 +232,7 @@ class CompiledSpmm:
         self.bm = bm
         self.bk = bk
         self.mxu_gain = mxu_gain
+        self.merge_threshold = int(merge_threshold)
         # resolved ONCE: the effective flag is part of the compiled
         # artifact's identity (and of every jit-cache key touching it)
         self.interpret = resolve_interpret(interpret)
@@ -259,7 +272,8 @@ class CompiledSpmm:
                 a.row_ptr, a.col_indices, a.shape, d,
                 n_chips=self.n_chips, strategy=strategy, row_block=bm,
                 fingerprint=a.fingerprint, backend=self.backend,
-                bk=bk, mxu_gain=mxu_gain, x_sharding=self.x_sharding)
+                bk=bk, mxu_gain=mxu_gain, x_sharding=self.x_sharding,
+                merge_threshold=self.merge_threshold)
             self.sharded_workspace = sw
             self._sharded = _ShardedConsts(
                 blk_off=jnp.asarray(sw.blk_off),
@@ -283,7 +297,11 @@ class CompiledSpmm:
                 x_send=None if sw.x_send is None
                 else jnp.asarray(sw.x_send),
                 x_recv=None if sw.x_recv is None
-                else jnp.asarray(sw.x_recv))
+                else jnp.asarray(sw.x_recv),
+                merge_width=sw.merge_width)
+            _record_build(
+                sum(p.plan_seconds for p in sw.shard_plans),
+                sw.pack_seconds)
         elif self.backend == "pallas_bcsr":
             self.mixed_plan = build_mixed_plan(
                 a.row_ptr, a.col_indices, a.shape, d, strategy=strategy,
@@ -297,7 +315,12 @@ class CompiledSpmm:
             self.d_tiling = self.plan.d_tiling
 
         if self._sharded is None and self.backend in FUSED_BACKENDS:
-            ws = build_fused_workspace(self.mixed_plan or self.plan)
+            # merge stage: the CGCM width is a plan-time decision from
+            # the instance's row lengths (DESIGN.md §7.9); 1 = no merge
+            mw = choose_merge_width(a.row_ptr, row_block=bm,
+                                    merge_threshold=self.merge_threshold)
+            ws = build_fused_workspace(self.mixed_plan or self.plan,
+                                       merge_width=mw)
             self._fused = _FusedConsts(
                 blk_off=jnp.asarray(ws.blk_off),
                 blk_L=jnp.asarray(ws.blk_L),
@@ -308,7 +331,11 @@ class CompiledSpmm:
                 blk_tag=jnp.asarray(ws.blk_tag),
                 blk_coff=jnp.asarray(ws.blk_coff),
                 max_span=ws.max_span,
-                max_cspan=ws.max_cspan)
+                max_cspan=ws.max_cspan,
+                merge_width=ws.merge_width)
+            _record_build(
+                (self.mixed_plan or self.plan).plan_seconds,
+                ws.pack_seconds)
         elif self.backend == "ref":
             self._cols = jnp.asarray(a.col_indices)
 
@@ -408,7 +435,8 @@ class CompiledSpmm:
                         if sw.x_sharding == "rows" else x_pad)
                 y_ws = spmm_ell_fused_sharded_op(
                     sw.blk_off, sw.blk_L, sw.cols_flat, vals_flat, xarg,
-                    mesh=sw.mesh, bm=self.bm, interpret=self.interpret,
+                    mesh=sw.mesh, bm=self.bm, mw=sw.merge_width,
+                    interpret=self.interpret,
                     staging=self.staging, span=sw.chip_span,
                     cspan=sw.chip_cspan, x_sharding=sw.x_sharding,
                     x_send=sw.x_send, x_recv=sw.x_recv)
@@ -424,7 +452,7 @@ class CompiledSpmm:
             vals_flat = vals_ext[fw.gather_flat]
             y_ws = spmm_ell_fused_op(
                 fw.blk_off, fw.blk_L, fw.cols_flat, vals_flat, x_pad,
-                bm=self.bm, interpret=self.interpret,
+                bm=self.bm, mw=fw.merge_width, interpret=self.interpret,
                 staging=self.staging, span=fw.max_span,
                 cspan=fw.max_cspan)
             # single inverse-permutation gather replaces N scatters
@@ -447,7 +475,8 @@ class CompiledSpmm:
                 y_ws = spmm_bcsr_fused_sharded_op(
                     sw.blk_tag, sw.blk_off, sw.blk_coff, sw.blk_L,
                     sw.cols_flat, vals_flat, xarg, mesh=sw.mesh,
-                    bm=self.bm, bk=self.bk, interpret=self.interpret,
+                    bm=self.bm, bk=self.bk, mw=sw.merge_width,
+                    interpret=self.interpret,
                     staging=self.staging, span=sw.chip_span,
                     cspan=sw.chip_cspan, x_sharding=sw.x_sharding,
                     x_send=sw.x_send, x_recv=sw.x_recv)
@@ -461,8 +490,9 @@ class CompiledSpmm:
             y_ws = spmm_bcsr_fused_op(
                 fw.blk_tag, fw.blk_off, fw.blk_coff, fw.blk_L,
                 fw.cols_flat, vals_flat, x_pad, bm=self.bm, bk=self.bk,
-                interpret=self.interpret, staging=self.staging,
-                span=fw.max_span, cspan=fw.max_cspan)
+                mw=fw.merge_width, interpret=self.interpret,
+                staging=self.staging, span=fw.max_span,
+                cspan=fw.max_cspan)
             return y_ws[fw.inv_perm, :d]
         raise ValueError(self.backend)
 
@@ -480,13 +510,14 @@ class CompiledSpmm:
             key = ("spmmT", self._fingerprint, self.d, self.strategy,
                    self.backend, self.bm, self.bk, self.mxu_gain,
                    self.interpret, self.staging, self.x_sharding,
-                   mesh_fingerprint(self.mesh))
+                   self.merge_threshold, mesh_fingerprint(self.mesh))
             self._transpose = self.cache.get_or_build(
                 key, lambda: CompiledSpmm(
                     t_struct, self.d, strategy=self.strategy,
                     backend=self.backend, bm=self.bm, bk=self.bk,
                     mxu_gain=self.mxu_gain, interpret=self.interpret,
                     staging=self.staging, x_sharding=self.x_sharding,
+                    merge_threshold=self.merge_threshold,
                     mesh=self.mesh, cache=self.cache))
             self._t_order = jnp.asarray(order.astype(np.int32))
         vals_t = vals[self._t_order]
@@ -503,6 +534,8 @@ def compile_spmm(a: CSRMatrix, d: int, *, strategy: str = "nnz_split",
                  bk: int = 8, mxu_gain: float = 4.0,
                  staging: Optional[str] = None,
                  x_sharding: Optional[str] = None,
+                 merge_threshold: int = 0, autotune: bool = False,
+                 measure=None, candidates=None, top_k: int = 3,
                  cache: JitCache = GLOBAL_CACHE) -> CompiledSpmm:
     """Build (or fetch) the structure-specialized SpMM artifact.
 
@@ -529,7 +562,27 @@ def compile_spmm(a: CSRMatrix, d: int, *, strategy: str = "nnz_split",
     panels each chip's plan touches (exact-panel exchange).
     ``"auto"``/``None`` resolves to ``"rows"`` on a real multi-chip
     mesh and ``"replicated"`` otherwise; the resolved mode is part of
-    the cache key and the two placements are bit-identical."""
+    the cache key and the two placements are bit-identical.
+
+    ``merge_threshold`` drives the CGCM merge stage (DESIGN.md §7.9):
+    0 disables merging (the legacy layout, byte-identical), a positive
+    value lets ``choose_merge_width`` coalesce up to ``MAX_MERGE_WIDTH``
+    short block-rows per descriptor trip when the instance's typical
+    trip count times the merged width stays under it.  Output is
+    bit-identical either way; only grid-step count and DMA windows
+    change.  ``autotune=True`` instead searches strategy × merge ×
+    staging per instance (``core.autotune``, memoized in the same
+    cache) — the explicit knobs then serve as the search's fallback
+    configuration, and ``measure`` / ``candidates`` / ``top_k`` pass
+    through to the search (deterministic tests inject a fake timer)."""
+    if autotune:
+        from .autotune import autotune_spmm
+        return autotune_spmm(a, d, backend=backend, bm=bm, bk=bk,
+                             mxu_gain=mxu_gain, interpret=interpret,
+                             mesh=mesh, n_chips=n_chips, staging=staging,
+                             x_sharding=x_sharding, measure=measure,
+                             candidates=candidates, top_k=top_k,
+                             cache=cache)
     backend = _resolve_backend(
         backend, sharded=mesh is not None or n_chips is not None)
     interpret = resolve_interpret(interpret)
@@ -537,14 +590,17 @@ def compile_spmm(a: CSRMatrix, d: int, *, strategy: str = "nnz_split",
     mesh = resolve_chip_mesh(mesh, n_chips)
     x_sharding = _resolve_x_sharding_for(backend, x_sharding, interpret,
                                          mesh)
+    merge_threshold = int(merge_threshold)
     key = ("spmm", a.fingerprint, d, strategy, backend, bm, bk, mxu_gain,
-           interpret, staging, x_sharding, mesh_fingerprint(mesh))
+           interpret, staging, x_sharding, merge_threshold,
+           mesh_fingerprint(mesh))
     return cache.get_or_build(
         key, lambda: CompiledSpmm(a, d, strategy=strategy, backend=backend,
                                   bm=bm, bk=bk, mxu_gain=mxu_gain,
                                   interpret=interpret, staging=staging,
-                                  x_sharding=x_sharding, mesh=mesh,
-                                  cache=cache))
+                                  x_sharding=x_sharding,
+                                  merge_threshold=merge_threshold,
+                                  mesh=mesh, cache=cache))
 
 
 def spmm(a: CSRMatrix, x, *, strategy: str = "nnz_split",
@@ -554,11 +610,17 @@ def spmm(a: CSRMatrix, x, *, strategy: str = "nnz_split",
          bk: int = 8, mxu_gain: float = 4.0,
          staging: Optional[str] = None,
          x_sharding: Optional[str] = None,
+         merge_threshold: int = 0, autotune: bool = False,
+         measure=None, candidates=None, top_k: int = 3,
          cache: JitCache = GLOBAL_CACHE) -> jax.Array:
     """Y = A·X, specialized to A's structure and x's column count."""
     compiled = compile_spmm(a, x.shape[1], strategy=strategy,
                             backend=backend, bm=bm, interpret=interpret,
                             mesh=mesh, n_chips=n_chips, bk=bk,
                             mxu_gain=mxu_gain, staging=staging,
-                            x_sharding=x_sharding, cache=cache)
+                            x_sharding=x_sharding,
+                            merge_threshold=merge_threshold,
+                            autotune=autotune, measure=measure,
+                            candidates=candidates, top_k=top_k,
+                            cache=cache)
     return compiled(jnp.asarray(a.vals), x)

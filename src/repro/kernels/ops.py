@@ -29,6 +29,18 @@ from .spmm_bcsr_fused import (spmm_bcsr_fused, spmm_bcsr_fused_sharded,
 # reuses the compiled kernel but each op wrapper call is one dispatch)
 DISPATCH_COUNTS: "collections.Counter[str]" = collections.Counter()
 
+# kind -> accumulated host seconds spent building plans/packings (the
+# paper's Table IV JIT-cost side, measurable per phase: "plan" covers
+# build/merge/tag, "pack" the descriptor-table packing, "tune" the
+# autotuner's search loop).  Reset together with DISPATCH_COUNTS.
+BUILD_SECONDS: "collections.Counter[str]" = collections.Counter()
+
+
+def record_build_seconds(kind: str, seconds: float) -> None:
+    """Accumulate host-side build cost under ``kind`` (see
+    :data:`BUILD_SECONDS`)."""
+    BUILD_SECONDS[kind] += float(seconds)
+
 # fused-dispatch operand staging modes (DESIGN.md §7.7):
 #   resident  whole flat slot buffer + X panel live in VMEM — the
 #             interpret-mode default and the bit-identity micro-oracle
@@ -39,6 +51,7 @@ STAGING_MODES = ("resident", "dma")
 
 def reset_dispatch_counts() -> None:
     DISPATCH_COUNTS.clear()
+    BUILD_SECONDS.clear()
 
 
 def default_interpret() -> bool:
@@ -96,25 +109,29 @@ def spmm_ell_segment_op(cols_pad_flat, vals_pad, x, *, bm: int = 8,
 
 
 def spmm_ell_fused_op(blk_off, blk_L, cols_flat, vals_flat, x, *,
-                      bm: int = 8, interpret=None, staging=None,
-                      span: int = 0, cspan: int = 0):
+                      bm: int = 8, mw: int = 1, interpret=None,
+                      staging=None, span: int = 0, cspan: int = 0):
     """ONE dispatch for the whole plan, either staging mode; staged
     launches additionally count under ``ell_fused_dma`` so tests can
-    assert WHICH lowering served a forward."""
+    assert WHICH lowering served a forward, and CGCM-merged launches
+    (``mw > 1``) under ``ell_fused_merged``."""
     interpret = resolve_interpret(interpret)
     staging = _resolve_op_staging(staging, interpret, span, cspan)
     DISPATCH_COUNTS["ell_fused"] += 1
+    if mw > 1:
+        DISPATCH_COUNTS["ell_fused_merged"] += 1
     if staging == "dma":
         DISPATCH_COUNTS["ell_fused_dma"] += 1
         return spmm_ell_fused_staged(blk_off, blk_L, cols_flat, vals_flat,
                                      x, span=span, cspan=cspan, bm=bm,
-                                     interpret=interpret)
+                                     mw=mw, interpret=interpret)
     return spmm_ell_fused(blk_off, blk_L, cols_flat, vals_flat, x,
-                          bm=bm, interpret=interpret)
+                          bm=bm, mw=mw, interpret=interpret)
 
 
 def spmm_ell_fused_sharded_op(blk_off, blk_L, cols_flat, vals_flat, x, *,
-                              mesh, bm: int = 8, interpret=None,
+                              mesh, bm: int = 8, mw: int = 1,
+                              interpret=None,
                               staging=None, span=0, cspan=0,
                               x_sharding: str = "replicated",
                               x_send=None, x_recv=None):
@@ -131,6 +148,8 @@ def spmm_ell_fused_sharded_op(blk_off, blk_L, cols_flat, vals_flat, x, *,
                                   min(cspan))
     DISPATCH_COUNTS["ell_fused"] += mesh.size
     DISPATCH_COUNTS["ell_fused_sharded"] += 1
+    if mw > 1:
+        DISPATCH_COUNTS["ell_fused_merged"] += mesh.size
     if x_sharding == "rows":
         DISPATCH_COUNTS["ell_fused_xshard"] += mesh.size
     if staging == "dma":
@@ -140,7 +159,8 @@ def spmm_ell_fused_sharded_op(blk_off, blk_L, cols_flat, vals_flat, x, *,
                                           # keep them out of the memoized
                                           # shard_map cache key
     return spmm_ell_fused_sharded(blk_off, blk_L, cols_flat, vals_flat, x,
-                                  mesh=mesh, bm=bm, interpret=interpret,
+                                  mesh=mesh, bm=bm, mw=mw,
+                                  interpret=interpret,
                                   staging=staging, span=span, cspan=cspan,
                                   x_sharding=x_sharding, x_send=x_send,
                                   x_recv=x_recv)
@@ -156,27 +176,32 @@ def spmm_bcsr_op(block_cols_pad, block_vals_pad, x, *, kmax: int,
 
 def spmm_bcsr_fused_op(blk_tag, blk_off, blk_coff, blk_L, cols_flat,
                        vals_flat, x, *, bm: int = 8, bk: int = 8,
-                       interpret=None, staging=None, span: int = 0,
-                       cspan: int = 0):
+                       mw: int = 1, interpret=None, staging=None,
+                       span: int = 0, cspan: int = 0):
     """ONE dispatch for a whole mixed VPU/MXU plan (Table IV invariant,
     now covering the MXU block-rows as well); staged launches also
-    count under ``bcsr_fused_dma``."""
+    count under ``bcsr_fused_dma``, CGCM-merged ones under
+    ``bcsr_fused_merged``."""
     interpret = resolve_interpret(interpret)
     staging = _resolve_op_staging(staging, interpret, span, cspan)
     DISPATCH_COUNTS["bcsr_fused"] += 1
+    if mw > 1:
+        DISPATCH_COUNTS["bcsr_fused_merged"] += 1
     if staging == "dma":
         DISPATCH_COUNTS["bcsr_fused_dma"] += 1
         return spmm_bcsr_fused_staged(blk_tag, blk_off, blk_coff, blk_L,
                                       cols_flat, vals_flat, x, span=span,
-                                      cspan=cspan, bm=bm, bk=bk,
+                                      cspan=cspan, bm=bm, bk=bk, mw=mw,
                                       interpret=interpret)
     return spmm_bcsr_fused(blk_tag, blk_off, blk_coff, blk_L, cols_flat,
-                           vals_flat, x, bm=bm, bk=bk, interpret=interpret)
+                           vals_flat, x, bm=bm, bk=bk, mw=mw,
+                           interpret=interpret)
 
 
 def spmm_bcsr_fused_sharded_op(blk_tag, blk_off, blk_coff, blk_L,
                                cols_flat, vals_flat, x, *, mesh,
-                               bm: int = 8, bk: int = 8, interpret=None,
+                               bm: int = 8, bk: int = 8, mw: int = 1,
+                               interpret=None,
                                staging=None, span=0, cspan=0,
                                x_sharding: str = "replicated",
                                x_send=None, x_recv=None):
@@ -192,6 +217,8 @@ def spmm_bcsr_fused_sharded_op(blk_tag, blk_off, blk_coff, blk_L,
                                   min(cspan))
     DISPATCH_COUNTS["bcsr_fused"] += mesh.size
     DISPATCH_COUNTS["bcsr_fused_sharded"] += 1
+    if mw > 1:
+        DISPATCH_COUNTS["bcsr_fused_merged"] += mesh.size
     if x_sharding == "rows":
         DISPATCH_COUNTS["bcsr_fused_xshard"] += mesh.size
     if staging == "dma":
@@ -200,7 +227,8 @@ def spmm_bcsr_fused_sharded_op(blk_tag, blk_off, blk_coff, blk_L,
         span = cspan = (0,) * mesh.size   # resident ignores the windows
     return spmm_bcsr_fused_sharded(blk_tag, blk_off, blk_coff, blk_L,
                                    cols_flat, vals_flat, x, mesh=mesh,
-                                   bm=bm, bk=bk, interpret=interpret,
+                                   bm=bm, bk=bk, mw=mw,
+                                   interpret=interpret,
                                    staging=staging, span=span, cspan=cspan,
                                    x_sharding=x_sharding, x_send=x_send,
                                    x_recv=x_recv)

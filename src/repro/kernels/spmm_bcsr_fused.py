@@ -61,168 +61,190 @@ from .spmm_ell_fused import _chip_windows, _staged_dispatch
 
 
 def _kernel(tag_ref, off_ref, coff_ref, L_ref, cols_ref, vals_ref, x_ref,
-            y_ref, *, bm: int, bk: int, dt: int):
-    b = pl.program_id(0)
-    tag = tag_ref[b]                                 # execution unit (SMEM)
-    off = off_ref[b]                                 # first value slot
-    coff = coff_ref[b]                               # first column entry
-    L = L_ref[b]                                     # this block's trips
+            y_ref, *, bm: int, bk: int, dt: int, mw: int = 1):
+    g = pl.program_id(0)
 
-    def vpu_block():
-        # bm independent gather+FMA chains (static unroll == ILP)
-        def nnz_step(nz, acc):
-            xs, vs = [], []
-            for rr in range(bm):
-                s = off + rr * L + nz
-                k = cols_ref[coff + rr * L + nz]     # SMEM scalar read
-                xs.append(x_ref[pl.ds(k, 1), :])     # (1, dt) CCM row
-                vs.append(vals_ref[pl.ds(s, 1)])     # (1,) slot value
-            xg = jnp.concatenate(xs, axis=0)         # (bm, dt)
-            v = jnp.concatenate(vs, axis=0)          # (bm,)
-            return acc + (v[:, None].astype(jnp.float32)
-                          * xg.astype(jnp.float32))
-        return jax.lax.fori_loop(0, L, nnz_step,
-                                 jnp.zeros((bm, dt), jnp.float32))
+    def sub_block(tag, off, coff, L):
+        # one member descriptor of the merged trip (CGCM, DESIGN.md
+        # §7.9): its own tag dispatch and its own (bm, dt) accumulator,
+        # so per-row accumulation order matches the unmerged kernel
+        # bit-for-bit.
+        def vpu_block():
+            # bm independent gather+FMA chains (static unroll == ILP)
+            def nnz_step(nz, acc):
+                xs, vs = [], []
+                for rr in range(bm):
+                    s = off + rr * L + nz
+                    k = cols_ref[coff + rr * L + nz]  # SMEM scalar read
+                    xs.append(x_ref[pl.ds(k, 1), :])  # (1, dt) CCM row
+                    vs.append(vals_ref[pl.ds(s, 1)])  # (1,) slot value
+                xg = jnp.concatenate(xs, axis=0)      # (bm, dt)
+                v = jnp.concatenate(vs, axis=0)       # (bm,)
+                return acc + (v[:, None].astype(jnp.float32)
+                              * xg.astype(jnp.float32))
+            return jax.lax.fori_loop(0, L, nnz_step,
+                                     jnp.zeros((bm, dt), jnp.float32))
 
-    def mxu_block():
-        # K (bm x bk)·(bk x dt) matmuls, block-column prefetched
-        def blk_step(k, acc):
-            bc = cols_ref[coff + k]                  # block-column (SMEM)
-            a = vals_ref[pl.ds(off + k * (bm * bk), bm * bk)]
-            xp = x_ref[pl.ds(bc * bk, bk), :]        # (bk, dt) X panel
-            return acc + jnp.dot(
-                a.reshape(bm, bk).astype(jnp.float32),
-                xp.astype(jnp.float32),
-                preferred_element_type=jnp.float32)
-        return jax.lax.fori_loop(0, L, blk_step,
-                                 jnp.zeros((bm, dt), jnp.float32))
+        def mxu_block():
+            # K (bm x bk)·(bk x dt) matmuls, block-column prefetched
+            def blk_step(k, acc):
+                bc = cols_ref[coff + k]              # block-column (SMEM)
+                a = vals_ref[pl.ds(off + k * (bm * bk), bm * bk)]
+                xp = x_ref[pl.ds(bc * bk, bk), :]    # (bk, dt) X panel
+                return acc + jnp.dot(
+                    a.reshape(bm, bk).astype(jnp.float32),
+                    xp.astype(jnp.float32),
+                    preferred_element_type=jnp.float32)
+            return jax.lax.fori_loop(0, L, blk_step,
+                                     jnp.zeros((bm, dt), jnp.float32))
 
-    acc = jax.lax.cond(tag == 0, vpu_block, mxu_block)
-    y_ref[...] = acc.astype(y_ref.dtype)             # one store per block
+        return jax.lax.cond(tag == 0, vpu_block, mxu_block)
+
+    accs = [sub_block(tag_ref[g * mw + w], off_ref[g * mw + w],
+                      coff_ref[g * mw + w], L_ref[g * mw + w])
+            for w in range(mw)]
+    acc = accs[0] if mw == 1 else jnp.concatenate(accs, axis=0)
+    y_ref[...] = acc.astype(y_ref.dtype)             # one store per trip
 
 
 def _staged_kernel(tag_ref, off_ref, coff_ref, L_ref, cols_ref, vals_ref,
                    x_ref, y_ref, cbuf, vbuf, xgbuf, xpbuf, csem, vsem,
                    xgsem, xpsem, *, bm: int, bk: int, dt: int,
-                   span: int, cspan: int):
+                   span: int, cspan: int, mw: int = 1):
     """Double-buffered twin of :func:`_kernel` (DESIGN.md §7.7).
 
-    Block-level staging is tag-independent: whatever unit block ``b+1``
-    drives, its slot/column panels are the fixed windows ``[off, off +
-    span)`` / ``[coff, coff + cspan)``, started at block ``b``'s first
-    d-tile and waited at ``b+1``'s.  X staging is per-trip and
+    Panel staging is per MERGED trip (DESIGN.md §7.9): whatever units
+    trip ``g+1``'s ``mw`` member blocks drive, its slot/column panels
+    are the fixed windows ``[off, off + span)`` / ``[coff, coff +
+    cspan)`` anchored at the trip's FIRST member descriptor — both
+    streams are contiguous across members, so one window covers them
+    all.  Members index the staged panels through trip-local bases
+    (``off_ref[g*mw+w] - off_ref[g*mw]``).  X staging is per-trip and
     per-branch: each trip's X operand (bm gathered rows on the VPU, one
     (bk, dt) block-column panel on the MXU) is prefetched while the
-    previous trip computes.  Every DMA is started exactly once and
-    waited exactly once, all within the branch that issued it.
+    previous trip computes; member sub-blocks run sequentially, so the
+    two-deep X rings are reused safely across them.  Every DMA is
+    started exactly once and waited exactly once, all within the branch
+    that issued it.
     """
-    b = pl.program_id(0)
+    g = pl.program_id(0)
     j = pl.program_id(1)
-    nb = pl.num_programs(0)
+    ng = pl.num_programs(0)
 
-    def panel_dmas(slot, blk):
+    def panel_dmas(slot, grp):
         return (
             pltpu.make_async_copy(
-                cols_ref.at[pl.ds(coff_ref[blk], cspan)],
+                cols_ref.at[pl.ds(coff_ref[grp * mw], cspan)],
                 cbuf.at[slot], csem.at[slot]),
             pltpu.make_async_copy(
-                vals_ref.at[pl.ds(off_ref[blk], span)],
+                vals_ref.at[pl.ds(off_ref[grp * mw], span)],
                 vbuf.at[slot], vsem.at[slot]),
         )
 
-    @pl.when((b == 0) & (j == 0))
+    @pl.when((g == 0) & (j == 0))
     def _warmup():
         for dma in panel_dmas(0, 0):
             dma.start()
 
-    @pl.when((j == 0) & (b + 1 < nb))
+    @pl.when((j == 0) & (g + 1 < ng))
     def _prefetch_next():
-        for dma in panel_dmas((b + 1) % 2, b + 1):
+        for dma in panel_dmas((g + 1) % 2, g + 1):
             dma.start()
 
     @pl.when(j == 0)
     def _arrive():
-        for dma in panel_dmas(b % 2, b):
+        for dma in panel_dmas(g % 2, g):
             dma.wait()
 
-    slot = b % 2
-    tag = tag_ref[b]
-    L = L_ref[b]
+    slot = g % 2
 
-    def vpu_block():
-        # the gather itself moves to the DMA engine: trip nz+1's bm X
-        # rows stream into the alternate (bm, dt) buffer while trip
-        # nz's FMA runs — the "exactly the operands it needs" form of
-        # the paper's register-level claim
-        def row_dma(ts, rr, nz):
-            k = cbuf[slot, rr * L + nz]
-            return pltpu.make_async_copy(
-                x_ref.at[pl.ds(k, 1), pl.ds(j * dt, dt)],
-                xgbuf.at[ts, pl.ds(rr, 1)], xgsem.at[ts, rr])
+    def sub_block(tag, loff, lcoff, L):
+        # ``loff``/``lcoff`` are the member's panel-local stream bases
+        # (0 for the trip's first member).
 
-        def start_trip(ts, nz):
-            for rr in range(bm):
-                row_dma(ts, rr, nz).start()
+        def vpu_block():
+            # the gather itself moves to the DMA engine: trip nz+1's bm
+            # X rows stream into the alternate (bm, dt) buffer while
+            # trip nz's FMA runs — the "exactly the operands it needs"
+            # form of the paper's register-level claim
+            def row_dma(ts, rr, nz):
+                k = cbuf[slot, lcoff + rr * L + nz]
+                return pltpu.make_async_copy(
+                    x_ref.at[pl.ds(k, 1), pl.ds(j * dt, dt)],
+                    xgbuf.at[ts, pl.ds(rr, 1)], xgsem.at[ts, rr])
 
-        @pl.when(L > 0)
-        def _():
-            start_trip(0, 0)
+            def start_trip(ts, nz):
+                for rr in range(bm):
+                    row_dma(ts, rr, nz).start()
 
-        def nnz_step(nz, acc):
-            ts = nz % 2
-
-            @pl.when(nz + 1 < L)
+            @pl.when(L > 0)
             def _():
-                start_trip((nz + 1) % 2, nz + 1)
+                start_trip(0, 0)
 
-            for rr in range(bm):
-                row_dma(ts, rr, nz).wait()
-            vs = [vbuf[slot, pl.ds(rr * L + nz, 1)] for rr in range(bm)]
-            v = jnp.concatenate(vs, axis=0)          # (bm,)
-            return acc + (v[:, None].astype(jnp.float32)
-                          * xgbuf[ts].astype(jnp.float32))
-        return jax.lax.fori_loop(0, L, nnz_step,
-                                 jnp.zeros((bm, dt), jnp.float32))
+            def nnz_step(nz, acc):
+                ts = nz % 2
 
-    def mxu_block():
-        # bcols-driven (bk, dt) X panel DMA — the pre-fusion kernel's
-        # BlockSpec index_map, now explicit and double-buffered
-        def panel_dma(ts, k):
-            bc = cbuf[slot, k]
-            return pltpu.make_async_copy(
-                x_ref.at[pl.ds(bc * bk, bk), pl.ds(j * dt, dt)],
-                xpbuf.at[ts], xpsem.at[ts])
+                @pl.when(nz + 1 < L)
+                def _():
+                    start_trip((nz + 1) % 2, nz + 1)
 
-        @pl.when(L > 0)
-        def _():
-            panel_dma(0, 0).start()
+                for rr in range(bm):
+                    row_dma(ts, rr, nz).wait()
+                vs = [vbuf[slot, pl.ds(loff + rr * L + nz, 1)]
+                      for rr in range(bm)]
+                v = jnp.concatenate(vs, axis=0)      # (bm,)
+                return acc + (v[:, None].astype(jnp.float32)
+                              * xgbuf[ts].astype(jnp.float32))
+            return jax.lax.fori_loop(0, L, nnz_step,
+                                     jnp.zeros((bm, dt), jnp.float32))
 
-        def blk_step(k, acc):
-            ts = k % 2
+        def mxu_block():
+            # bcols-driven (bk, dt) X panel DMA — the pre-fusion
+            # kernel's BlockSpec index_map, now explicit and
+            # double-buffered
+            def panel_dma(ts, k):
+                bc = cbuf[slot, lcoff + k]
+                return pltpu.make_async_copy(
+                    x_ref.at[pl.ds(bc * bk, bk), pl.ds(j * dt, dt)],
+                    xpbuf.at[ts], xpsem.at[ts])
 
-            @pl.when(k + 1 < L)
+            @pl.when(L > 0)
             def _():
-                panel_dma((k + 1) % 2, k + 1).start()
+                panel_dma(0, 0).start()
 
-            panel_dma(ts, k).wait()
-            a = vbuf[slot, pl.ds(k * (bm * bk), bm * bk)]
-            return acc + jnp.dot(
-                a.reshape(bm, bk).astype(jnp.float32),
-                xpbuf[ts].astype(jnp.float32),
-                preferred_element_type=jnp.float32)
-        return jax.lax.fori_loop(0, L, blk_step,
-                                 jnp.zeros((bm, dt), jnp.float32))
+            def blk_step(k, acc):
+                ts = k % 2
 
-    acc = jax.lax.cond(tag == 0, vpu_block, mxu_block)
-    y_ref[...] = acc.astype(y_ref.dtype)             # one store per block
+                @pl.when(k + 1 < L)
+                def _():
+                    panel_dma((k + 1) % 2, k + 1).start()
+
+                panel_dma(ts, k).wait()
+                a = vbuf[slot, pl.ds(loff + k * (bm * bk), bm * bk)]
+                return acc + jnp.dot(
+                    a.reshape(bm, bk).astype(jnp.float32),
+                    xpbuf[ts].astype(jnp.float32),
+                    preferred_element_type=jnp.float32)
+            return jax.lax.fori_loop(0, L, blk_step,
+                                     jnp.zeros((bm, dt), jnp.float32))
+
+        return jax.lax.cond(tag == 0, vpu_block, mxu_block)
+
+    accs = [sub_block(tag_ref[g * mw + w],
+                      0 if mw == 1 else off_ref[g * mw + w] - off_ref[g * mw],
+                      0 if mw == 1 else coff_ref[g * mw + w] - coff_ref[g * mw],
+                      L_ref[g * mw + w])
+            for w in range(mw)]
+    acc = accs[0] if mw == 1 else jnp.concatenate(accs, axis=0)
+    y_ref[...] = acc.astype(y_ref.dtype)             # one store per trip
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bk", "interpret"))
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "mw", "interpret"))
 def spmm_bcsr_fused(blk_tag: jax.Array, blk_off: jax.Array,
                     blk_coff: jax.Array, blk_L: jax.Array,
                     cols_flat: jax.Array, vals_flat: jax.Array,
                     x: jax.Array, *, bm: int = 8, bk: int = 8,
-                    interpret: bool = True) -> jax.Array:
+                    mw: int = 1, interpret: bool = True) -> jax.Array:
     """Compute the WHOLE mixed plan: Y_ws (ws_rows, d_pad) = plan · X.
 
     blk_tag   : (B,) int32 — 0 = VPU ELL block, 1 = MXU block-row
@@ -233,6 +255,9 @@ def spmm_bcsr_fused(blk_tag: jax.Array, blk_off: jax.Array,
     vals_flat : (S,) float — slot values; MXU panels flattened (K,bm,bk)
     x         : (n_pad, d_pad) float — rows padded to a bk multiple,
                 columns to the lane tile
+    mw        : CGCM merge width (DESIGN.md §7.9) — each grid step
+                processes ``mw`` consecutive descriptors into one
+                (mw*bm, dt) output trip; ``B`` must be a multiple.
 
     Returns workspace-ordered rows; the caller applies the plan's
     ``inv_perm`` gather to recover output row order.
@@ -240,24 +265,26 @@ def spmm_bcsr_fused(blk_tag: jax.Array, blk_off: jax.Array,
     from ..core.ccm import kernel_lane_tile  # lazy: core imports kernels
 
     num_blocks = blk_tag.shape[0]
+    assert num_blocks % mw == 0, (num_blocks, mw)
     (S,) = vals_flat.shape
     n_pad, d_pad = x.shape
     dt = kernel_lane_tile(d_pad)
-    grid = (num_blocks, d_pad // dt)
+    grid = (num_blocks // mw, d_pad // dt)
 
     return pl.pallas_call(
-        functools.partial(_kernel, bm=bm, bk=bk, dt=dt),
+        functools.partial(_kernel, bm=bm, bk=bk, dt=dt, mw=mw),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=5,
             grid=grid,
             in_specs=[
                 pl.BlockSpec((S,),
-                             lambda b, j, tag, off, coff, L, cols: (0,)),
+                             lambda g, j, tag, off, coff, L, cols: (0,)),
                 pl.BlockSpec((n_pad, dt),
-                             lambda b, j, tag, off, coff, L, cols: (0, j)),
+                             lambda g, j, tag, off, coff, L, cols: (0, j)),
             ],
             out_specs=pl.BlockSpec(
-                (bm, dt), lambda b, j, tag, off, coff, L, cols: (b, j)),
+                (mw * bm, dt),
+                lambda g, j, tag, off, coff, L, cols: (g, j)),
         ),
         out_shape=jax.ShapeDtypeStruct((num_blocks * bm, d_pad),
                                        jnp.float32),
@@ -266,32 +293,35 @@ def spmm_bcsr_fused(blk_tag: jax.Array, blk_off: jax.Array,
 
 
 @functools.partial(
-    jax.jit, static_argnames=("bm", "bk", "span", "cspan", "interpret"))
+    jax.jit,
+    static_argnames=("bm", "bk", "mw", "span", "cspan", "interpret"))
 def spmm_bcsr_fused_staged(blk_tag: jax.Array, blk_off: jax.Array,
                            blk_coff: jax.Array, blk_L: jax.Array,
                            cols_flat: jax.Array, vals_flat: jax.Array,
                            x: jax.Array, *, span: int, cspan: int,
-                           bm: int = 8, bk: int = 8,
+                           bm: int = 8, bk: int = 8, mw: int = 1,
                            interpret: bool = True) -> jax.Array:
     """The DMA-staged mixed dispatch (DESIGN.md §7.7) — same contract
     as :func:`spmm_bcsr_fused` and BIT-identical output.
 
     ``span``/``cspan`` are the workspace's ``max_span``/``max_cspan``
-    DMA windows.  All three streams leave VMEM residency: slot/column
-    panels double-buffer per block, X per trip ((bk, dt) panels on MXU
+    DMA windows — per MERGED trip when ``mw > 1`` (DESIGN.md §7.9).
+    All three streams leave VMEM residency: slot/column panels
+    double-buffer per merged trip, X per trip ((bk, dt) panels on MXU
     trips, bm row gathers on VPU trips) — resident VMEM is two panels
     per stream regardless of nnz or ``n``.
     """
     from ..core.ccm import kernel_lane_tile  # lazy: core imports kernels
 
     num_blocks = blk_tag.shape[0]
+    assert num_blocks % mw == 0, (num_blocks, mw)
     n_pad, d_pad = x.shape
     dt = kernel_lane_tile(d_pad)
-    grid = (num_blocks, d_pad // dt)
+    grid = (num_blocks // mw, d_pad // dt)
 
     return pl.pallas_call(
         functools.partial(_staged_kernel, bm=bm, bk=bk, dt=dt, span=span,
-                          cspan=cspan),
+                          cspan=cspan, mw=mw),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=4,
             grid=grid,
@@ -301,8 +331,8 @@ def spmm_bcsr_fused_staged(blk_tag: jax.Array, blk_off: jax.Array,
                 pl.BlockSpec(memory_space=pltpu.ANY),     # X     (HBM)
             ],
             out_specs=pl.BlockSpec(
-                (bm, dt),
-                lambda b, j, tag, off, coff, L: (b, j)),
+                (mw * bm, dt),
+                lambda g, j, tag, off, coff, L: (g, j)),
             scratch_shapes=[
                 pltpu.SMEM((2, cspan), jnp.int32),        # cols panels
                 pltpu.VMEM((2, span), jnp.float32),       # value panels
@@ -324,7 +354,8 @@ def spmm_bcsr_fused_sharded(blk_tag: jax.Array, blk_off: jax.Array,
                             blk_coff: jax.Array, blk_L: jax.Array,
                             cols_flat: jax.Array, vals_flat: jax.Array,
                             x: jax.Array, *, mesh, bm: int = 8,
-                            bk: int = 8, interpret: bool = True,
+                            bk: int = 8, mw: int = 1,
+                            interpret: bool = True,
                             staging: str = "resident", span=0,
                             cspan=0, x_sharding: str = "replicated",
                             x_send=None, x_recv=None) -> jax.Array:
@@ -348,7 +379,8 @@ def spmm_bcsr_fused_sharded(blk_tag: jax.Array, blk_off: jax.Array,
     """
     fn = _sharded_callable(mesh, bm, bk, interpret, staging,
                            _chip_windows(span, mesh.size),
-                           _chip_windows(cspan, mesh.size), x_sharding)
+                           _chip_windows(cspan, mesh.size), x_sharding,
+                           mw)
     if x_sharding == "rows":
         return fn(blk_tag, blk_off, blk_coff, blk_L, cols_flat,
                   vals_flat, x, x_send, x_recv)
@@ -359,10 +391,10 @@ def spmm_bcsr_fused_sharded(blk_tag: jax.Array, blk_off: jax.Array,
 def _sharded_callable(mesh, bm: int, bk: int, interpret: bool,
                       staging: str = "resident", spans: tuple = (0,),
                       cspans: tuple = (0,),
-                      x_sharding: str = "replicated"):
+                      x_sharding: str = "replicated", mw: int = 1):
     """jit-wrapped shard_map closure, memoized per (mesh, bm, bk,
-    interpret, staging, spans, cspans, x_sharding) — same lifecycle as
-    the ELL twin; evicted by ``core.jit_cache.clear_global_cache``."""
+    interpret, staging, spans, cspans, x_sharding, mw) — same lifecycle
+    as the ELL twin; evicted by ``core.jit_cache.clear_global_cache``."""
     from ..distributed.collectives import exact_panel_exchange
 
     (axis,) = mesh.axis_names
@@ -370,11 +402,11 @@ def _sharded_callable(mesh, bm: int, bk: int, interpret: bool,
     if staging == "dma":
         def call(sp, cs):
             return functools.partial(spmm_bcsr_fused_staged, span=sp,
-                                     cspan=cs, bm=bm, bk=bk,
+                                     cspan=cs, bm=bm, bk=bk, mw=mw,
                                      interpret=interpret)
         kernel = _staged_dispatch(axis, spans, cspans, call)
     else:
-        kernel = functools.partial(spmm_bcsr_fused, bm=bm, bk=bk,
+        kernel = functools.partial(spmm_bcsr_fused, bm=bm, bk=bk, mw=mw,
                                    interpret=interpret)
 
     shard = P(axis)

@@ -65,47 +65,59 @@ except ImportError:                    # jax 0.4/0.5
 
 
 def _kernel(off_ref, L_ref, cols_ref, vals_ref, x_ref, y_ref, *,
-            bm: int, dt: int):
-    b = pl.program_id(0)
-    off = off_ref[b]                                 # first slot (SMEM)
-    L = L_ref[b]                                     # this block's nnz/row
+            bm: int, dt: int, mw: int = 1):
+    """One grid step = one merged trip of ``mw`` consecutive block-row
+    descriptors (CGCM, DESIGN.md §7.9; ``mw == 1`` is the classic
+    one-block step).  The sub-blocks unroll statically — each keeps its
+    own descriptor, trip loop, and (bm, dt) accumulator slice, so every
+    row still reduces its lanes separately in-register and the result
+    is bit-identical to the unmerged grid."""
+    g = pl.program_id(0)
 
-    def nnz_step(nz, acc):
-        # bm independent gather+FMA chains (static unroll == ILP)
-        xs, vs = [], []
-        for rr in range(bm):
-            s = off + rr * L + nz
-            k = cols_ref[s]                          # SMEM scalar read
-            xs.append(x_ref[pl.ds(k, 1), :])         # (1, dt) CCM row
-            vs.append(vals_ref[pl.ds(s, 1)])         # (1,) slot value
-        xg = jnp.concatenate(xs, axis=0)             # (bm, dt)
-        v = jnp.concatenate(vs, axis=0)              # (bm,)
-        return acc + v[:, None].astype(jnp.float32) * xg.astype(jnp.float32)
+    def sub_block(off, L):
+        def nnz_step(nz, acc):
+            # bm independent gather+FMA chains (static unroll == ILP)
+            xs, vs = [], []
+            for rr in range(bm):
+                s = off + rr * L + nz
+                k = cols_ref[s]                      # SMEM scalar read
+                xs.append(x_ref[pl.ds(k, 1), :])     # (1, dt) CCM row
+                vs.append(vals_ref[pl.ds(s, 1)])     # (1,) slot value
+            xg = jnp.concatenate(xs, axis=0)         # (bm, dt)
+            v = jnp.concatenate(vs, axis=0)          # (bm,)
+            return acc + (v[:, None].astype(jnp.float32)
+                          * xg.astype(jnp.float32))
+        acc = jnp.zeros((bm, dt), dtype=jnp.float32)  # vxorps analogue
+        return jax.lax.fori_loop(0, L, nnz_step, acc)  # structure trips
 
-    acc = jnp.zeros((bm, dt), dtype=jnp.float32)     # vxorps analogue
-    acc = jax.lax.fori_loop(0, L, nnz_step, acc)     # structure-bound trips
-    y_ref[...] = acc.astype(y_ref.dtype)             # one store per block
+    accs = [sub_block(off_ref[g * mw + w], L_ref[g * mw + w])
+            for w in range(mw)]
+    acc = accs[0] if mw == 1 else jnp.concatenate(accs, axis=0)
+    y_ref[...] = acc.astype(y_ref.dtype)             # one store per step
 
 
 def _staged_kernel(off_ref, L_ref, cols_ref, vals_ref, x_ref, y_ref,
                    cbuf, vbuf, csem, vsem, *, bm: int, dt: int,
-                   span: int, cspan: int):
+                   span: int, cspan: int, mw: int = 1):
     """Double-buffered twin of :func:`_kernel` (DESIGN.md §7.7).
 
-    ``cols_ref``/``vals_ref`` live in HBM; each block's panel is the
-    fixed window ``[off, off + span)`` (the planner tail-pads the flat
-    streams so it is always in bounds).  Panels for block ``b + 1``
-    start copying into the alternate buffer while block ``b`` computes;
-    the descriptor stream itself stays scalar-prefetched.  Each DMA is
-    started exactly once (at the block's first d-tile) and waited
-    exactly once (at the consumer block's first d-tile).
+    ``cols_ref``/``vals_ref`` live in HBM; each merged trip's panel is
+    the fixed window ``[off, off + span)`` starting at the trip's FIRST
+    descriptor (the planner sizes ``span`` to the merged extent and
+    tail-pads the flat streams so it is always in bounds — the member
+    blocks' slots are contiguous, so one copy covers all ``mw``
+    sub-blocks).  Panels for trip ``g + 1`` start copying into the
+    alternate buffer while trip ``g`` computes; the descriptor stream
+    itself stays scalar-prefetched.  Each DMA is started exactly once
+    (at the trip's first d-tile) and waited exactly once (at the
+    consumer trip's first d-tile).
     """
-    b = pl.program_id(0)
+    g = pl.program_id(0)
     j = pl.program_id(1)
-    nb = pl.num_programs(0)
+    ng = pl.num_programs(0)
 
-    def panel_dmas(slot, blk):
-        off = off_ref[blk]
+    def panel_dmas(slot, grp):
+        off = off_ref[grp * mw]
         return (
             pltpu.make_async_copy(cols_ref.at[pl.ds(off, cspan)],
                                   cbuf.at[slot], csem.at[slot]),
@@ -113,47 +125,55 @@ def _staged_kernel(off_ref, L_ref, cols_ref, vals_ref, x_ref, y_ref,
                                   vbuf.at[slot], vsem.at[slot]),
         )
 
-    @pl.when((b == 0) & (j == 0))
+    @pl.when((g == 0) & (j == 0))
     def _warmup():
         for dma in panel_dmas(0, 0):
             dma.start()
 
-    @pl.when((j == 0) & (b + 1 < nb))
+    @pl.when((j == 0) & (g + 1 < ng))
     def _prefetch_next():
-        for dma in panel_dmas((b + 1) % 2, b + 1):
+        for dma in panel_dmas((g + 1) % 2, g + 1):
             dma.start()
 
     @pl.when(j == 0)
     def _arrive():
-        for dma in panel_dmas(b % 2, b):
+        for dma in panel_dmas(g % 2, g):
             dma.wait()
 
-    slot = b % 2
-    L = L_ref[b]
+    slot = g % 2
 
-    def nnz_step(nz, acc):
-        # identical accumulation order to the resident kernel — the
-        # staged path must stay BIT-identical, only the operand source
-        # moves from a resident flat buffer to the staged panel
-        xs, vs = [], []
-        for rr in range(bm):
-            s = rr * L + nz                          # panel-local slot
-            k = cbuf[slot, s]                        # SMEM scalar read
-            xs.append(x_ref[pl.ds(k, 1), :])         # (1, dt) CCM row
-            vs.append(vbuf[slot, pl.ds(s, 1)])       # (1,) slot value
-        xg = jnp.concatenate(xs, axis=0)             # (bm, dt)
-        v = jnp.concatenate(vs, axis=0)              # (bm,)
-        return acc + v[:, None].astype(jnp.float32) * xg.astype(jnp.float32)
+    def sub_block(base, L):
+        def nnz_step(nz, acc):
+            # identical accumulation order to the resident kernel — the
+            # staged path must stay BIT-identical, only the operand
+            # source moves from a resident flat buffer to the panel
+            xs, vs = [], []
+            for rr in range(bm):
+                s = base + rr * L + nz               # panel-local slot
+                k = cbuf[slot, s]                    # SMEM scalar read
+                xs.append(x_ref[pl.ds(k, 1), :])     # (1, dt) CCM row
+                vs.append(vbuf[slot, pl.ds(s, 1)])   # (1,) slot value
+            xg = jnp.concatenate(xs, axis=0)         # (bm, dt)
+            v = jnp.concatenate(vs, axis=0)          # (bm,)
+            return acc + (v[:, None].astype(jnp.float32)
+                          * xg.astype(jnp.float32))
+        return jax.lax.fori_loop(0, L, nnz_step,
+                                 jnp.zeros((bm, dt), jnp.float32))
 
-    acc = jnp.zeros((bm, dt), dtype=jnp.float32)
-    acc = jax.lax.fori_loop(0, L, nnz_step, acc)
+    # sub-block w's slots sit at its descriptor's offset relative to the
+    # trip's window start (0 when unmerged — no extra scalar math)
+    accs = [sub_block(0 if mw == 1
+                      else off_ref[g * mw + w] - off_ref[g * mw],
+                      L_ref[g * mw + w])
+            for w in range(mw)]
+    acc = accs[0] if mw == 1 else jnp.concatenate(accs, axis=0)
     y_ref[...] = acc.astype(y_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+@functools.partial(jax.jit, static_argnames=("bm", "mw", "interpret"))
 def spmm_ell_fused(blk_off: jax.Array, blk_L: jax.Array,
                    cols_flat: jax.Array, vals_flat: jax.Array,
-                   x: jax.Array, *, bm: int = 8,
+                   x: jax.Array, *, bm: int = 8, mw: int = 1,
                    interpret: bool = True) -> jax.Array:
     """Compute ALL plan segments: Y_ws (ws_rows, d_pad) = plan · X.
 
@@ -162,6 +182,8 @@ def spmm_ell_fused(blk_off: jax.Array, blk_L: jax.Array,
     cols_flat : (S,) int32 — slot -> X row, scalar-prefetched structure
     vals_flat : (S,) float — slot values, zero on padding slots
     x         : (n, d_pad) float — d already padded to the lane tile
+    mw        : CGCM merge width (DESIGN.md §7.9) — descriptors per
+                grid step; the planner pads B to a multiple of it
 
     Returns workspace-ordered rows; the caller applies the plan's
     ``inv_perm`` gather to recover output row order.
@@ -169,22 +191,23 @@ def spmm_ell_fused(blk_off: jax.Array, blk_L: jax.Array,
     from ..core.ccm import kernel_lane_tile  # lazy: core imports kernels
 
     num_blocks = blk_off.shape[0]
+    assert num_blocks % mw == 0, (num_blocks, mw)
     (S,) = vals_flat.shape
     n, d_pad = x.shape
     dt = kernel_lane_tile(d_pad)
-    grid = (num_blocks, d_pad // dt)
+    grid = (num_blocks // mw, d_pad // dt)
 
     return pl.pallas_call(
-        functools.partial(_kernel, bm=bm, dt=dt),
+        functools.partial(_kernel, bm=bm, dt=dt, mw=mw),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=3,
             grid=grid,
             in_specs=[
-                pl.BlockSpec((S, ), lambda b, j, off, L, cols: (0,)),
-                pl.BlockSpec((n, dt), lambda b, j, off, L, cols: (0, j)),
+                pl.BlockSpec((S, ), lambda g, j, off, L, cols: (0,)),
+                pl.BlockSpec((n, dt), lambda g, j, off, L, cols: (0, j)),
             ],
-            out_specs=pl.BlockSpec((bm, dt),
-                                   lambda b, j, off, L, cols: (b, j)),
+            out_specs=pl.BlockSpec((mw * bm, dt),
+                                   lambda g, j, off, L, cols: (g, j)),
         ),
         out_shape=jax.ShapeDtypeStruct((num_blocks * bm, d_pad),
                                        jnp.float32),
@@ -192,42 +215,44 @@ def spmm_ell_fused(blk_off: jax.Array, blk_L: jax.Array,
     )(blk_off, blk_L, cols_flat, vals_flat, x)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("bm", "span", "cspan", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("bm", "mw", "span", "cspan", "interpret"))
 def spmm_ell_fused_staged(blk_off: jax.Array, blk_L: jax.Array,
                           cols_flat: jax.Array, vals_flat: jax.Array,
                           x: jax.Array, *, span: int, cspan: int,
-                          bm: int = 8, interpret: bool = True
-                          ) -> jax.Array:
+                          bm: int = 8, mw: int = 1,
+                          interpret: bool = True) -> jax.Array:
     """The DMA-staged fused dispatch (DESIGN.md §7.7) — same contract as
     :func:`spmm_ell_fused` and BIT-identical output.
 
     ``span``/``cspan`` are the workspace's ``max_span``/``max_cspan``:
-    the static per-block DMA window over the slot/column streams.  The
-    streams keep ``memory_space=ANY`` (HBM on TPU) and only two
-    ``span``-slot panels are resident per buffer — the production
-    answer to the resident path's whole-flat-buffer VMEM footprint.
+    the static per-merged-trip DMA window over the slot/column streams
+    (per block when ``mw == 1``).  The streams keep
+    ``memory_space=ANY`` (HBM on TPU) and only two ``span``-slot panels
+    are resident per buffer — the production answer to the resident
+    path's whole-flat-buffer VMEM footprint.
     """
     from ..core.ccm import kernel_lane_tile  # lazy: core imports kernels
 
     num_blocks = blk_off.shape[0]
+    assert num_blocks % mw == 0, (num_blocks, mw)
     n, d_pad = x.shape
     dt = kernel_lane_tile(d_pad)
-    grid = (num_blocks, d_pad // dt)
+    grid = (num_blocks // mw, d_pad // dt)
 
     return pl.pallas_call(
         functools.partial(_staged_kernel, bm=bm, dt=dt, span=span,
-                          cspan=cspan),
+                          cspan=cspan, mw=mw),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2,
             grid=grid,
             in_specs=[
                 pl.BlockSpec(memory_space=pltpu.ANY),     # cols (HBM)
                 pl.BlockSpec(memory_space=pltpu.ANY),     # vals (HBM)
-                pl.BlockSpec((n, dt), lambda b, j, off, L: (0, j)),
+                pl.BlockSpec((n, dt), lambda g, j, off, L: (0, j)),
             ],
-            out_specs=pl.BlockSpec((bm, dt),
-                                   lambda b, j, off, L: (b, j)),
+            out_specs=pl.BlockSpec((mw * bm, dt),
+                                   lambda g, j, off, L: (g, j)),
             scratch_shapes=[
                 pltpu.SMEM((2, cspan), jnp.int32),        # cols panels
                 pltpu.VMEM((2, span), jnp.float32),       # value panels
@@ -283,7 +308,7 @@ def _staged_dispatch(axis: str, spans: tuple, cspans: tuple, call):
 def spmm_ell_fused_sharded(blk_off: jax.Array, blk_L: jax.Array,
                            cols_flat: jax.Array, vals_flat: jax.Array,
                            x: jax.Array, *, mesh, bm: int = 8,
-                           interpret: bool = True,
+                           mw: int = 1, interpret: bool = True,
                            staging: str = "resident", span=0,
                            cspan=0, x_sharding: str = "replicated",
                            x_send=None, x_recv=None) -> jax.Array:
@@ -317,7 +342,8 @@ def spmm_ell_fused_sharded(blk_off: jax.Array, blk_L: jax.Array,
     """
     fn = _sharded_callable(mesh, bm, interpret, staging,
                            _chip_windows(span, mesh.size),
-                           _chip_windows(cspan, mesh.size), x_sharding)
+                           _chip_windows(cspan, mesh.size), x_sharding,
+                           mw)
     if x_sharding == "rows":
         return fn(blk_off, blk_L, cols_flat, vals_flat, x, x_send, x_recv)
     return fn(blk_off, blk_L, cols_flat, vals_flat, x)
@@ -327,10 +353,10 @@ def spmm_ell_fused_sharded(blk_off: jax.Array, blk_L: jax.Array,
 def _sharded_callable(mesh, bm: int, interpret: bool,
                       staging: str = "resident", spans: tuple = (0,),
                       cspans: tuple = (0,),
-                      x_sharding: str = "replicated"):
+                      x_sharding: str = "replicated", mw: int = 1):
     """jit-wrapped shard_map closure, memoized per (mesh, bm, interpret,
-    staging, spans, cspans, x_sharding) so repeated forwards reuse one
-    compiled executable instead of rebuilding and retracing the
+    staging, spans, cspans, x_sharding, mw) so repeated forwards reuse
+    one compiled executable instead of rebuilding and retracing the
     shard_map every call (Mesh is hashable; input-shape specialization
     is jit's usual cache).  Bounded, and evicted by
     ``core.jit_cache.clear_global_cache`` so compiled state and device
@@ -342,10 +368,11 @@ def _sharded_callable(mesh, bm: int, interpret: bool,
     if staging == "dma":
         def call(sp, cs):
             return functools.partial(spmm_ell_fused_staged, span=sp,
-                                     cspan=cs, bm=bm, interpret=interpret)
+                                     cspan=cs, bm=bm, mw=mw,
+                                     interpret=interpret)
         kernel = _staged_dispatch(axis, spans, cspans, call)
     else:
-        kernel = functools.partial(spmm_ell_fused, bm=bm,
+        kernel = functools.partial(spmm_ell_fused, bm=bm, mw=mw,
                                    interpret=interpret)
 
     shard = P(axis)

@@ -30,7 +30,8 @@ from .mesh import make_chip_mesh, make_host_mesh
 
 def spmm_shard_preflight(n_chips: int,
                          backend: str = "pallas_ell",
-                         x_sharding: str = "auto") -> int:
+                         x_sharding: str = "auto",
+                         autotune: bool = False) -> int:
     """Validate the sharded fused SpMM path on this host's devices before
     committing to a long run (same ethos as the dry-run): compile a small
     sharded plan and check it against the ref backend.  Fails fast —
@@ -43,7 +44,10 @@ def spmm_shard_preflight(n_chips: int,
     descriptor stream.  ``x_sharding`` selects X placement on the mesh
     ("replicated", "rows" = exact-panel fetch from owning chips, or
     "auto" — the same resolution the run itself will get), so a
-    fetch-table/exchange lowering failure surfaces before step 0 too."""
+    fetch-table/exchange lowering failure surfaces before step 0 too.
+    ``autotune=True`` additionally runs the per-instance plan search
+    (DESIGN.md §11) on the preflight fixture — warming the jit cache
+    with the winner and surfacing search-path failures up front."""
     from ..core import (FUSED_BACKENDS, JitCache, X_SHARDING_MODES,
                         random_csr, spmm)
     if backend not in FUSED_BACKENDS:
@@ -74,8 +78,14 @@ def spmm_shard_preflight(n_chips: int,
     y_ref = spmm(a, x, strategy="nnz_split", backend="ref", cache=cache)
     np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
                                rtol=1e-4, atol=1e-4)
+    if autotune:
+        y_t = spmm(a, x, backend=backend, interpret=None, mesh=mesh,
+                   x_sharding=x_sharding, autotune=True, cache=cache)
+        np.testing.assert_allclose(np.asarray(y_t), np.asarray(y_ref),
+                                   rtol=1e-4, atol=1e-4)
     print(f"[train] spmm shard preflight OK on {n_chips} chip(s) "
-          f"({backend}, x_sharding={x_sharding})", flush=True)
+          f"({backend}, x_sharding={x_sharding}"
+          f"{', autotuned' if autotune else ''})", flush=True)
     return n_chips
 
 
@@ -84,7 +94,7 @@ def run_training(cfg, *, steps: int, global_batch: int, seq_len: int,
                  microbatches: int = 1, remat: str = "full",
                  data_parallel: int = 1, model_parallel: int = 1,
                  spmm_chips: int = 0, spmm_backend: str = "pallas_ell",
-                 spmm_x_sharding: str = "auto",
+                 spmm_x_sharding: str = "auto", spmm_autotune: bool = False,
                  log_every: int = 10,
                  fault_injector=None, watchdog: Watchdog = None,
                  seed: int = 0, stop_at: int = None):
@@ -92,7 +102,8 @@ def run_training(cfg, *, steps: int, global_batch: int, seq_len: int,
     if spmm_chips:
         # the sparse-aggregation chips share the host devices with the
         # train mesh; fail fast here rather than mid-run
-        spmm_shard_preflight(spmm_chips, spmm_backend, spmm_x_sharding)
+        spmm_shard_preflight(spmm_chips, spmm_backend, spmm_x_sharding,
+                             autotune=spmm_autotune)
     mesh = make_host_mesh(data=data_parallel, model=model_parallel)
     opt = AdamW(learning_rate=warmup_cosine(lr, min(20, steps // 10 + 1),
                                             steps))
@@ -207,6 +218,11 @@ def main():
                          "chip mesh: replicated per chip, or rows = "
                          "exact-panel fetch from owning chips "
                          "(DESIGN.md §7.8); auto matches the run")
+    ap.add_argument("--autotune", action="store_true",
+                    help="preflight also runs the per-instance SpMM "
+                         "plan search (strategy x merge x staging, "
+                         "DESIGN.md §11) and validates + caches the "
+                         "winning config")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -219,7 +235,7 @@ def main():
         microbatches=args.microbatches, remat=args.remat,
         data_parallel=args.dp, model_parallel=args.tp,
         spmm_chips=args.spmm_chips, spmm_backend=args.spmm_backend,
-        spmm_x_sharding=args.x_sharding)
+        spmm_x_sharding=args.x_sharding, spmm_autotune=args.autotune)
     print(f"[train] done: first loss {losses[0]:.4f} "
           f"last loss {losses[-1]:.4f} ({time.time()-t0:.1f}s)")
 

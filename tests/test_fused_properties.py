@@ -26,9 +26,12 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import CSRMatrix, build_sharded_workspace, spmm
+from repro.core import (CSRMatrix, build_sharded_workspace, compile_spmm,
+                        spmm)
 from repro.core.jit_cache import JitCache
-from repro.core.plan import STRATEGIES, build_plan
+from repro.core.plan import (MAX_MERGE_WIDTH, MXU_TAG, STRATEGIES,
+                             build_plan, build_workspace,
+                             choose_merge_width)
 
 N_DEV = len(jax.devices())
 
@@ -267,4 +270,149 @@ def test_sharded_workspace_invariants(a, d, strategy, chips):
     assert np.all(ws.blk_off + np.asarray(ws.chip_span)[:, None]
                   <= ws.gather_flat.shape[1])
     assert np.all(ws.blk_coff + np.asarray(ws.chip_cspan)[:, None]
+                  <= ws.cols_flat.shape[1])
+
+
+# ---------------------------------------------------------------------------
+# CGCM (coarse-grain row merging, DESIGN.md §7.9): a merged plan bakes
+# W descriptors into one grid step but every row still reduces its own
+# lanes in-register, so the output must be BIT-identical to the
+# unmerged plan — end to end, both backends, both stagings, any chip
+# count, forward and gradient.
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(a=csr_cases(), d=st.integers(1, 16),
+       strategy=st.sampled_from(STRATEGIES),
+       backend=st.sampled_from(("pallas_ell", "pallas_bcsr")),
+       staging=st.sampled_from(("resident", "dma")),
+       chips=st.integers(1, 4))
+def test_merged_bit_matches_unmerged(a, d, strategy, backend, staging,
+                                     chips):
+    chips = min(chips, N_DEV)
+    x = jnp.asarray(
+        np.random.default_rng(d + 7).standard_normal((a.n, d)),
+        jnp.float32)
+    y0 = spmm(a, x, strategy=strategy, backend=backend, interpret=True,
+              staging=staging, n_chips=chips, merge_threshold=0,
+              cache=JitCache())
+    y1 = spmm(a, x, strategy=strategy, backend=backend, interpret=True,
+              staging=staging, n_chips=chips, merge_threshold=16,
+              cache=JitCache())
+    assert np.array_equal(np.asarray(y1), np.asarray(y0))
+
+
+@settings(max_examples=6, deadline=None)
+@given(a=csr_cases(), d=st.integers(1, 8),
+       strategy=st.sampled_from(STRATEGIES),
+       backend=st.sampled_from(("pallas_ell", "pallas_bcsr")))
+def test_merged_gradient_bit_matches_unmerged(a, d, strategy, backend):
+    """The custom-VJP backward runs through the same fused dispatch, so
+    merging must not perturb a gradient bit either."""
+    x = jnp.asarray(
+        np.random.default_rng(d + 8).standard_normal((a.n, d)),
+        jnp.float32)
+    vals = jnp.asarray(a.vals)
+    grads = []
+    for threshold in (0, 16):
+        c = compile_spmm(a, d, strategy=strategy, backend=backend,
+                         interpret=True, merge_threshold=threshold,
+                         cache=JitCache())
+
+        def f(v, xx, c=c):
+            return jnp.sum(c(v, xx) ** 2)
+
+        grads.append(jax.grad(f, argnums=(0, 1))(vals, x))
+    assert np.array_equal(np.asarray(grads[0][0]), np.asarray(grads[1][0]))
+    assert np.array_equal(np.asarray(grads[0][1]), np.asarray(grads[1][1]))
+
+
+@settings(max_examples=40, deadline=None)
+@given(a=csr_cases(), d=st.integers(1, 32),
+       strategy=st.sampled_from(STRATEGIES),
+       mixed=st.booleans(),
+       threshold=st.sampled_from((0, 4, 16, 64)))
+def test_merged_workspace_invariants(a, d, strategy, mixed, threshold):
+    """Host-only merged-trip packing invariants: the width is the merge
+    stage's power-of-two pick, the descriptor table pads to a multiple
+    of W with inert zero-trip blocks, per-trip DMA windows are exactly
+    the sum of the member extents and stay in bounds, and W == 1 is
+    byte-identical to the pre-CGCM packer."""
+    ws = build_workspace(a.row_ptr, a.col_indices, a.shape, d,
+                         strategy=strategy, mixed=mixed,
+                         merge_threshold=threshold)
+    W = ws.merge_width
+    assert 1 <= W <= MAX_MERGE_WIDTH and (W & (W - 1)) == 0
+    assert W == choose_merge_width(a.row_ptr, row_block=ws.row_block,
+                                   merge_threshold=threshold)
+    assert ws.num_blocks % W == 0
+    assert ws.num_trips * W == ws.num_blocks
+    assert ws.blk_span.shape[0] == ws.num_trips
+    assert ws.blk_cspan.shape[0] == ws.num_trips
+    # per-trip windows == sum of member extents (streams contiguous)
+    bm, bk = ws.row_block, ws.bk
+    L = ws.blk_L.astype(np.int64)
+    per_span = np.where(ws.blk_tag == MXU_TAG, L * bm * bk, bm * L)
+    per_cspan = np.where(ws.blk_tag == MXU_TAG, L, bm * L)
+    np.testing.assert_array_equal(ws.blk_span,
+                                  per_span.reshape(-1, W).sum(axis=1))
+    np.testing.assert_array_equal(ws.blk_cspan,
+                                  per_cspan.reshape(-1, W).sum(axis=1))
+    # fixed-size staged copies fit for every merged trip
+    assert np.all(ws.blk_off[::W].astype(np.int64) + ws.max_span
+                  <= ws.gather_flat.shape[0])
+    assert np.all(ws.blk_coff[::W].astype(np.int64) + ws.max_cspan
+                  <= ws.cols_flat.shape[0])
+    # the unmerged build is a prefix: CGCM only appends inert pads
+    ws0 = build_workspace(a.row_ptr, a.col_indices, a.shape, d,
+                          strategy=strategy, mixed=mixed,
+                          merge_threshold=0)
+    B0 = ws0.num_blocks
+    np.testing.assert_array_equal(ws.blk_off[:B0], ws0.blk_off)
+    np.testing.assert_array_equal(ws.blk_L[:B0], ws0.blk_L)
+    np.testing.assert_array_equal(ws.blk_tag[:B0], ws0.blk_tag)
+    np.testing.assert_array_equal(ws.blk_coff[:B0], ws0.blk_coff)
+    assert np.all(ws.blk_L[B0:] == 0)        # pads carry zero trips
+    real_slots = ws0.gather_flat.shape[0] - ws0.max_span
+    real_cols = ws0.cols_flat.shape[0] - ws0.max_cspan
+    np.testing.assert_array_equal(ws.gather_flat[:real_slots],
+                                  ws0.gather_flat[:real_slots])
+    np.testing.assert_array_equal(ws.cols_flat[:real_cols],
+                                  ws0.cols_flat[:real_cols])
+    if W == 1:
+        # byte-identical to the legacy packer — nothing moved at all
+        for f in ("blk_off", "blk_L", "blk_tag", "blk_coff", "blk_span",
+                  "blk_cspan", "gather_flat", "cols_flat", "inv_perm"):
+            np.testing.assert_array_equal(getattr(ws, f), getattr(ws0, f))
+        assert (ws.max_span, ws.max_cspan) == (ws0.max_span,
+                                               ws0.max_cspan)
+
+
+@settings(max_examples=30, deadline=None)
+@given(a=csr_cases(), d=st.integers(1, 32),
+       strategy=st.sampled_from(STRATEGIES),
+       chips=st.integers(1, 8),
+       threshold=st.sampled_from((0, 16)))
+def test_sharded_merged_workspace_invariants(a, d, strategy, chips,
+                                             threshold):
+    """The sharded pipeline merges BEFORE partitioning: one global width
+    for every chip, chip bounds cut at merged-trip boundaries, per-chip
+    staged windows sized to merged trips and still in bounds."""
+    ws = build_sharded_workspace(a.row_ptr, a.col_indices, a.shape, d,
+                                 n_chips=chips, strategy=strategy,
+                                 merge_threshold=threshold)
+    W = ws.merge_width
+    assert 1 <= W <= MAX_MERGE_WIDTH and (W & (W - 1)) == 0
+    assert W == choose_merge_width(a.row_ptr, row_block=ws.row_block,
+                                   merge_threshold=threshold)
+    B = ws.blk_off.shape[1]
+    assert B % W == 0
+    assert ws.num_trips * W == B
+    # every chip packed with the global width
+    assert all(getattr(p, "row_block", ws.row_block) == ws.row_block
+               for p in ws.shard_plans)
+    assert int(np.asarray(ws.chip_span).max(initial=0)) == ws.max_span
+    assert np.all(ws.blk_off[:, ::W] + np.asarray(ws.chip_span)[:, None]
+                  <= ws.gather_flat.shape[1])
+    assert np.all(ws.blk_coff[:, ::W] + np.asarray(ws.chip_cspan)[:, None]
                   <= ws.cols_flat.shape[1])
