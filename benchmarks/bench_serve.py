@@ -1,0 +1,184 @@
+"""Serving-tier latency/throughput bench: a Poisson request stream
+replayed against ``SpmmServer`` (DESIGN.md §12).
+
+Arrivals are virtual (exponential gaps on a simulated clock — the
+interpret-mode kernels are far slower than real TPU dispatch, so wall-
+clock arrival pacing would leave the server always-idle or always-
+saturated depending on the runner); service times are REAL measured
+walls.  The replay advances ``now = max(now, next_arrival)``, serves
+everything that has arrived (up to ``max_batch``) as one round, adds
+the measured service time, and records ``latency = completion -
+arrival`` per request — queueing + service on one clock.
+
+Smoke cells (gated like every other cell, benchmarks/common.py):
+
+  serve_p50 / serve_p99   wall_ms = latency percentile over the warm
+                          replay; dispatches = fused dispatches per
+                          request (< 1 when batching amortizes — a
+                          batching regression shows up structurally)
+  serve_cache             wall_ms = 0 (dispatch-gated only);
+                          dispatches = total JitCache misses over one
+                          cold + two warm replays.  Warm replays hit
+                          an intact cache, so a caching regression
+                          (key instability, clear-vs-inflight bugs)
+                          multiplies the count ~3x and trips the 2x
+                          gate.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+try:
+    from .common import bench_record, csv_row
+except ImportError:          # plain-script run: python benchmarks/...
+    import pathlib
+    import sys
+    _ROOT = pathlib.Path(__file__).resolve().parents[1]
+    sys.path.insert(0, str(_ROOT / "src"))   # repro package
+    sys.path.insert(0, str(_ROOT))           # benchmarks package
+    from benchmarks.common import bench_record, csv_row
+
+from repro.core import random_csr
+from repro.core.jit_cache import JitCache
+from repro.launch.serve import SpmmRequest, SpmmServer
+
+
+def make_tenants(seed: int = 0, d: int = 24) -> list:
+    """Tenant shapes loosely after the config zoo's serving instances
+    (one shared d bucket so the replay exercises batching, not bucket
+    fragmentation — bucket mixing is covered by the serve smoke)."""
+    rng = np.random.default_rng(seed)
+    mats = [
+        ("router", random_csr(64, 64, density=0.06, family="powerlaw",
+                              seed=21)),
+        ("graph", random_csr(96, 64, density=0.04, family="uniform",
+                             seed=22)),
+        ("band", random_csr(48, 56, density=0.10, family="banded",
+                            seed=23)),
+    ]
+    return [(name, a,
+             rng.standard_normal((a.shape[1], d)).astype(np.float32))
+            for name, a in mats]
+
+
+def poisson_stream(tenants, *, n_requests: int, mean_gap_s: float,
+                   seed: int = 0) -> list:
+    """[(arrival_s, tenant_index), ...] — exponential inter-arrival
+    gaps, uniform tenant choice; deterministic per seed so the cold and
+    warm replays (and CI runs) see the same batch compositions."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(mean_gap_s, size=n_requests))
+    picks = rng.integers(0, len(tenants), size=n_requests)
+    return [(float(arrivals[i]), int(picks[i]))
+            for i in range(n_requests)]
+
+
+def form_batches(stream, *, max_batch: int,
+                 nominal_service_s: float = 0.004) -> list:
+    """Batch boundaries ``[(i, j), ...)`` from the arrival clock alone:
+    the server goes idle, takes everything that has arrived (up to
+    ``max_batch``), and is busy for a NOMINAL service time.  Using a
+    fixed nominal time (not the measured wall) keeps batch composition
+    — and therefore which batched artifacts exist — identical between
+    the cold and warm replays and across runner speeds, so the cache
+    cells are deterministic."""
+    batches = []
+    now = 0.0
+    i, n = 0, len(stream)
+    while i < n:
+        now = max(now, stream[i][0])
+        j = i
+        while j < n and stream[j][0] <= now and j - i < max_batch:
+            j += 1
+        batches.append((i, j))
+        now += nominal_service_s
+        i = j
+    return batches
+
+
+def run_stream(server: SpmmServer, tenants, stream, batches) -> dict:
+    """Replay pre-formed batches; latency = completion - arrival with
+    REAL measured service times chained on the virtual arrival clock.
+    Returns latency percentiles + dispatch and cache-miss counts."""
+    now = 0.0
+    latencies = []
+    d0 = server.batches_dispatched
+    m0 = server.cache.stats()["misses"]
+    n = len(stream)
+    for i, j in batches:
+        # a batch can't start before its last member arrived
+        now = max(now, stream[j - 1][0])
+        batch = [SpmmRequest(tenant=tenants[t][0], a=tenants[t][1],
+                             x=tenants[t][2])
+                 for (_, t) in stream[i:j]]
+        t0 = time.perf_counter()
+        server.serve(batch)
+        now += time.perf_counter() - t0
+        latencies.extend(now - stream[k][0] for k in range(i, j))
+    lat = np.asarray(latencies)
+    return {
+        "p50_ms": float(np.percentile(lat, 50) * 1e3),
+        "p99_ms": float(np.percentile(lat, 99) * 1e3),
+        "throughput_rps": float(n / max(now, 1e-9)),
+        "dispatches": server.batches_dispatched - d0,
+        "misses": server.cache.stats()["misses"] - m0,
+        "n_requests": n,
+    }
+
+
+def smoke_records(n_requests: int = 18, seed: int = 0) -> list:
+    tenants = make_tenants(seed)
+    stream = poisson_stream(tenants, n_requests=n_requests,
+                            mean_gap_s=0.002, seed=seed)
+    batches = form_batches(stream, max_batch=4)
+    server = SpmmServer(interpret=True, max_batch=4, cache=JitCache())
+    cold = run_stream(server, tenants, stream, batches)
+    warm1 = run_stream(server, tenants, stream, batches)
+    warm2 = run_stream(server, tenants, stream, batches)
+    total_misses = cold["misses"] + warm1["misses"] + warm2["misses"]
+    per_req = warm2["dispatches"] / warm2["n_requests"]
+    backend = server.backend
+    return [
+        bench_record("serve_p50", "-", backend, 0, warm2["p50_ms"],
+                     per_req),
+        bench_record("serve_p99", "-", backend, 0, warm2["p99_ms"],
+                     per_req),
+        bench_record("serve_cache", "-", backend, 0, 0.0, total_misses),
+    ]
+
+
+def run(n_requests: int = 64, seed: int = 0) -> list:
+    tenants = make_tenants(seed)
+    stream = poisson_stream(tenants, n_requests=n_requests,
+                            mean_gap_s=0.002, seed=seed)
+    rows = []
+    for max_batch in (1, 4, 8):
+        batches = form_batches(stream, max_batch=max_batch)
+        server = SpmmServer(interpret=True, max_batch=max_batch,
+                            cache=JitCache())
+        run_stream(server, tenants, stream, batches)     # cold warmup
+        r = run_stream(server, tenants, stream, batches)
+        rows.append(csv_row(
+            f"serve_b{max_batch}_n{n_requests}", r["p50_ms"] * 1e3,
+            f"p99_ms={r['p99_ms']:.2f};rps={r['throughput_rps']:.0f};"
+            f"dispatch_per_req={r['dispatches'] / r['n_requests']:.2f};"
+            f"warm_misses={r['misses']}"))
+    return rows
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n-requests", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    print("name,us,derived")
+    for row in run(args.n_requests, args.seed):
+        print(row)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -15,9 +15,12 @@ Record schema and gate semantics: benchmarks/common.py.  Cells come
 from ``bench_strategies.smoke_records`` (fused VPU + mixed VPU/MXU
 dispatch wall/launch counts: resident AND ``_dma``-staged lowerings,
 CGCM-``_merged`` and autotuned ``_tuned`` cells on the powerlaw and
-``_skew`` suites) and ``bench_codegen_overhead.smoke_records``
-(plan/pack/tune host cost via ``kernels.ops.BUILD_SECONDS``), plus the
-``calib`` record that normalizes wall-clock across runner speeds.
+``_skew`` suites), ``bench_codegen_overhead.smoke_records``
+(plan/pack/tune host cost via ``kernels.ops.BUILD_SECONDS``) and
+``bench_serve.smoke_records`` (the serving tier's Poisson-stream
+``serve_p50``/``serve_p99`` latency and ``serve_cache`` miss-count
+cells, DESIGN.md §12), plus the ``calib`` record that normalizes
+wall-clock across runner speeds.
 """
 from __future__ import annotations
 
@@ -25,7 +28,7 @@ import argparse
 import sys
 
 try:
-    from . import bench_codegen_overhead, bench_strategies
+    from . import bench_codegen_overhead, bench_serve, bench_strategies
     from .common import (calib_record, check_bench_regression,
                          load_bench_json, write_bench_json)
 except ImportError:          # plain-script run: python benchmarks/smoke.py
@@ -33,7 +36,8 @@ except ImportError:          # plain-script run: python benchmarks/smoke.py
     _ROOT = pathlib.Path(__file__).resolve().parents[1]
     sys.path.insert(0, str(_ROOT / "src"))
     sys.path.insert(0, str(_ROOT))
-    from benchmarks import bench_codegen_overhead, bench_strategies
+    from benchmarks import (bench_codegen_overhead, bench_serve,
+                            bench_strategies)
     from benchmarks.common import (calib_record, check_bench_regression,
                                    load_bench_json, write_bench_json)
 
@@ -44,6 +48,7 @@ def collect_records() -> list:
     records = [calib_record()]
     records += bench_strategies.smoke_records()
     records += bench_codegen_overhead.smoke_records()
+    records += bench_serve.smoke_records()
     return records
 
 

@@ -2,14 +2,17 @@
 from .csr import BCSRMatrix, CSRMatrix, random_csr
 from .ccm import ccm_register_decomposition, plan_d_tiles, DTiling
 from .plan import (SpmmPlan, MixedPlan, MxuBlockRow, FusedEllWorkspace,
-                   ShardedFusedWorkspace, build_fused_workspace,
+                   ShardedFusedWorkspace, BatchedFusedWorkspace,
+                   StackedFusedTables, build_fused_workspace,
                    build_mixed_plan, build_sharded_workspace,
+                   build_batched_workspace, stack_fused_workspaces,
                    build_plan, build_workspace, choose_merge_width,
                    tag_block_rows, partition_rows_for_chips, STRATEGIES,
                    PLAN_STAGES, MAX_MERGE_WIDTH, MXU_TAG, VPU_TAG)
 from .jit_cache import (GLOBAL_CACHE, JitCache, clear_global_cache,
                         mesh_fingerprint)
-from .spmm import (CompiledSpmm, compile_spmm, spmm, chip_mesh,
+from .spmm import (CompiledSpmm, CompiledBatchedSpmm, compile_spmm,
+                   compile_batched_spmm, spmm, chip_mesh,
                    resolve_chip_mesh, BACKENDS, FUSED_BACKENDS,
                    X_SHARDING_MODES)
 from .autotune import (TuneConfig, TuneResult, autotune_spmm,
@@ -20,13 +23,16 @@ __all__ = [
     "BCSRMatrix", "CSRMatrix", "random_csr",
     "ccm_register_decomposition", "plan_d_tiles", "DTiling",
     "SpmmPlan", "MixedPlan", "MxuBlockRow", "FusedEllWorkspace",
-    "ShardedFusedWorkspace", "build_fused_workspace", "build_mixed_plan",
-    "build_sharded_workspace",
+    "ShardedFusedWorkspace", "BatchedFusedWorkspace",
+    "StackedFusedTables", "build_fused_workspace", "build_mixed_plan",
+    "build_sharded_workspace", "build_batched_workspace",
+    "stack_fused_workspaces",
     "build_plan", "build_workspace", "choose_merge_width",
     "tag_block_rows", "partition_rows_for_chips", "STRATEGIES",
     "PLAN_STAGES", "MAX_MERGE_WIDTH", "MXU_TAG", "VPU_TAG",
     "GLOBAL_CACHE", "JitCache", "clear_global_cache", "mesh_fingerprint",
-    "CompiledSpmm", "compile_spmm", "spmm", "chip_mesh",
+    "CompiledSpmm", "CompiledBatchedSpmm", "compile_spmm",
+    "compile_batched_spmm", "spmm", "chip_mesh",
     "resolve_chip_mesh", "BACKENDS", "FUSED_BACKENDS", "X_SHARDING_MODES",
     "TuneConfig", "TuneResult", "autotune_spmm",
     "autotune_spmm_with_result", "default_candidates",

@@ -67,6 +67,10 @@ class JitCache:
             collections.OrderedDict()
         self._lock = threading.Lock()
         self._inflight: dict = {}
+        # bumped by clear(): a builder that claimed its key under an
+        # older generation must not insert its (now invalidated)
+        # artifact after the clear — see get_or_build / clear
+        self._generation = 0
         self.misses = 0
         self.hits = 0
         self.evictions = 0
@@ -88,6 +92,7 @@ class JitCache:
                 if event is None:
                     event = threading.Event()
                     self._inflight[key] = event
+                    gen = self._generation
                     self.misses += 1
                     we_build = True
                 else:
@@ -102,18 +107,26 @@ class JitCache:
                 value = builder()
             except BaseException:
                 with self._lock:
-                    self._inflight.pop(key, None)
+                    if self._inflight.get(key) is event:
+                        self._inflight.pop(key)
                 event.set()
                 raise
             with self._lock:
-                self._entries[key] = CacheEntry(
-                    value, time.perf_counter() - t0)
-                self._entries.move_to_end(key)
-                while (self.capacity is not None
-                       and len(self._entries) > self.capacity):
-                    self._entries.popitem(last=False)   # LRU out
-                    self.evictions += 1
-                self._inflight.pop(key, None)
+                if self._generation == gen:
+                    self._entries[key] = CacheEntry(
+                        value, time.perf_counter() - t0)
+                    self._entries.move_to_end(key)
+                    while (self.capacity is not None
+                           and len(self._entries) > self.capacity):
+                        self._entries.popitem(last=False)   # LRU out
+                        self.evictions += 1
+                # else: clear() ran mid-build — the artifact was built
+                # against invalidated state, so hand it to OUR caller
+                # (who asked before the clear) but never cache it.
+                # The identity guard keeps a stale builder from popping
+                # a NEWER build's inflight event for the same key.
+                if self._inflight.get(key) is event:
+                    self._inflight.pop(key)
             event.set()
             return value
 
@@ -136,9 +149,23 @@ class JitCache:
                         e.build_seconds for e in self._entries.values())}
 
     def clear(self):
+        """Drop every entry AND invalidate in-flight builds.
+
+        Without the invalidation a builder that claimed its key before
+        the clear would re-insert its artifact afterwards, resurrecting
+        a stale plan in a long-lived serving process.  Bumping the
+        generation makes pre-clear builders skip the insert (their own
+        caller still gets the value — it asked before the clear), and
+        swapping the inflight map lets post-clear callers start a fresh
+        single-flight build immediately instead of adopting the stale
+        one; the abandoned events are still set by their builders, so
+        their waiters re-loop onto the new map.
+        """
         with self._lock:
             self._entries.clear()
             self.hits = self.misses = self.evictions = 0
+            self._generation += 1
+            self._inflight = {}
 
 
 GLOBAL_CACHE = JitCache()

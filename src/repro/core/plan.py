@@ -1003,6 +1003,102 @@ def _chip_x_panels(ws: FusedEllWorkspace, real_cols: int, bk: int):
     return pan, mxu_entry
 
 
+@dataclasses.dataclass
+class StackedFusedTables:
+    """Rectangular stacking of K per-member fused workspaces — the
+    shared trick behind BOTH stacking axes: chips
+    (:class:`ShardedFusedWorkspace`) and serving requests
+    (:class:`BatchedFusedWorkspace`, DESIGN.md §12).
+
+    Each member's descriptor table is padded to the common block count
+    ``B`` (pad blocks: ``L == 0``, zero trips) and its flat slot/column
+    streams to common widths ``S``/``Sc``.  Offsets stay member-
+    relative — a consumer re-bases them per axis — and the gather
+    stream is re-based here to ONE global ``concat(vals, [0])`` buffer
+    (each member's local zero sentinel becomes ``global_nnz``).
+    """
+    blk_off: np.ndarray      # (K, B) int32 — member-relative slot offset
+    blk_L: np.ndarray        # (K, B) int32 — pad blocks: L == 0
+    blk_tag: np.ndarray      # (K, B) int32
+    blk_coff: np.ndarray     # (K, B) int32 — member-relative cols offset
+    cols_flat: np.ndarray    # (K, Sc) int32
+    gather_flat: np.ndarray  # (K, S) int64 -> global concat(vals,[0])
+    member_span: np.ndarray  # (K,) int32 per-member staged slot window
+    member_cspan: np.ndarray  # (K,) int32 per-member staged cols window
+    num_blocks: int          # common per-member block count B
+    ws_rows: int             # per-member workspace rows B * row_block
+
+
+def stack_fused_workspaces(members: List[FusedEllWorkspace], *,
+                           member_nnz: List[int], nnz_bases: List[int],
+                           global_nnz: int, merge_width: int = 1,
+                           row_block: int = 8, cols_map=None,
+                           uniform_windows: bool = False
+                           ) -> StackedFusedTables:
+    """Stack K fused workspaces into rectangular ``(K, ·)`` tables.
+
+    ``cols_map(k, ws, cols)`` optionally rewrites member ``k``'s real
+    column entries before padding (the x-sharded chip remap, the
+    batched request re-base).
+
+    ``uniform_windows=True`` sizes every member's staged-DMA window at
+    the cross-member max and widens the streams so ANY member offset
+    plus that window stays inside the member's own row — required when
+    the stacked tables are flattened into ONE dispatch with a single
+    static window (the request axis, DESIGN.md §12).  The chip axis
+    keeps per-member windows instead (the PR 5 hot-shard fix): each
+    chip's ring is sized from ITS OWN largest trip, floored at one
+    :data:`STAGE_TILE` so an empty member's (SPMD-replicated) window
+    copies stay non-degenerate.
+    """
+    # every member's block count is a multiple of W (the packer pads),
+    # so the common stacked count is too — stacked pad blocks (L == 0,
+    # off == 0) only ever fill whole merged trips at the tail
+    K = len(members)
+    B = max(ws.num_blocks for ws in members)
+    assert B % max(merge_width, 1) == 0
+    real_s = [int(ws.gather_flat.shape[0]) - ws.max_span
+              for ws in members]
+    real_c = [int(ws.cols_flat.shape[0]) - ws.max_cspan
+              for ws in members]
+    member_span = np.asarray(
+        [max(ws.max_span, STAGE_TILE) for ws in members], np.int32)
+    member_cspan = np.asarray(
+        [max(ws.max_cspan, STAGE_TILE) for ws in members], np.int32)
+    if uniform_windows:
+        member_span[:] = member_span.max()
+        member_cspan[:] = member_cspan.max()
+    S = max(r + int(s) for r, s in zip(real_s, member_span))
+    Sc = max(r + int(s) for r, s in zip(real_c, member_cspan))
+    blk_off = np.zeros((K, B), np.int32)
+    blk_L = np.zeros((K, B), np.int32)       # pad blocks: L == 0
+    blk_tag = np.zeros((K, B), np.int32)
+    blk_coff = np.zeros((K, B), np.int32)
+    cols_flat = np.zeros((K, Sc), np.int32)
+    # pad -> the global 0.0 value sentinel
+    gather_flat = np.full((K, S), global_nnz, np.int64)
+    for k, ws in enumerate(members):
+        nb = ws.num_blocks
+        blk_off[k, :nb] = ws.blk_off
+        blk_L[k, :nb] = ws.blk_L
+        blk_tag[k, :nb] = ws.blk_tag
+        blk_coff[k, :nb] = ws.blk_coff
+        cols = ws.cols_flat[:real_c[k]]
+        if cols_map is not None:
+            cols = cols_map(k, ws, cols)
+        cols_flat[k, :real_c[k]] = cols
+        # re-base member-local value indices to the global vals buffer;
+        # the member's zero sentinel (its local nnz) becomes the global
+        g = ws.gather_flat[:real_s[k]]
+        gather_flat[k, :real_s[k]] = np.where(
+            g < member_nnz[k], g + nnz_bases[k], global_nnz)
+    return StackedFusedTables(
+        blk_off=blk_off, blk_L=blk_L, blk_tag=blk_tag, blk_coff=blk_coff,
+        cols_flat=cols_flat, gather_flat=gather_flat,
+        member_span=member_span, member_cspan=member_cspan,
+        num_blocks=B, ws_rows=B * row_block)
+
+
 def build_sharded_workspace(row_ptr: np.ndarray, col_indices: np.ndarray,
                             shape, d: int, *, n_chips: int,
                             strategy: str = "nnz_split", row_block: int = 8,
@@ -1079,66 +1175,36 @@ def build_sharded_workspace(row_ptr: np.ndarray, col_indices: np.ndarray,
                                             merge_width=merge_width))
         bases.append(base)
 
-    # every chip's block count is a multiple of W (the packer pads), so
-    # the common stacked count is too — stacked pad blocks (L == 0,
-    # off == 0) only ever fill whole merged trips at the tail
-    B = max(ws.num_blocks for ws in shards)
-    assert B % merge_width == 0
-    # per-chip DMA windows (hot-shard fix): each chip's staged ring is
-    # sized from ITS OWN largest block, floored at one STAGE_TILE so an
-    # empty chip's (SPMD-replicated) window copies stay non-degenerate.
-    # The stream width only has to admit each chip's own window, so one
-    # hot shard no longer tail-pads every chip to the cross-chip max.
-    real_s = [int(ws.gather_flat.shape[0]) - ws.max_span for ws in shards]
-    real_c = [int(ws.cols_flat.shape[0]) - ws.max_cspan for ws in shards]
-    chip_span = np.asarray([max(ws.max_span, STAGE_TILE) for ws in shards],
-                           np.int32)
-    chip_cspan = np.asarray(
-        [max(ws.max_cspan, STAGE_TILE) for ws in shards], np.int32)
-    S = max(r + int(s) for r, s in zip(real_s, chip_span))
-    Sc = max(r + int(s) for r, s in zip(real_c, chip_cspan))
-    ws_rows = B * row_block
-    blk_off = np.zeros((n_chips, B), np.int32)
-    blk_L = np.zeros((n_chips, B), np.int32)       # pad blocks: L == 0
-    blk_tag = np.zeros((n_chips, B), np.int32)
-    blk_coff = np.zeros((n_chips, B), np.int32)
-    cols_flat = np.zeros((n_chips, Sc), np.int32)
-    gather_flat = np.full((n_chips, S), nnz, np.int64)  # pad -> 0.0 sentinel
-    inv_perm = np.zeros(m, np.int32)
     needs: List[np.ndarray] = []
     x_panels = max(-(-int(n) // bk), 1)
-    for c, ws in enumerate(shards):
-        nb = ws.num_blocks
-        blk_off[c, :nb] = ws.blk_off
-        blk_L[c, :nb] = ws.blk_L
-        blk_tag[c, :nb] = ws.blk_tag
-        blk_coff[c, :nb] = ws.blk_coff
-        chip_cols = ws.cols_flat[:real_c[c]]
-        if x_sharding == "rows":
-            # remap this chip's column stream into its compact local
-            # panel space: global row k -> local_panel(k//bk)*bk + k%bk
-            # for VPU slots, global block-column -> local panel for MXU
-            # entries (sentinel 0 stays 0: panel 0 is always fetched)
-            pan, mxu_entry = _chip_x_panels(ws, real_c[c], bk)
-            need = np.unique(np.concatenate(
-                [np.zeros(1, np.int64), pan]))
-            lut = np.zeros(x_panels, np.int64)
-            lut[need] = np.arange(need.size)
-            k = chip_cols.astype(np.int64)
-            chip_cols = np.where(mxu_entry, lut[pan],
-                                 lut[pan] * bk + k % bk).astype(np.int32)
-            needs.append(need)
-        cols_flat[c, :real_c[c]] = chip_cols
-        # re-base shard-local value indices to the global vals buffer;
-        # the shard's zero sentinel (its local nnz) becomes the global one
-        sub_nnz = int(plans[c].nnz)
-        g = ws.gather_flat[:real_s[c]]
-        gather_flat[c, :real_s[c]] = np.where(g < sub_nnz, g + bases[c],
-                                              nnz)
-        r0, r1 = int(bounds[c]), int(bounds[c + 1])
-        inv_perm[r0:r1] = c * ws_rows + ws.inv_perm
 
-    x_own = x_fetch = x_send = x_recv = None
+    def _xshard_cols_map(c, ws, chip_cols):
+        # remap this chip's column stream into its compact local panel
+        # space: global row k -> local_panel(k//bk)*bk + k%bk for VPU
+        # slots, global block-column -> local panel for MXU entries
+        # (sentinel 0 stays 0: panel 0 is always fetched)
+        pan, mxu_entry = _chip_x_panels(ws, chip_cols.shape[0], bk)
+        need = np.unique(np.concatenate([np.zeros(1, np.int64), pan]))
+        lut = np.zeros(x_panels, np.int64)
+        lut[need] = np.arange(need.size)
+        needs.append(need)
+        k = chip_cols.astype(np.int64)
+        return np.where(mxu_entry, lut[pan],
+                        lut[pan] * bk + k % bk).astype(np.int32)
+
+    # the chip axis keeps PER-MEMBER DMA windows (hot-shard fix): each
+    # chip's staged ring is sized from ITS OWN largest block, so one hot
+    # shard no longer tail-pads every chip to the cross-chip max
+    st = stack_fused_workspaces(
+        shards, member_nnz=[int(p.nnz) for p in plans], nnz_bases=bases,
+        global_nnz=nnz, merge_width=merge_width, row_block=row_block,
+        cols_map=_xshard_cols_map if x_sharding == "rows" else None)
+    inv_perm = np.zeros(m, np.int32)
+    for c, ws in enumerate(shards):
+        r0, r1 = int(bounds[c]), int(bounds[c + 1])
+        inv_perm[r0:r1] = c * st.ws_rows + ws.inv_perm
+
+    x_fetch = x_send = x_recv = None
     own_panels = 0
     if x_sharding == "rows":
         own_panels = -(-x_panels // n_chips)
@@ -1146,13 +1212,14 @@ def build_sharded_workspace(row_ptr: np.ndarray, col_indices: np.ndarray,
                                                   n_chips)
 
     return ShardedFusedWorkspace(
-        blk_off=blk_off, blk_L=blk_L, cols_flat=cols_flat,
-        gather_flat=gather_flat, inv_perm=inv_perm, bounds=bounds,
-        ws_rows=ws_rows, row_block=row_block, n_chips=n_chips,
-        shard_plans=plans, blk_tag=blk_tag, blk_coff=blk_coff, bk=bk,
-        max_span=int(chip_span.max(initial=0)),
-        max_cspan=int(chip_cspan.max(initial=0)),
-        chip_span=chip_span, chip_cspan=chip_cspan,
+        blk_off=st.blk_off, blk_L=st.blk_L, cols_flat=st.cols_flat,
+        gather_flat=st.gather_flat, inv_perm=inv_perm, bounds=bounds,
+        ws_rows=st.ws_rows, row_block=row_block, n_chips=n_chips,
+        shard_plans=plans, blk_tag=st.blk_tag, blk_coff=st.blk_coff,
+        bk=bk,
+        max_span=int(st.member_span.max(initial=0)),
+        max_cspan=int(st.member_cspan.max(initial=0)),
+        chip_span=st.member_span, chip_cspan=st.member_cspan,
         x_sharding=x_sharding, x_panels=x_panels,
         x_own_panels=own_panels, x_fetch=x_fetch, x_send=x_send,
         x_recv=x_recv, merge_width=merge_width,
@@ -1200,3 +1267,158 @@ def _x_fetch_tables(needs: List[np.ndarray], own_panels: int,
             row = send_lists[s][j]
             x_send[s, j, :len(row)] = row
     return x_fetch, x_send, x_recv
+
+
+@dataclasses.dataclass
+class BatchedFusedWorkspace:
+    """Request-axis stacking for the multi-tenant serving tier
+    (DESIGN.md §12): R small instances' descriptor tables stacked with
+    :func:`stack_fused_workspaces` — the same rectangular trick the
+    chip axis uses — then FLATTENED block-diagonally so the whole
+    batch is ONE fused dispatch through the ordinary single-chip
+    kernels.
+
+    Flattening re-bases each request's member-relative offsets by its
+    row in the stack (slot offsets by ``r*S``, column offsets by
+    ``r*Sc``), its column entries into the stacked X operand (VPU rows
+    by ``r * x_rows_pad``, MXU block-columns by ``r * x_rows_pad //
+    bk``), and its gather entries into the concatenated global vals
+    buffer.  Unlike the chip axis, one dispatch has ONE static DMA
+    window, so the stack uses uniform windows (cross-request max) —
+    every member offset plus the window then stays inside the member's
+    own ``[r*S, (r+1)*S)`` region and a staged copy never crosses a
+    request boundary.
+    """
+    blk_off: np.ndarray      # (R*B,) int32 — request base folded in
+    blk_L: np.ndarray        # (R*B,) int32 — pad blocks: L == 0
+    blk_tag: np.ndarray      # (R*B,) int32
+    blk_coff: np.ndarray     # (R*B,) int32 — request base folded in
+    cols_flat: np.ndarray    # (R*Sc,) int32 — into the stacked X rows
+    gather_flat: np.ndarray  # (R*S,) int64 — into concat(all vals,[0])
+    inv_perm: np.ndarray     # (sum m_r,) int32 into flattened ws rows
+    row_splits: np.ndarray   # (R+1,) int64 — per-request output ranges
+    val_splits: np.ndarray   # (R+1,) int64 — per-request vals ranges
+    request_plans: List      # per-request plan (stats / nnz / seconds)
+    n_requests: int
+    num_blocks: int          # R * B
+    ws_rows: int             # total workspace rows == num_blocks * bm
+    row_block: int
+    bk: int
+    x_rows_pad: int          # per-request stacked-X row strip (bk mult)
+    max_span: int            # uniform staged-DMA slot window
+    max_cspan: int           # uniform staged-DMA cols window
+    merge_width: int         # common CGCM width across the batch
+    pack_seconds: float = 0.0
+
+    @property
+    def nnz(self) -> int:
+        return int(self.val_splits[-1])
+
+    @property
+    def num_trips(self) -> int:
+        return self.num_blocks // max(self.merge_width, 1)
+
+
+def build_batched_workspace(structures, d: int, *,
+                            strategy: str = "nnz_split",
+                            row_block: int = 8,
+                            backend: str = "pallas_ell", bk: int = 8,
+                            mxu_gain: float = 4.0,
+                            merge_threshold: int = 0,
+                            fingerprint: str = "", max_dt: int = 512,
+                            merge_target_segments: int = 16
+                            ) -> BatchedFusedWorkspace:
+    """Plan + pack R request structures ``(row_ptr, col_indices,
+    shape)`` into one :class:`BatchedFusedWorkspace` (DESIGN.md §12).
+
+    Each request runs the ordinary single-chip plan pipeline (build →
+    merge → tag → pack) with the SAME knobs a solo dispatch would use,
+    so the batched output is bit-identical to dispatching each request
+    alone; only the CGCM width is coerced to a common value (the
+    minimum of the members' own choices — the kernel takes one static
+    width, and CGCM is bit-identical at any width).
+    """
+    if not structures:
+        raise ValueError("build_batched_workspace needs >= 1 request")
+    mixed = backend == "pallas_bcsr"
+    structures = [(np.asarray(rp), np.asarray(ci), tuple(shape))
+                  for rp, ci, shape in structures]
+    mw = min(choose_merge_width(rp, row_block=row_block,
+                                merge_threshold=merge_threshold)
+             for rp, _, _ in structures)
+    plans: List = []
+    shards: List[FusedEllWorkspace] = []
+    bases: List[int] = []
+    total_nnz = 0
+    n_max = 0
+    for r, (row_ptr, col_indices, shape) in enumerate(structures):
+        if mixed:
+            plan = build_mixed_plan(
+                row_ptr, col_indices, shape, d, strategy=strategy,
+                row_block=row_block, bk=bk, mxu_gain=mxu_gain,
+                fingerprint=f"{fingerprint}/req{r}", max_dt=max_dt,
+                merge_target_segments=merge_target_segments)
+        else:
+            plan = build_plan(row_ptr, col_indices, shape, d,
+                              strategy=strategy, row_block=row_block,
+                              fingerprint=f"{fingerprint}/req{r}",
+                              max_dt=max_dt,
+                              merge_target_segments=merge_target_segments)
+        plans.append(plan)
+        shards.append(build_fused_workspace(plan, merge_width=mw))
+        bases.append(total_nnz)
+        total_nnz += int(plan.nnz)
+        n_max = max(n_max, int(shape[1]))
+    # common bk-aligned X strip: request r's operand rows live at
+    # [r * x_rows_pad, r * x_rows_pad + n_r) of the stacked X (the
+    # mixed kernel slices whole bk-row panels, so the strip aligns)
+    x_rows_pad = max(-(-n_max // bk), 1) * bk
+    x_blocks = x_rows_pad // bk
+
+    def _request_cols_map(r, ws, cols):
+        # re-base into the stacked X: a VPU slot names a row, an MXU
+        # entry a block-column (sentinel 0 shifts to the request's own
+        # strip — still inert, its value is the 0.0 gather sentinel)
+        _, mxu_entry = _chip_x_panels(ws, cols.shape[0], bk)
+        k = cols.astype(np.int64)
+        return np.where(mxu_entry, k + r * x_blocks,
+                        k + r * x_rows_pad).astype(np.int32)
+
+    st = stack_fused_workspaces(
+        shards, member_nnz=[int(p.nnz) for p in plans], nnz_bases=bases,
+        global_nnz=total_nnz, merge_width=mw, row_block=row_block,
+        cols_map=_request_cols_map, uniform_windows=True)
+    R, B = st.blk_L.shape
+    S = int(st.gather_flat.shape[1])
+    Sc = int(st.cols_flat.shape[1])
+    assert R * max(S, Sc) < 2 ** 31, "batched streams overflow int32"
+    # block-diagonal flatten: offsets are member-relative, so folding
+    # request r's base in is one addition — the same re-basing trick
+    # the chip gather uses for vals
+    rbase = np.arange(R, dtype=np.int64)[:, None]
+    blk_off = (st.blk_off.astype(np.int64) + rbase * S)
+    blk_coff = (st.blk_coff.astype(np.int64) + rbase * Sc)
+    row_splits = np.zeros(R + 1, np.int64)
+    val_splits = np.zeros(R + 1, np.int64)
+    for r, (_, _, shape) in enumerate(structures):
+        row_splits[r + 1] = row_splits[r] + int(shape[0])
+        val_splits[r + 1] = val_splits[r] + int(plans[r].nnz)
+    inv_perm = np.zeros(int(row_splits[-1]), np.int32)
+    for r, ws in enumerate(shards):
+        inv_perm[row_splits[r]:row_splits[r + 1]] = (r * st.ws_rows
+                                                     + ws.inv_perm)
+    return BatchedFusedWorkspace(
+        blk_off=blk_off.reshape(-1).astype(np.int32),
+        blk_L=st.blk_L.reshape(-1),
+        blk_tag=st.blk_tag.reshape(-1),
+        blk_coff=blk_coff.reshape(-1).astype(np.int32),
+        cols_flat=st.cols_flat.reshape(-1),
+        gather_flat=st.gather_flat.reshape(-1),
+        inv_perm=inv_perm, row_splits=row_splits, val_splits=val_splits,
+        request_plans=plans, n_requests=R, num_blocks=R * B,
+        ws_rows=R * st.ws_rows, row_block=row_block, bk=bk,
+        x_rows_pad=x_rows_pad,
+        max_span=int(st.member_span.max(initial=0)),
+        max_cspan=int(st.member_cspan.max(initial=0)),
+        merge_width=mw,
+        pack_seconds=sum(ws.pack_seconds for ws in shards))

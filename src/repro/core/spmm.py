@@ -42,8 +42,10 @@ from jax.sharding import Mesh
 from . import ccm
 from .csr import CSRMatrix
 from .jit_cache import GLOBAL_CACHE, JitCache, mesh_fingerprint
-from .plan import (MixedPlan, ShardedFusedWorkspace, SpmmPlan,
-                   build_fused_workspace, build_mixed_plan, build_plan,
+from .plan import (BatchedFusedWorkspace, MixedPlan,
+                   ShardedFusedWorkspace, SpmmPlan,
+                   build_batched_workspace, build_fused_workspace,
+                   build_mixed_plan, build_plan,
                    build_sharded_workspace, choose_merge_width)
 from ..kernels.ops import resolve_interpret, resolve_staging
 
@@ -601,6 +603,157 @@ def compile_spmm(a: CSRMatrix, d: int, *, strategy: str = "nnz_split",
                                   x_sharding=x_sharding,
                                   merge_threshold=merge_threshold,
                                   mesh=mesh, cache=cache))
+
+
+class CompiledBatchedSpmm:
+    """Request-axis batched jit-function for the serving tier
+    (DESIGN.md §12): R structure-specialized instances stacked
+    block-diagonally (:func:`build_batched_workspace`) into ONE fused
+    dispatch through the ordinary single-chip kernels.
+
+    Bit-identical to dispatching each request alone with the same
+    knobs: slot padding, d-bucket padding, and the common CGCM width
+    all leave per-lane accumulation order untouched.  Forward-only —
+    the endpoint never differentiates through a served batch; training
+    gradients stay on :class:`CompiledSpmm`.
+    """
+
+    def __init__(self, structures, d: int, *,
+                 strategy: str = "nnz_split", backend: str = "auto",
+                 bm: int = 8, bk: int = 8, mxu_gain: float = 4.0,
+                 interpret: Optional[bool] = None,
+                 staging: Optional[str] = None,
+                 merge_threshold: int = 0):
+        # sharded=True resolution: batching stacks descriptor tables, so
+        # "auto" must land on a fused backend even on CPU (interpret)
+        self.backend = _resolve_backend(backend, sharded=True)
+        if self.backend not in FUSED_BACKENDS:
+            raise ValueError(
+                f"batched dispatch stacks descriptor tables — a fused "
+                f"backend is required ({'/'.join(FUSED_BACKENDS)}), "
+                f"got {self.backend!r}")
+        self.strategy = strategy
+        self.bm = bm
+        self.bk = bk
+        self.mxu_gain = mxu_gain
+        self.merge_threshold = int(merge_threshold)
+        self.interpret = resolve_interpret(interpret)
+        self.staging = _resolve_staging_for(self.backend, staging,
+                                            self.interpret)
+        self.d = int(d)
+        self.shapes = [tuple(int(v) for v in a.shape) for a in structures]
+        self.d_tiling = ccm.plan_d_tiles(d, rows_in_flight=bm)
+        bw: BatchedFusedWorkspace = build_batched_workspace(
+            [(a.row_ptr, a.col_indices, a.shape) for a in structures],
+            d, strategy=strategy, row_block=bm, backend=self.backend,
+            bk=bk, mxu_gain=mxu_gain,
+            merge_threshold=self.merge_threshold,
+            fingerprint="+".join(a.fingerprint[:8] for a in structures))
+        self.batched_workspace = bw
+        self._consts = _FusedConsts(
+            blk_off=jnp.asarray(bw.blk_off),
+            blk_L=jnp.asarray(bw.blk_L),
+            cols_flat=jnp.asarray(bw.cols_flat),
+            gather_flat=jnp.asarray(bw.gather_flat),
+            inv_perm=jnp.asarray(bw.inv_perm),
+            num_blocks=bw.num_blocks,
+            blk_tag=jnp.asarray(bw.blk_tag),
+            blk_coff=jnp.asarray(bw.blk_coff),
+            max_span=bw.max_span,
+            max_cspan=bw.max_cspan,
+            merge_width=bw.merge_width)
+        _record_build(sum(p.plan_seconds for p in bw.request_plans),
+                      bw.pack_seconds)
+        self._row_splits = [int(v) for v in bw.row_splits]
+        # the serving path calls the SAME artifact repeatedly — trace
+        # once here instead of per request (shapes are fixed by the
+        # artifact, so this never retraces after warmup)
+        self._jit_forward = jax.jit(self._forward)
+
+    @property
+    def n_requests(self) -> int:
+        return len(self.shapes)
+
+    def stack_inputs(self, xs) -> np.ndarray:
+        """Host-side bucket padding: per-request ``(n_r, d_r <= d)``
+        operands -> ONE zero-filled ``(R * x_rows_pad, d)`` stacked
+        array (request r's rows at ``[r * x_rows_pad, ...)``)."""
+        bw = self.batched_workspace
+        out = np.zeros((bw.n_requests * bw.x_rows_pad, self.d),
+                       np.float32)
+        for r, x in enumerate(xs):
+            x = np.asarray(x, np.float32)
+            out[r * bw.x_rows_pad:r * bw.x_rows_pad + x.shape[0],
+                :x.shape[1]] = x
+        return out
+
+    def _forward(self, vals, x):
+        fw = self._consts
+        vals_ext = jnp.concatenate(
+            [vals.astype(jnp.float32), jnp.zeros((1,), jnp.float32)])
+        x_pad = ccm.pad_cols(x, self.d_tiling.d_pad)
+        vals_flat = vals_ext[fw.gather_flat]
+        if self.backend == "pallas_ell":
+            from ..kernels.ops import spmm_ell_fused_op
+            y_ws = spmm_ell_fused_op(
+                fw.blk_off, fw.blk_L, fw.cols_flat, vals_flat, x_pad,
+                bm=self.bm, mw=fw.merge_width, interpret=self.interpret,
+                staging=self.staging, span=fw.max_span,
+                cspan=fw.max_cspan)
+        else:
+            from ..kernels.ops import spmm_bcsr_fused_op
+            y_ws = spmm_bcsr_fused_op(
+                fw.blk_tag, fw.blk_off, fw.blk_coff, fw.blk_L,
+                fw.cols_flat, vals_flat, x_pad, bm=self.bm, bk=self.bk,
+                mw=fw.merge_width, interpret=self.interpret,
+                staging=self.staging, span=fw.max_span,
+                cspan=fw.max_cspan)
+        # one inverse-permutation gather un-interleaves ALL requests
+        return y_ws[fw.inv_perm]
+
+    def __call__(self, vals, xs):
+        """``vals``: per-request value vectors (or one pre-concatenated
+        array); ``xs``: per-request operands (or the pre-stacked array
+        from :meth:`stack_inputs`).  Returns per-request ``(m_r, d)``
+        outputs in request order."""
+        if isinstance(vals, (list, tuple)):
+            vals = jnp.concatenate(
+                [jnp.asarray(v, jnp.float32).ravel() for v in vals])
+        if isinstance(xs, (list, tuple)):
+            xs = jnp.asarray(self.stack_inputs(xs))
+        y = self._jit_forward(vals, xs)
+        rs = self._row_splits
+        return [y[rs[r]:rs[r + 1], :self.d]
+                for r in range(self.n_requests)]
+
+
+def compile_batched_spmm(structures, d: int, *,
+                         strategy: str = "nnz_split",
+                         backend: str = "auto", bm: int = 8, bk: int = 8,
+                         mxu_gain: float = 4.0,
+                         interpret: Optional[bool] = None,
+                         staging: Optional[str] = None,
+                         merge_threshold: int = 0,
+                         cache: JitCache = GLOBAL_CACHE
+                         ) -> CompiledBatchedSpmm:
+    """Build (or fetch) the batched multi-tenant artifact (DESIGN.md
+    §12): the cache key is the ORDERED tuple of member fingerprints
+    plus every knob a solo key carries — so a serving endpoint that
+    sees the same batch composition twice pays plan/pack exactly once,
+    the Table IV amortization applied across tenants."""
+    structures = tuple(structures)
+    backend = _resolve_backend(backend, sharded=True)
+    interpret = resolve_interpret(interpret)
+    staging = _resolve_staging_for(backend, staging, interpret)
+    merge_threshold = int(merge_threshold)
+    key = ("spmm_batch", tuple(a.fingerprint for a in structures), d,
+           strategy, backend, bm, bk, mxu_gain, interpret, staging,
+           merge_threshold)
+    return cache.get_or_build(
+        key, lambda: CompiledBatchedSpmm(
+            structures, d, strategy=strategy, backend=backend, bm=bm,
+            bk=bk, mxu_gain=mxu_gain, interpret=interpret,
+            staging=staging, merge_threshold=merge_threshold))
 
 
 def spmm(a: CSRMatrix, x, *, strategy: str = "nnz_split",

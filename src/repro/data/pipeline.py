@@ -8,10 +8,16 @@ replaying — the data-side half of checkpoint/restart fault tolerance
 
 Sources: synthetic LM stream (zipf-ish unigram mixture so the loss
 actually falls) or a memory-mapped token file.
+
+``DeviceStage`` is the serving tier's async host→device input stage
+(DESIGN.md §12): a bounded look-ahead thread runs the transfer for
+batch k+1 while the consumer dispatches batch k.
 """
 from __future__ import annotations
 
 import dataclasses
+import queue
+import threading
 from typing import Dict, Iterator, Optional
 
 import numpy as np
@@ -40,6 +46,16 @@ class TokenPipeline:
         if cfg.token_file:
             self._tokens = np.memmap(cfg.token_file, dtype=np.int32,
                                      mode="r")
+            # batch_at samples (seq_len + 1)-token windows from
+            # rng.integers(0, len - seq_len - 1); fail HERE with the
+            # actual numbers instead of an opaque numpy ValueError
+            # ("low >= high") at the first batch
+            if len(self._tokens) < cfg.seq_len + 2:
+                raise ValueError(
+                    f"token_file {cfg.token_file!r} has "
+                    f"{len(self._tokens)} tokens — too short for "
+                    f"seq_len={cfg.seq_len} (need >= {cfg.seq_len + 2} "
+                    f"so at least one sample window exists)")
 
     # -- pure function of (seed, step, host) --------------------------------
     def _rng(self, step: int) -> np.random.Generator:
@@ -83,3 +99,48 @@ class TokenPipeline:
         while True:
             yield self.batch_at(step)
             step += 1
+
+
+class DeviceStage:
+    """Async double-buffered host→device input stage (DESIGN.md §12).
+
+    Wraps an iterable of host-side items: a daemon thread runs
+    ``transfer`` (default ``jax.device_put``) up to ``depth`` items
+    ahead of the consumer, so the serving dispatch of batch k overlaps
+    the H2D transfer (and host-side packing, since the source iterable
+    is pulled on the worker thread too) of batch k+1 instead of paying
+    them in series.  Iterating yields ``(item, staged)`` pairs in input
+    order; an exception raised by the source or the transfer re-raises
+    at the consumer's next pull.
+    """
+
+    _DONE = object()
+
+    def __init__(self, items, *, depth: int = 2, transfer=None):
+        if depth < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
+        if transfer is None:
+            import jax
+            transfer = jax.device_put
+        self._transfer = transfer
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._thread = threading.Thread(
+            target=self._worker, args=(iter(items),), daemon=True)
+        self._thread.start()
+
+    def _worker(self, it):
+        try:
+            for item in it:
+                self._q.put((item, self._transfer(item)))
+            self._q.put(self._DONE)
+        except BaseException as e:      # surfaces at the consumer
+            self._q.put(e)
+
+    def __iter__(self):
+        while True:
+            got = self._q.get()
+            if got is self._DONE:
+                return
+            if isinstance(got, BaseException):
+                raise got
+            yield got

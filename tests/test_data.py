@@ -1,7 +1,11 @@
-"""Data pipeline: determinism, resume, host sharding."""
-import numpy as np
+"""Data pipeline: determinism, resume, host sharding, the memmap
+length check, and the serving tier's DeviceStage."""
+import time
 
-from repro.data.pipeline import PipelineConfig, TokenPipeline
+import numpy as np
+import pytest
+
+from repro.data.pipeline import DeviceStage, PipelineConfig, TokenPipeline
 
 
 def _cfg(**kw):
@@ -59,3 +63,99 @@ def test_token_range_valid():
     b = p.batch_at(11)
     assert b["tokens"].min() >= 0
     assert b["tokens"].max() < 128
+
+
+# -- memmap token files -------------------------------------------------------
+
+def _write_tokens(path, n):
+    np.arange(n, dtype=np.int32).tofile(path)
+    return str(path)
+
+
+def test_short_token_file_raises_clear_error(tmp_path):
+    """Regression: a token file shorter than the sample window used to
+    die at the first batch with numpy's opaque 'low >= high'; now the
+    constructor names the file and the numbers."""
+    f = _write_tokens(tmp_path / "tiny.bin", 10)
+    with pytest.raises(ValueError, match="too short for seq_len=32"):
+        TokenPipeline(_cfg(token_file=f))
+
+
+def test_one_token_file_raises(tmp_path):
+    f = _write_tokens(tmp_path / "one.bin", 1)
+    with pytest.raises(ValueError, match="too short"):
+        TokenPipeline(_cfg(token_file=f))
+
+
+def test_minimal_token_file_boundary_works(tmp_path):
+    """seq_len + 2 tokens = exactly one sample window: must NOT raise,
+    and every drawn window is that one window."""
+    f = _write_tokens(tmp_path / "min.bin", 34)
+    p = TokenPipeline(_cfg(token_file=f, vocab_size=64))
+    b = p.batch_at(0)
+    assert b["tokens"].shape == (8, 32)
+    np.testing.assert_array_equal(b["tokens"][0], np.arange(32))
+    np.testing.assert_array_equal(b["labels"][0], np.arange(1, 33))
+
+
+# -- DeviceStage (serving input stage) ---------------------------------------
+
+def test_device_stage_order_and_values():
+    items = list(range(10))
+    out = list(DeviceStage(items, depth=2, transfer=lambda v: v * 10))
+    assert out == [(i, i * 10) for i in items]
+
+
+def test_device_stage_empty_source():
+    assert list(DeviceStage([], transfer=lambda v: v)) == []
+
+
+def test_device_stage_rejects_bad_depth():
+    with pytest.raises(ValueError, match="depth"):
+        DeviceStage([1], depth=0, transfer=lambda v: v)
+
+
+def test_device_stage_propagates_source_exception():
+    def src():
+        yield 1
+        yield 2
+        raise RuntimeError("upstream pack failed")
+
+    it = iter(DeviceStage(src(), transfer=lambda v: v))
+    assert next(it) == (1, 1)
+    assert next(it) == (2, 2)
+    with pytest.raises(RuntimeError, match="upstream pack failed"):
+        next(it)
+
+
+def test_device_stage_propagates_transfer_exception():
+    def bad_transfer(v):
+        if v == 3:
+            raise ValueError("transfer blew up")
+        return v
+
+    it = iter(DeviceStage([1, 2, 3, 4], transfer=bad_transfer))
+    assert next(it) == (1, 1)
+    assert next(it) == (2, 2)
+    with pytest.raises(ValueError, match="transfer blew up"):
+        next(it)
+
+
+def test_device_stage_prefetches_ahead():
+    """The worker must stage item k+1 while the consumer still holds
+    item k — that overlap is the whole point of the stage."""
+    staged = []
+
+    def transfer(v):
+        staged.append(v)
+        return v
+
+    stage = iter(DeviceStage(range(6), depth=2, transfer=transfer))
+    first = next(stage)
+    assert first == (0, 0)
+    deadline = time.time() + 5.0
+    while len(staged) < 3 and time.time() < deadline:
+        time.sleep(0.01)
+    # without look-ahead only item 0 (and maybe 1) would be staged
+    assert len(staged) >= 3
+    assert list(stage) == [(i, i) for i in range(1, 6)]
