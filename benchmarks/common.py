@@ -114,6 +114,18 @@ def _key(r: dict):
     return tuple(r[k] for k in _KEY_FIELDS)
 
 
+def _machine_scale(prm: dict, bsm: dict) -> float:
+    """PR-machine / baseline-machine wall ratio from the calib records,
+    floored at 1.0 (see ``check_bench_regression``)."""
+    calib_pairs = [(prm[k], bsm[k]) for k in bsm
+                   if k in prm and k[0] == CALIB_BENCH
+                   and bsm[k]["wall_ms"] > 0]
+    if not calib_pairs:
+        return 1.0
+    ratios = [p["wall_ms"] / b["wall_ms"] for p, b in calib_pairs]
+    return max(float(np.median(ratios)), 1.0)
+
+
 def check_bench_regression(pr: List[dict], baseline: List[dict], *,
                            factor: float = 2.0,
                            min_wall_ms: float = 1.0) -> List[str]:
@@ -136,13 +148,7 @@ def check_bench_regression(pr: List[dict], baseline: List[dict], *,
     """
     prm = {_key(r): r for r in pr}
     bsm = {_key(r): r for r in baseline}
-    scale = 1.0
-    calib_pairs = [(prm[k], bsm[k]) for k in bsm
-                   if k in prm and k[0] == CALIB_BENCH
-                   and bsm[k]["wall_ms"] > 0]
-    if calib_pairs:
-        ratios = [p["wall_ms"] / b["wall_ms"] for p, b in calib_pairs]
-        scale = max(float(np.median(ratios)), 1.0)
+    scale = _machine_scale(prm, bsm)
     failures: List[str] = []
     for k, base in sorted(bsm.items()):
         if k[0] == CALIB_BENCH:
@@ -163,6 +169,59 @@ def check_bench_regression(pr: List[dict], baseline: List[dict], *,
                 f"{k}: wall {r['wall_ms']:.3f}ms > {factor}x baseline "
                 f"{base['wall_ms']:.3f}ms (machine scale {scale:.2f})")
     return failures
+
+
+def format_bench_diff(pr: List[dict], baseline: List[dict], *,
+                      factor: float = 2.0,
+                      min_wall_ms: float = 1.0) -> str:
+    """Markdown baseline-vs-PR table for the CI job summary.
+
+    One row per cell in the union of the two files: baseline and PR
+    wall, the machine-scaled wall ratio, both dispatch counts, and the
+    gate verdict — computed by the SAME ``check_bench_regression``
+    call the gate runs, so the table can never disagree with the exit
+    status.  Baseline-only cells show as coverage failures, PR-only
+    cells as ``new`` (they enter the gate on baseline refresh).
+    """
+    prm = {_key(r): r for r in pr}
+    bsm = {_key(r): r for r in baseline}
+    scale = _machine_scale(prm, bsm)
+    failing = {f.split(": ", 1)[0]
+               for f in check_bench_regression(pr, baseline,
+                                               factor=factor,
+                                               min_wall_ms=min_wall_ms)}
+    lines = [
+        f"### Bench smoke vs baseline (gate {factor:g}x, "
+        f"machine scale {scale:.2f})",
+        "",
+        "| cell | baseline wall (ms) | PR wall (ms) | wall ratio "
+        "| baseline disp | PR disp | verdict |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for k in sorted(set(prm) | set(bsm)):
+        b, r = bsm.get(k), prm.get(k)
+        cell = "`" + "/".join(str(x) for x in k) + "`"
+        bw = f"{b['wall_ms']:.3f}" if b else "—"
+        pw = f"{r['wall_ms']:.3f}" if r else "—"
+        bd = f"{b['dispatches']:.0f}" if b else "—"
+        pd = f"{r['dispatches']:.0f}" if r else "—"
+        ratio = (f"{r['wall_ms'] / (b['wall_ms'] * scale):.2f}"
+                 if b and r and b["wall_ms"] > 0 else "—")
+        if k[0] == CALIB_BENCH:
+            verdict = "calib"
+        elif b is None:
+            verdict = "new (gates after refresh)"
+        elif r is None:
+            verdict = "❌ missing (coverage shrank)"
+        elif str(k) in failing:
+            verdict = "❌ REGRESSION"
+        elif b["wall_ms"] < min_wall_ms:
+            verdict = "✅ OK (wall exempt, sub-ms)"
+        else:
+            verdict = "✅ OK"
+        lines.append(f"| {cell} | {bw} | {pw} | {ratio} "
+                     f"| {bd} | {pd} | {verdict} |")
+    return "\n".join(lines) + "\n"
 
 
 def calib_record(seed: int = 0) -> dict:

@@ -15,7 +15,10 @@ Record schema and gate semantics: benchmarks/common.py.  Cells come
 from ``bench_strategies.smoke_records`` (fused VPU + mixed VPU/MXU
 dispatch wall/launch counts: resident AND ``_dma``-staged lowerings,
 CGCM-``_merged`` and autotuned ``_tuned`` cells on the powerlaw and
-``_skew`` suites), ``bench_codegen_overhead.smoke_records``
+``_skew`` suites), ``bench_attn.smoke_records`` (the fused
+sparse-attention sandwich, DESIGN.md §13: resident/``_dma``/sharded
+``attn_fused*`` wall + launch cells on the longformer mask plus the
+``_skew``/``_merged`` suite), ``bench_codegen_overhead.smoke_records``
 (plan/pack/tune host cost via ``kernels.ops.BUILD_SECONDS``) and
 ``bench_serve.smoke_records`` (the serving tier's Poisson-stream
 ``serve_p50``/``serve_p99`` latency and ``serve_cache`` miss-count
@@ -25,21 +28,25 @@ wall-clock across runner speeds.
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 
 try:
-    from . import bench_codegen_overhead, bench_serve, bench_strategies
+    from . import (bench_attn, bench_codegen_overhead, bench_serve,
+                   bench_strategies)
     from .common import (calib_record, check_bench_regression,
-                         load_bench_json, write_bench_json)
+                         format_bench_diff, load_bench_json,
+                         write_bench_json)
 except ImportError:          # plain-script run: python benchmarks/smoke.py
     import pathlib
     _ROOT = pathlib.Path(__file__).resolve().parents[1]
     sys.path.insert(0, str(_ROOT / "src"))
     sys.path.insert(0, str(_ROOT))
-    from benchmarks import (bench_codegen_overhead, bench_serve,
-                            bench_strategies)
+    from benchmarks import (bench_attn, bench_codegen_overhead,
+                            bench_serve, bench_strategies)
     from benchmarks.common import (calib_record, check_bench_regression,
-                                   load_bench_json, write_bench_json)
+                                   format_bench_diff, load_bench_json,
+                                   write_bench_json)
 
 BASELINE = "BENCH_baseline.json"
 
@@ -47,6 +54,7 @@ BASELINE = "BENCH_baseline.json"
 def collect_records() -> list:
     records = [calib_record()]
     records += bench_strategies.smoke_records()
+    records += bench_attn.smoke_records()
     records += bench_codegen_overhead.smoke_records()
     records += bench_serve.smoke_records()
     return records
@@ -63,6 +71,10 @@ def main(argv=None) -> int:
                     help="regression threshold (default 2x)")
     ap.add_argument("--update-baseline", action="store_true",
                     help="write records to the baseline path instead")
+    ap.add_argument("--summary", default="",
+                    help="also write the baseline-vs-PR markdown diff "
+                         "table here (defaults to $GITHUB_STEP_SUMMARY "
+                         "when set, as in CI)")
     args = ap.parse_args(argv)
 
     records = collect_records()
@@ -78,6 +90,15 @@ def main(argv=None) -> int:
         baseline = load_bench_json(args.baseline)
         failures = check_bench_regression(records, baseline,
                                           factor=args.factor)
+        # publish the baseline-vs-PR diff where reviewers look: the CI
+        # job summary when running under Actions, else --summary's path
+        summary_path = args.summary or os.environ.get(
+            "GITHUB_STEP_SUMMARY")
+        if summary_path:
+            with open(summary_path, "a") as f:
+                f.write(format_bench_diff(records, baseline,
+                                          factor=args.factor))
+            print(f"[smoke] wrote diff table to {summary_path}")
         if failures:
             # a contention burst on a shared runner can double one
             # interpret-mode cell even at min-of-N; a REAL regression

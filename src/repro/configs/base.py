@@ -28,6 +28,13 @@ class ArchConfig:
     qk_norm: bool = False
     sliding_window: Optional[int] = None
     rope_theta: float = 1e4
+    # sparse attention ("sattn" slots): causal local window plus
+    # longformer-style global key columns, lowered through the fused
+    # descriptor-stream sandwich (DESIGN.md §13).  Distinct from
+    # ``sliding_window`` on purpose: sattn keeps a full-length KV cache
+    # (rolling eviction would drop the global tokens).
+    sparse_attn_window: Optional[int] = None
+    sparse_attn_global: int = 0
     # layer pattern: slot kinds repeated over depth
     pattern: Tuple[str, ...] = ("attn",)
     # MoE
@@ -71,9 +78,12 @@ class ArchConfig:
 
     @property
     def sub_quadratic(self) -> bool:
-        """Eligible for long_500k: SSM/hybrid state layers or SWA."""
+        """Eligible for long_500k: SSM/hybrid state layers, SWA, or
+        sparse attention (O(S*(window+global)) scores)."""
         return (any(k in ("mamba", "rwkv") for k in self.pattern)
-                or self.sliding_window is not None)
+                or self.sliding_window is not None
+                or (self.sparse_attn_window is not None
+                    and "sattn" in self.pattern))
 
     def ffn_kind(self, slot_idx: int) -> str:
         if self.pattern[slot_idx] == "rwkv":
@@ -89,7 +99,9 @@ class ArchConfig:
         total = V * D * 2            # embed + head
         for i, kind in enumerate(self.pattern):
             n = self.num_periods
-            if kind == "attn":
+            if kind in ("attn", "sattn"):
+                # sattn reuses the attn projection stack; only the
+                # score/AV contraction differs (mask-structured)
                 total += n * (D * hd * (H + 2 * KV) + H * hd * D + 2 * D)
                 if self.qkv_bias:
                     total += n * hd * (H + 2 * KV)
@@ -188,6 +200,8 @@ def reduced(cfg: ArchConfig) -> ArchConfig:
         # consistency tests; production keeps 1.25
         capacity_factor=4.0,
         sliding_window=8 if cfg.sliding_window else None,
+        sparse_attn_window=8 if cfg.sparse_attn_window else None,
+        sparse_attn_global=min(cfg.sparse_attn_global, 2),
         mamba_state=4,
         num_image_tokens=8 if cfg.num_image_tokens else 0,
         dtype="float32",

@@ -3,16 +3,23 @@ from .csr import BCSRMatrix, CSRMatrix, random_csr
 from .ccm import ccm_register_decomposition, plan_d_tiles, DTiling
 from .plan import (SpmmPlan, MixedPlan, MxuBlockRow, FusedEllWorkspace,
                    ShardedFusedWorkspace, BatchedFusedWorkspace,
-                   StackedFusedTables, build_fused_workspace,
+                   StackedFusedTables, SparseEinsumSpec, SPMM_EINSUM,
+                   SPMM_MIXED_EINSUM, SPARSE_ATTN_EINSUM,
+                   SPARSE_ATTN_MIXED_EINSUM, build_fused_workspace,
+                   build_einsum_workspace,
                    build_mixed_plan, build_sharded_workspace,
                    build_batched_workspace, stack_fused_workspaces,
                    build_plan, build_workspace, choose_merge_width,
-                   tag_block_rows, partition_rows_for_chips, STRATEGIES,
+                   tag_block_rows, partition_rows_for_chips,
+                   workspace_row_map, sharded_workspace_row_maps,
+                   STRATEGIES,
                    PLAN_STAGES, MAX_MERGE_WIDTH, MXU_TAG, VPU_TAG)
 from .jit_cache import (GLOBAL_CACHE, JitCache, clear_global_cache,
                         mesh_fingerprint)
-from .spmm import (CompiledSpmm, CompiledBatchedSpmm, compile_spmm,
-                   compile_batched_spmm, spmm, chip_mesh,
+from .spmm import (CompiledSpmm, CompiledBatchedSpmm,
+                   CompiledSparseAttention, compile_spmm,
+                   compile_batched_spmm, compile_sparse_attention,
+                   sparse_attention, spmm, chip_mesh,
                    resolve_chip_mesh, BACKENDS, FUSED_BACKENDS,
                    X_SHARDING_MODES)
 from .autotune import (TuneConfig, TuneResult, autotune_spmm,
@@ -24,15 +31,21 @@ __all__ = [
     "ccm_register_decomposition", "plan_d_tiles", "DTiling",
     "SpmmPlan", "MixedPlan", "MxuBlockRow", "FusedEllWorkspace",
     "ShardedFusedWorkspace", "BatchedFusedWorkspace",
-    "StackedFusedTables", "build_fused_workspace", "build_mixed_plan",
+    "StackedFusedTables", "SparseEinsumSpec", "SPMM_EINSUM",
+    "SPMM_MIXED_EINSUM", "SPARSE_ATTN_EINSUM",
+    "SPARSE_ATTN_MIXED_EINSUM",
+    "build_fused_workspace", "build_einsum_workspace", "build_mixed_plan",
     "build_sharded_workspace", "build_batched_workspace",
     "stack_fused_workspaces",
     "build_plan", "build_workspace", "choose_merge_width",
-    "tag_block_rows", "partition_rows_for_chips", "STRATEGIES",
+    "tag_block_rows", "partition_rows_for_chips",
+    "workspace_row_map", "sharded_workspace_row_maps", "STRATEGIES",
     "PLAN_STAGES", "MAX_MERGE_WIDTH", "MXU_TAG", "VPU_TAG",
     "GLOBAL_CACHE", "JitCache", "clear_global_cache", "mesh_fingerprint",
-    "CompiledSpmm", "CompiledBatchedSpmm", "compile_spmm",
-    "compile_batched_spmm", "spmm", "chip_mesh",
+    "CompiledSpmm", "CompiledBatchedSpmm", "CompiledSparseAttention",
+    "compile_spmm",
+    "compile_batched_spmm", "compile_sparse_attention",
+    "sparse_attention", "spmm", "chip_mesh",
     "resolve_chip_mesh", "BACKENDS", "FUSED_BACKENDS", "X_SHARDING_MODES",
     "TuneConfig", "TuneResult", "autotune_spmm",
     "autotune_spmm_with_result", "default_candidates",

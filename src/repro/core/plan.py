@@ -442,31 +442,104 @@ def build_fused_workspace(plan, *, merge_width: int = 1
 PLAN_STAGES = ("build", "merge", "tag", "pack", "shard")
 
 
-def build_workspace(row_ptr: np.ndarray, col_indices: np.ndarray, shape,
-                    d: int, *, strategy: str = "nnz_split",
-                    row_block: int = 8, mixed: bool = False, bk: int = 8,
-                    mxu_gain: float = 4.0, merge_threshold: int = 0,
-                    merge_width: Optional[int] = None,
-                    fingerprint: str = "", max_dt: int = 512,
-                    merge_target_segments: int = 16
-                    ) -> FusedEllWorkspace:
-    """Run the single-chip plan-transform pipeline end to end:
+@dataclasses.dataclass(frozen=True)
+class SparseEinsumSpec:
+    """What a fused sparse contraction asks of the plan pipeline.
+
+    Every stage in :data:`PLAN_STAGES` consumes only the sparsity
+    pattern — descriptor stream, slot packing, CGCM merging, per-chip
+    DMA windows and sharding are identical whether the per-trip compute
+    is ``y += a·x`` (SpMM) or the attention sandwich ``softmax(mask ⊙
+    Q·Kᵀ)·V``.  The spec records the parts that DO differ so the
+    dispatch layer can bind the right kernel body and build the right
+    operand gathers (DESIGN.md §13):
+
+    ``mixed``            run the tag stage (MXU block-rows join the
+                         descriptor stream).
+    ``row_operands``     dense operands indexed by the OUTPUT row (e.g.
+                         attention's Q) — each needs a
+                         :func:`workspace_row_map` gather into
+                         workspace order before the kernel.
+    ``col_operands``     dense operands indexed by the sparse column
+                         (SpMM's X; attention's K and V) — addressed by
+                         the shared column stream, no extra map.
+    ``segment_softmax``  normalize each row segment in-register with a
+                         running max/rescale across its trips.
+    """
+    name: str                       # kernel family: "spmm" | "sattn"
+    mixed: bool = False
+    row_operands: int = 0
+    col_operands: int = 1
+    segment_softmax: bool = False
+
+
+SPMM_EINSUM = SparseEinsumSpec(name="spmm")
+SPMM_MIXED_EINSUM = SparseEinsumSpec(name="spmm", mixed=True)
+SPARSE_ATTN_EINSUM = SparseEinsumSpec(
+    name="sattn", row_operands=1, col_operands=2, segment_softmax=True)
+SPARSE_ATTN_MIXED_EINSUM = dataclasses.replace(
+    SPARSE_ATTN_EINSUM, mixed=True)
+
+
+def workspace_row_map(inv_perm, ws_rows: int) -> np.ndarray:
+    """Forward permutation for row-indexed operands (DESIGN.md §13).
+
+    ``inv_perm`` maps output row ``i`` to its workspace slot; this is
+    the inverse view: ``row_map[j]`` is the output row that workspace
+    slot ``j`` computes, or the sentinel ``m = len(inv_perm)`` on
+    padding slots — callers append one zero row to the operand so the
+    sentinel gathers zeros.  With it, an operand indexed by output row
+    (attention's Q) is staged into workspace order by ONE host-free
+    gather, the mirror of the ``y_ws[inv_perm]`` output gather.
+    """
+    inv = np.asarray(inv_perm, dtype=np.int64)
+    m = int(inv.shape[0])
+    row_map = np.full(int(ws_rows), m, dtype=np.int64)
+    row_map[inv] = np.arange(m, dtype=np.int64)
+    return row_map.astype(np.int32)
+
+
+def sharded_workspace_row_maps(sw: "ShardedFusedWorkspace") -> np.ndarray:
+    """Per-chip :func:`workspace_row_map` stack, shape (C, ws_rows).
+
+    The sharded workspace's ``inv_perm`` is global over the flattened
+    ``(C * ws_rows)`` workspace, so one flat map reshapes into the
+    per-chip tables ``shard_map`` feeds each chip."""
+    flat = workspace_row_map(sw.inv_perm, sw.n_chips * sw.ws_rows)
+    return flat.reshape(sw.n_chips, sw.ws_rows)
+
+
+def build_einsum_workspace(spec: SparseEinsumSpec, row_ptr: np.ndarray,
+                           col_indices: np.ndarray, shape, d: int, *,
+                           strategy: str = "nnz_split",
+                           row_block: int = 8, bk: int = 8,
+                           mxu_gain: float = 4.0,
+                           merge_threshold: int = 0,
+                           merge_width: Optional[int] = None,
+                           fingerprint: str = "", max_dt: int = 512,
+                           merge_target_segments: int = 16
+                           ) -> FusedEllWorkspace:
+    """Run the single-chip plan-transform pipeline end to end for any
+    sparse einsum (DESIGN.md §13):
 
       merge  :func:`choose_merge_width` (skipped when ``merge_width``
              is pinned — the sharded path decides globally, the
              autotuner per candidate)
       build / tag  :func:`build_plan`, or :func:`build_mixed_plan`
-             (``mixed=True``) whose tag stage is
+             (``spec.mixed``) whose tag stage is
              :func:`tag_block_rows`
       pack   :func:`build_fused_workspace` → :func:`_pack_workspace`
 
-    Every stage is also callable on its own; this wrapper is the
+    The spec only steers the tag stage here — the packed workspace is
+    operand-agnostic by construction (it encodes the pattern, never the
+    contraction), which is exactly why SpMM and sparse attention share
+    it.  Every stage is also callable on its own; this wrapper is the
     canonical composition the dispatch layer and the benches use.
     """
     if merge_width is None:
         merge_width = choose_merge_width(
             row_ptr, row_block=row_block, merge_threshold=merge_threshold)
-    if mixed:
+    if spec.mixed:
         plan = build_mixed_plan(
             row_ptr, col_indices, shape, d, strategy=strategy,
             row_block=row_block, bk=bk, mxu_gain=mxu_gain,
@@ -478,6 +551,25 @@ def build_workspace(row_ptr: np.ndarray, col_indices: np.ndarray, shape,
             row_block=row_block, fingerprint=fingerprint, max_dt=max_dt,
             merge_target_segments=merge_target_segments)
     return build_fused_workspace(plan, merge_width=merge_width)
+
+
+def build_workspace(row_ptr: np.ndarray, col_indices: np.ndarray, shape,
+                    d: int, *, strategy: str = "nnz_split",
+                    row_block: int = 8, mixed: bool = False, bk: int = 8,
+                    mxu_gain: float = 4.0, merge_threshold: int = 0,
+                    merge_width: Optional[int] = None,
+                    fingerprint: str = "", max_dt: int = 512,
+                    merge_target_segments: int = 16
+                    ) -> FusedEllWorkspace:
+    """The SpMM specialization of :func:`build_einsum_workspace` —
+    kept as the historical entry point for ``A·X`` callers."""
+    spec = SPMM_MIXED_EINSUM if mixed else SPMM_EINSUM
+    return build_einsum_workspace(
+        spec, row_ptr, col_indices, shape, d, strategy=strategy,
+        row_block=row_block, bk=bk, mxu_gain=mxu_gain,
+        merge_threshold=merge_threshold, merge_width=merge_width,
+        fingerprint=fingerprint, max_dt=max_dt,
+        merge_target_segments=merge_target_segments)
 
 
 # ---------------------------------------------------------------------------

@@ -42,11 +42,13 @@ from jax.sharding import Mesh
 from . import ccm
 from .csr import CSRMatrix
 from .jit_cache import GLOBAL_CACHE, JitCache, mesh_fingerprint
-from .plan import (BatchedFusedWorkspace, MixedPlan,
+from .plan import (SPARSE_ATTN_EINSUM, SPARSE_ATTN_MIXED_EINSUM,
+                   BatchedFusedWorkspace, MixedPlan,
                    ShardedFusedWorkspace, SpmmPlan,
-                   build_batched_workspace, build_fused_workspace,
-                   build_mixed_plan, build_plan,
-                   build_sharded_workspace, choose_merge_width)
+                   build_batched_workspace, build_einsum_workspace,
+                   build_fused_workspace, build_mixed_plan, build_plan,
+                   build_sharded_workspace, choose_merge_width,
+                   sharded_workspace_row_maps, workspace_row_map)
 from ..kernels.ops import resolve_interpret, resolve_staging
 
 BACKENDS = ("pallas_ell", "pallas_bcsr", "ref", "dense", "auto")
@@ -777,3 +779,309 @@ def spmm(a: CSRMatrix, x, *, strategy: str = "nnz_split",
                             candidates=candidates, top_k=top_k,
                             cache=cache)
     return compiled(jnp.asarray(a.vals), x)
+
+
+class CompiledSparseAttention:
+    """Structure-specialized sparse attention: out = softmax(mask ⊙
+    (Q·Kᵀ)) · V, lowered as ONE fused pallas_call (per chip) through
+    the same descriptor stream as SpMM (DESIGN.md §13).
+
+    ``a`` is the (m queries × n keys) mask pattern; its values are the
+    mask weights ``w`` (1.0 for a plain binary mask), giving
+    ``p ∝ w · exp(z)`` — softmax over the present entries.  Weights
+    must be non-negative: ``w <= 0`` entries are treated as absent by
+    the running max, and the cross-trip clamp rescale is only exact
+    under that contract.  The plan
+    pipeline is the sparse-einsum composition
+    (:func:`~repro.core.plan.build_einsum_workspace`): the descriptor
+    stream, slot packing, CGCM merging and sharding stages are exactly
+    SpMM's; only the per-trip body (SDDMM score → running softmax →
+    S·V) and the workspace-ordered Q gather
+    (:func:`~repro.core.plan.workspace_row_map`) differ.  ``S`` never
+    materializes in HBM.
+
+    Gradients run through ``jax.custom_vjp``: the forward is the fused
+    kernel, the backward differentiates the pure-jnp reference (the
+    same math, recomputed — the descriptor stream is forward-only
+    today).  K/V are replicated on the sharded path (attention rows
+    read arbitrary key columns), so ``x_sharding`` has no "rows" mode
+    here.
+    """
+
+    def __init__(self, a: CSRMatrix, dh: int, dv: Optional[int] = None,
+                 *, strategy: str = "nnz_split", backend: str = "auto",
+                 bm: int = 8, interpret: Optional[bool] = None,
+                 mesh: Optional[Mesh] = None,
+                 n_chips: Optional[int] = None, bk: int = 8,
+                 mxu_gain: float = 4.0, staging: Optional[str] = None,
+                 merge_threshold: int = 0,
+                 sm_scale: Optional[float] = None,
+                 cache: JitCache = GLOBAL_CACHE):
+        self.backend = _resolve_backend(
+            backend, sharded=mesh is not None or n_chips is not None)
+        if self.backend == "dense":
+            raise ValueError(
+                "sparse attention has no dense backend — use ref as the "
+                "oracle")
+        self.strategy = strategy
+        self.bm = bm
+        self.bk = bk
+        self.mxu_gain = mxu_gain
+        self.merge_threshold = int(merge_threshold)
+        self.interpret = resolve_interpret(interpret)
+        self.staging = _resolve_staging_for(self.backend, staging,
+                                            self.interpret)
+        self.mesh = resolve_chip_mesh(mesh, n_chips)
+        self.n_chips = None if self.mesh is None else int(self.mesh.size)
+        if self.mesh is not None and self.backend not in FUSED_BACKENDS:
+            raise ValueError(
+                f"mesh/n_chips sharding is a fused-dispatch feature "
+                f"({'/'.join(FUSED_BACKENDS)}); backend="
+                f"{self.backend!r} is single-device")
+        self.cache = cache
+        self.dh = int(dh)
+        self.dv = int(dh) if dv is None else int(dv)
+        self.sm_scale = (float(dh) ** -0.5 if sm_scale is None
+                         else float(sm_scale))
+        self.shape = a.shape
+        self._row_ptr = a.row_ptr
+        self._col_indices = a.col_indices
+        self._fingerprint = a.fingerprint
+        self._nnz = a.nnz
+        # value-dim tiling drives the kernel grid's second axis; the
+        # head dim is only lane-padded (scores reduce over it whole)
+        self.d_tiling = ccm.plan_d_tiles(self.dv, rows_in_flight=bm)
+        self._dh_pad = ccm.plan_d_tiles(self.dh).d_pad
+        # both branches slice K/V rows — the MXU branch by (bk,) panels
+        self._kv_rows_pad = -(-a.shape[1] // bk) * bk
+
+        self._fused: Optional[_FusedConsts] = None
+        self._sharded: Optional[_ShardedConsts] = None
+        self._row_map: Optional[jax.Array] = None   # ws slot -> Q row
+        if self.backend in FUSED_BACKENDS and self.mesh is not None:
+            sw: ShardedFusedWorkspace = build_sharded_workspace(
+                a.row_ptr, a.col_indices, a.shape, self.dv,
+                n_chips=self.n_chips, strategy=strategy, row_block=bm,
+                fingerprint=a.fingerprint, backend=self.backend,
+                bk=bk, mxu_gain=mxu_gain, x_sharding="replicated",
+                merge_threshold=self.merge_threshold)
+            self.sharded_workspace = sw
+            self._sharded = _ShardedConsts(
+                blk_off=jnp.asarray(sw.blk_off),
+                blk_L=jnp.asarray(sw.blk_L),
+                cols_flat=jnp.asarray(sw.cols_flat),
+                gather_flat=jnp.asarray(sw.gather_flat),
+                inv_perm=jnp.asarray(sw.inv_perm),
+                ws_rows=sw.ws_rows,
+                num_blocks=sw.num_blocks,
+                n_chips=sw.n_chips,
+                mesh=self.mesh,
+                blk_tag=jnp.asarray(sw.blk_tag),
+                blk_coff=jnp.asarray(sw.blk_coff),
+                max_span=sw.max_span,
+                max_cspan=sw.max_cspan,
+                chip_span=tuple(int(s) for s in sw.chip_span),
+                chip_cspan=tuple(int(s) for s in sw.chip_cspan),
+                merge_width=sw.merge_width)
+            self._row_map = jnp.asarray(sharded_workspace_row_maps(sw))
+            _record_build(
+                sum(p.plan_seconds for p in sw.shard_plans),
+                sw.pack_seconds)
+        elif self.backend in FUSED_BACKENDS:
+            spec = (SPARSE_ATTN_MIXED_EINSUM
+                    if self.backend == "pallas_bcsr"
+                    else SPARSE_ATTN_EINSUM)
+            ws = build_einsum_workspace(
+                spec, a.row_ptr, a.col_indices, a.shape, self.dv,
+                strategy=strategy, row_block=bm, bk=bk,
+                mxu_gain=mxu_gain, merge_threshold=self.merge_threshold,
+                fingerprint=a.fingerprint)
+            self.workspace = ws
+            self._fused = _FusedConsts(
+                blk_off=jnp.asarray(ws.blk_off),
+                blk_L=jnp.asarray(ws.blk_L),
+                cols_flat=jnp.asarray(ws.cols_flat),
+                gather_flat=jnp.asarray(ws.gather_flat),
+                inv_perm=jnp.asarray(ws.inv_perm),
+                num_blocks=ws.num_blocks,
+                blk_tag=jnp.asarray(ws.blk_tag),
+                blk_coff=jnp.asarray(ws.blk_coff),
+                max_span=ws.max_span,
+                max_cspan=ws.max_cspan,
+                merge_width=ws.merge_width)
+            self._row_map = jnp.asarray(
+                workspace_row_map(ws.inv_perm, ws.ws_rows))
+            _record_build(0.0, ws.pack_seconds)
+        elif self.backend != "ref":
+            raise ValueError(self.backend)
+
+        self._erows: Optional[np.ndarray] = None
+
+        fwd = self._forward
+        ref = self._ref_forward
+
+        @jax.custom_vjp
+        def _apply(vals, q, k, v):
+            return fwd(vals, q, k, v)
+
+        def _apply_fwd(vals, q, k, v):
+            return fwd(vals, q, k, v), (vals, q, k, v)
+
+        def _apply_bwd(res, dy):
+            _, vjp = jax.vjp(ref, *res)
+            return vjp(dy)
+
+        _apply.defvjp(_apply_fwd, _apply_bwd)
+        self._apply = _apply
+
+    def _expanded_rows(self) -> np.ndarray:
+        # host numpy on purpose: _ref_forward may first run inside a
+        # caller's trace (the model layers call artifacts under scan),
+        # and a jnp constant cached on self there would leak the trace
+        if self._erows is None:
+            self._erows = np.repeat(
+                np.arange(self.shape[0]),
+                np.diff(self._row_ptr)).astype(np.int32)
+        return self._erows
+
+    def _ref_forward(self, vals, q, k, v):
+        """Pure-jnp oracle (and the backward's recompute): the same
+        ``p ∝ w · exp(z)`` semantics in segment ops, with the identical
+        NaN-free clamp — ``w > 0`` entries never clamp (the segment max
+        dominates), ``w == 0`` entries are killed before they can
+        overflow."""
+        m, _ = self.shape
+        rows = self._expanded_rows()
+        cols = jnp.asarray(self._col_indices)
+        w = vals.astype(jnp.float32)
+        z = jnp.sum(q[rows].astype(jnp.float32)
+                    * k[cols].astype(jnp.float32),
+                    axis=-1) * self.sm_scale
+        zm = jnp.where(w > 0, z, -1e30)
+        zmax = jax.ops.segment_max(zm, rows, num_segments=m)
+        zmax = jnp.where(jnp.isfinite(zmax), zmax, 0.0)  # empty rows
+        p = w * jnp.exp(jnp.minimum(z - zmax[rows], 0.0))
+        denom = jax.ops.segment_sum(p, rows, num_segments=m)
+        out = jax.ops.segment_sum(
+            p[:, None] * v[cols].astype(jnp.float32), rows,
+            num_segments=m)
+        return out / jnp.where(denom > 0, denom, 1.0)[:, None]
+
+    def _operands(self, vals, q, k, v):
+        """Stage the dense operands for the kernel: scale folded into
+        Q, lane padding on both widths, K/V rows padded to the
+        block-column grid, and the extended (+ one zero row / slot)
+        forms the sentinel gathers rely on."""
+        vals_ext = jnp.concatenate(
+            [vals.astype(jnp.float32), jnp.zeros((1,), jnp.float32)])
+        q_pad = ccm.pad_cols(q.astype(jnp.float32) * self.sm_scale,
+                             self._dh_pad)
+        q_ext = jnp.concatenate(
+            [q_pad, jnp.zeros((1, self._dh_pad), jnp.float32)])
+        k_pad = ccm.pad_cols(k.astype(jnp.float32), self._dh_pad)
+        v_pad = ccm.pad_cols(v.astype(jnp.float32),
+                             self.d_tiling.d_pad)
+        if k_pad.shape[0] < self._kv_rows_pad:
+            grow = self._kv_rows_pad - k_pad.shape[0]
+            k_pad = jnp.pad(k_pad, ((0, grow), (0, 0)))
+            v_pad = jnp.pad(v_pad, ((0, grow), (0, 0)))
+        return vals_ext, q_ext, k_pad, v_pad
+
+    # -- forward -----------------------------------------------------------
+    def _forward(self, vals, q, k, v):
+        m, n = self.shape
+        assert q.shape == (m, self.dh), (q.shape, m, self.dh)
+        assert k.shape == (n, self.dh), (k.shape, n, self.dh)
+        assert v.shape == (n, self.dv), (v.shape, n, self.dv)
+        if self.backend == "ref":
+            return self._ref_forward(vals, q, k, v)
+        vals_ext, q_ext, k_pad, v_pad = self._operands(vals, q, k, v)
+        if self._sharded is not None:
+            from ..kernels.ops import attn_fused_sharded_op
+            sw = self._sharded
+            if sw.num_blocks == 0:
+                return jnp.zeros((m, self.dv), jnp.float32)
+            vals_flat = vals_ext[sw.gather_flat]
+            q_ws = q_ext[self._row_map]       # (C, ws_rows, dh_pad)
+            y_ws = attn_fused_sharded_op(
+                sw.blk_tag, sw.blk_off, sw.blk_coff, sw.blk_L,
+                sw.cols_flat, vals_flat, q_ws, k_pad, v_pad,
+                mesh=sw.mesh, bm=self.bm, bk=self.bk,
+                mw=sw.merge_width, interpret=self.interpret,
+                staging=self.staging, span=sw.chip_span,
+                cspan=sw.chip_cspan)
+            y_flat = y_ws.reshape(sw.n_chips * sw.ws_rows, -1)
+            return y_flat[sw.inv_perm, :self.dv]
+        from ..kernels.ops import attn_fused_op
+        fw = self._fused
+        if fw.num_blocks == 0:
+            return jnp.zeros((m, self.dv), jnp.float32)
+        vals_flat = vals_ext[fw.gather_flat]
+        q_ws = q_ext[self._row_map]           # (ws_rows, dh_pad)
+        y_ws = attn_fused_op(
+            fw.blk_tag, fw.blk_off, fw.blk_coff, fw.blk_L,
+            fw.cols_flat, vals_flat, q_ws, k_pad, v_pad, bm=self.bm,
+            bk=self.bk, mw=fw.merge_width, interpret=self.interpret,
+            staging=self.staging, span=fw.max_span, cspan=fw.max_cspan)
+        return y_ws[fw.inv_perm, :self.dv]
+
+    def __call__(self, vals, q, k, v):
+        return self._apply(vals, q, k, v)
+
+
+def compile_sparse_attention(a: CSRMatrix, dh: int,
+                             dv: Optional[int] = None, *,
+                             strategy: str = "nnz_split",
+                             backend: str = "auto", bm: int = 8,
+                             interpret: Optional[bool] = None,
+                             mesh: Optional[Mesh] = None,
+                             n_chips: Optional[int] = None,
+                             bk: int = 8, mxu_gain: float = 4.0,
+                             staging: Optional[str] = None,
+                             merge_threshold: int = 0,
+                             sm_scale: Optional[float] = None,
+                             cache: JitCache = GLOBAL_CACHE
+                             ) -> CompiledSparseAttention:
+    """Build (or fetch) the structure-specialized sparse-attention
+    artifact (DESIGN.md §13) — keyed like ``compile_spmm``, under the
+    ``"attn"`` family: the mask fingerprint, BOTH runtime widths
+    (head dim and value dim), the softmax scale, and every resolved
+    knob join the cache key, so a pattern served at a new head size is
+    a new artifact while repeated (B, H) instances of one layer hit."""
+    backend = _resolve_backend(
+        backend, sharded=mesh is not None or n_chips is not None)
+    interpret = resolve_interpret(interpret)
+    staging = _resolve_staging_for(backend, staging, interpret)
+    mesh = resolve_chip_mesh(mesh, n_chips)
+    merge_threshold = int(merge_threshold)
+    dv = int(dh) if dv is None else int(dv)
+    sm_scale = float(dh) ** -0.5 if sm_scale is None else float(sm_scale)
+    key = ("attn", a.fingerprint, int(dh), dv, strategy, backend, bm,
+           bk, mxu_gain, interpret, staging, merge_threshold, sm_scale,
+           mesh_fingerprint(mesh))
+    return cache.get_or_build(
+        key, lambda: CompiledSparseAttention(
+            a, dh, dv, strategy=strategy, backend=backend, bm=bm,
+            bk=bk, mxu_gain=mxu_gain, interpret=interpret,
+            staging=staging, merge_threshold=merge_threshold,
+            sm_scale=sm_scale, mesh=mesh, cache=cache))
+
+
+def sparse_attention(a: CSRMatrix, q, k, v, *,
+                     strategy: str = "nnz_split", backend: str = "auto",
+                     bm: int = 8, interpret: Optional[bool] = None,
+                     mesh: Optional[Mesh] = None,
+                     n_chips: Optional[int] = None, bk: int = 8,
+                     mxu_gain: float = 4.0,
+                     staging: Optional[str] = None,
+                     merge_threshold: int = 0,
+                     sm_scale: Optional[float] = None,
+                     cache: JitCache = GLOBAL_CACHE) -> jax.Array:
+    """One-shot convenience: softmax(mask ⊙ (Q·Kᵀ)) · V specialized to
+    the mask's structure and the runtime head/value widths."""
+    compiled = compile_sparse_attention(
+        a, q.shape[1], v.shape[1], strategy=strategy, backend=backend,
+        bm=bm, interpret=interpret, mesh=mesh, n_chips=n_chips, bk=bk,
+        mxu_gain=mxu_gain, staging=staging,
+        merge_threshold=merge_threshold, sm_scale=sm_scale, cache=cache)
+    return compiled(jnp.asarray(a.vals), q, k, v)

@@ -27,10 +27,16 @@
 #   spmm_bcsr               — pre-fusion MXU micro-oracle (global-Kmax
 #                             padding, single dispatch path); retained for
 #                             kernel-level regression sweeps only
+#   attn_fused              — the sparse-attention sandwich: SDDMM →
+#                             in-register segment softmax → S·V through
+#                             the SAME descriptor stream, one dispatch,
+#                             S never in HBM (DESIGN.md §13); _staged
+#                             and _sharded twins mirror the SpMM ones
 #   sddmm                   — backward twin (dA.vals = <dY[row], X[col]>)
 # ops.py wraps each kernel with the resolved interpret flag and the
 # DISPATCH_COUNTS host counter the Table IV invariant tests read.
 from . import ops, ref
+from .attn_fused import attn_fused, attn_fused_sharded, attn_fused_staged
 from .spmm_csr import spmm_ell_segment
 from .spmm_ell_fused import (spmm_ell_fused, spmm_ell_fused_sharded,
                              spmm_ell_fused_staged)
@@ -39,7 +45,8 @@ from .spmm_bcsr_fused import (spmm_bcsr_fused, spmm_bcsr_fused_sharded,
                               spmm_bcsr_fused_staged)
 from .sddmm import sddmm, sddmm_csr
 
-__all__ = ["ops", "ref", "spmm_ell_segment", "spmm_ell_fused",
+__all__ = ["ops", "ref", "attn_fused", "attn_fused_sharded",
+           "attn_fused_staged", "spmm_ell_segment", "spmm_ell_fused",
            "spmm_ell_fused_sharded", "spmm_ell_fused_staged",
            "spmm_bcsr", "spmm_bcsr_fused", "spmm_bcsr_fused_sharded",
            "spmm_bcsr_fused_staged", "sddmm", "sddmm_csr"]

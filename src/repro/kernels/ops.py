@@ -18,6 +18,7 @@ import collections
 
 import jax
 
+from .attn_fused import attn_fused, attn_fused_sharded, attn_fused_staged
 from .spmm_csr import spmm_ell_segment
 from .spmm_ell_fused import (_chip_windows, spmm_ell_fused,
                              spmm_ell_fused_sharded, spmm_ell_fused_staged)
@@ -164,6 +165,59 @@ def spmm_ell_fused_sharded_op(blk_off, blk_L, cols_flat, vals_flat, x, *,
                                   staging=staging, span=span, cspan=cspan,
                                   x_sharding=x_sharding, x_send=x_send,
                                   x_recv=x_recv)
+
+
+def attn_fused_op(blk_tag, blk_off, blk_coff, blk_L, cols_flat,
+                  vals_flat, q_ws, k, v, *, bm: int = 8, bk: int = 8,
+                  mw: int = 1, interpret=None, staging=None,
+                  span: int = 0, cspan: int = 0):
+    """ONE dispatch for the whole sparse-attention sandwich (SDDMM →
+    masked softmax → SpMM, DESIGN.md §13); staged launches also count
+    under ``attn_fused_dma``, CGCM-merged ones under
+    ``attn_fused_merged`` — the same accounting shape as the SpMM
+    wrappers so the Table IV invariant tests extend unchanged."""
+    interpret = resolve_interpret(interpret)
+    staging = _resolve_op_staging(staging, interpret, span, cspan)
+    DISPATCH_COUNTS["attn_fused"] += 1
+    if mw > 1:
+        DISPATCH_COUNTS["attn_fused_merged"] += 1
+    if staging == "dma":
+        DISPATCH_COUNTS["attn_fused_dma"] += 1
+        return attn_fused_staged(blk_tag, blk_off, blk_coff, blk_L,
+                                 cols_flat, vals_flat, q_ws, k, v,
+                                 span=span, cspan=cspan, bm=bm, bk=bk,
+                                 mw=mw, interpret=interpret)
+    return attn_fused(blk_tag, blk_off, blk_coff, blk_L, cols_flat,
+                      vals_flat, q_ws, k, v, bm=bm, bk=bk, mw=mw,
+                      interpret=interpret)
+
+
+def attn_fused_sharded_op(blk_tag, blk_off, blk_coff, blk_L, cols_flat,
+                          vals_flat, q_ws, k, v, *, mesh, bm: int = 8,
+                          bk: int = 8, mw: int = 1, interpret=None,
+                          staging=None, span=0, cspan=0):
+    """One fused attention dispatch per chip: counts ``mesh.size``
+    pallas_calls under ``attn_fused`` plus one ``attn_fused_sharded``
+    wrapper call, ``mesh.size`` under ``attn_fused_dma`` when staged —
+    K/V are replicated, so there is no ``_xshard`` variant here."""
+    interpret = resolve_interpret(interpret)
+    span = _chip_windows(span, mesh.size)
+    cspan = _chip_windows(cspan, mesh.size)
+    staging = _resolve_op_staging(staging, interpret, min(span),
+                                  min(cspan))
+    DISPATCH_COUNTS["attn_fused"] += mesh.size
+    DISPATCH_COUNTS["attn_fused_sharded"] += 1
+    if mw > 1:
+        DISPATCH_COUNTS["attn_fused_merged"] += mesh.size
+    if staging == "dma":
+        DISPATCH_COUNTS["attn_fused_dma"] += mesh.size
+    else:
+        span = cspan = (0,) * mesh.size   # resident ignores the windows
+    return attn_fused_sharded(blk_tag, blk_off, blk_coff, blk_L,
+                              cols_flat, vals_flat, q_ws, k, v,
+                              mesh=mesh, bm=bm, bk=bk, mw=mw,
+                              interpret=interpret, staging=staging,
+                              span=span, cspan=cspan)
 
 
 def spmm_bcsr_op(block_cols_pad, block_vals_pad, x, *, kmax: int,

@@ -73,10 +73,20 @@ def sddmm(rows_pad: jax.Array, cols_pad: jax.Array, dy: jax.Array,
     return out.reshape(-1)
 
 
-def sddmm_csr(a, dy, x, *, T: int = 128, interpret: bool = True):
-    """Convenience wrapper: CSRMatrix structure -> dvals (nnz,)."""
+def sddmm_csr(a, dy, x, *, T: int = 128, interpret=None):
+    """Convenience wrapper: CSRMatrix structure -> dvals (nnz,).
+
+    ``interpret=None`` auto-resolves like the fused kernels
+    (:func:`~repro.kernels.ops.resolve_interpret`): compiled on a real
+    TPU backend, interpreted elsewhere — the old ``interpret=True``
+    default silently ran the production path interpreted on TPU.  The
+    resolved flag is returned to callers via the op wrapper so it lands
+    in any cache key alongside the kernel's other knobs.
+    """
     import numpy as np
     from ..core import ccm
+    from .ops import DISPATCH_COUNTS, resolve_interpret
+    interpret = resolve_interpret(interpret)
     rows = np.repeat(np.arange(a.m), a.row_lengths).astype(np.int32)
     cols = a.col_indices.astype(np.int32)
     nnz = rows.shape[0]
@@ -89,6 +99,7 @@ def sddmm_csr(a, dy, x, *, T: int = 128, interpret: bool = True):
     tiling = ccm.plan_d_tiles(d)
     dy_p = ccm.pad_cols(dy, tiling.d_pad)
     x_p = ccm.pad_cols(x, tiling.d_pad)
+    DISPATCH_COUNTS["sddmm"] += 1
     out = sddmm(jnp.asarray(rows_p), jnp.asarray(cols_p), dy_p, x_p,
                 T=T, interpret=interpret)
     return out[:nnz]

@@ -89,6 +89,33 @@ def spmm_shard_preflight(n_chips: int,
     return n_chips
 
 
+def sparse_attn_preflight(cfg, seq_len: int) -> None:
+    """Validate the fused sparse-attention sandwich (DESIGN.md §13) for
+    a config with "sattn" slots before committing to a run: build the
+    run's own mask at the run's sequence length, push one (Q, K, V)
+    triple through the backend the run will resolve ("auto": fused
+    pallas on TPU, ref elsewhere) and check it against the pure-jnp
+    oracle.  Surfaces descriptor-stream lowering failures before
+    step 0, exactly like ``spmm_shard_preflight`` does for SpMM."""
+    from ..core import compile_sparse_attention
+    from ..models.sparse_attention import sparse_attention_mask
+    S = min(seq_len, 128)
+    a = sparse_attention_mask(S, cfg.sparse_attn_window,
+                              cfg.sparse_attn_global)
+    rng = np.random.default_rng(0)
+    hd = cfg.head_dim
+    q, k, v = (jnp.asarray(rng.standard_normal((S, hd)), jnp.float32)
+               for _ in range(3))
+    vals = jnp.ones((a.nnz,), jnp.float32)
+    y = compile_sparse_attention(a, hd)(vals, q, k, v)
+    y_ref = compile_sparse_attention(a, hd, backend="ref")(vals, q, k, v)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+    print(f"[train] sparse-attention preflight OK "
+          f"(S={S}, window={cfg.sparse_attn_window}, "
+          f"global={cfg.sparse_attn_global}, nnz={a.nnz})", flush=True)
+
+
 def run_training(cfg, *, steps: int, global_batch: int, seq_len: int,
                  ckpt_dir=None, ckpt_every: int = 20, lr: float = 3e-4,
                  microbatches: int = 1, remat: str = "full",
@@ -104,6 +131,8 @@ def run_training(cfg, *, steps: int, global_batch: int, seq_len: int,
         # train mesh; fail fast here rather than mid-run
         spmm_shard_preflight(spmm_chips, spmm_backend, spmm_x_sharding,
                              autotune=spmm_autotune)
+    if "sattn" in cfg.pattern:
+        sparse_attn_preflight(cfg, seq_len)
     mesh = make_host_mesh(data=data_parallel, model=model_parallel)
     opt = AdamW(learning_rate=warmup_cosine(lr, min(20, steps // 10 + 1),
                                             steps))

@@ -1,5 +1,5 @@
 from .model import Model, cross_entropy_loss
-from . import layers, mamba, moe, rwkv6, transformer
+from . import layers, mamba, moe, rwkv6, sparse_attention, transformer
 
 __all__ = ["Model", "cross_entropy_loss", "layers", "mamba", "moe",
-           "rwkv6", "transformer"]
+           "rwkv6", "sparse_attention", "transformer"]

@@ -77,14 +77,19 @@ def _attend(q, k, v, mask):
 
 
 def gqa_attention(q, k, v, *, q_positions, kv_positions, causal: bool,
-                  window: Optional[int] = None, chunk_q: int = 512,
-                  unroll_chunks: bool = False):
+                  window: Optional[int] = None, num_global: int = 0,
+                  chunk_q: int = 512, unroll_chunks: bool = False):
     """Grouped-query attention.
 
     q (B,Sq,H,hd), k/v (B,Sk,KV,hd).  H % KV == 0; G = H // KV.
     Causal/window masks are built from explicit positions so the same
     code serves training (positions 0..S) and decode (one new position
-    against a cache).  Query-chunked via lax.map when Sq > chunk_q.
+    against a cache).  ``num_global`` widens the window mask with
+    longformer-style global key columns (positions < num_global stay
+    visible to every later query) — the dense fallback for the sparse-
+    attention ("sattn") serving paths; still ANDed with the causal
+    test, so unfilled cache slots (UNFILLED_POS = +2^30) stay masked.
+    Query-chunked via lax.map when Sq > chunk_q.
     """
     B, Sq, H, hd = q.shape
     KV = k.shape[2]
@@ -97,6 +102,8 @@ def gqa_attention(q, k, v, *, q_positions, kv_positions, causal: bool,
             m = qpos[:, :, None] >= kv_positions[:, None, :]
         if window is not None:
             wm = qpos[:, :, None] - kv_positions[:, None, :] < window
+            if num_global:
+                wm |= kv_positions[:, None, :] < num_global
             m = wm if m is None else (m & wm)
         return m
 

@@ -1,0 +1,110 @@
+"""Sparse-attention ("sattn") transformer slot: the fused sandwich as a
+model layer.
+
+The mask is longformer-style — a causal sliding window plus a set of
+global key columns every later query can see — built ONCE per sequence
+length as a :class:`~repro.core.CSRMatrix` and compiled into the fused
+SDDMM → in-register segment softmax → S·V descriptor-stream artifact
+(:func:`~repro.core.compile_sparse_attention`, DESIGN.md §13).  The
+(batch, head) instances all share one structure, so they all hit the
+same JitCache entry; each instance is one pallas_call per chip with S
+never materialized in HBM.
+
+Per-(batch, head) application is a python-unrolled loop: the artifact's
+``custom_vjp`` wraps a scalar-prefetch pallas_call, which today does not
+batch under ``vmap`` — the unrolled HLO is the supported lowering (the
+batched-workspace request-axis stacking used by serving is the noted
+follow-up for folding B·H into the descriptor table itself).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers
+
+
+def sparse_attention_mask(seq_len: int, window: int, num_global: int = 0):
+    """Causal sliding-window + global-column mask as a CSRMatrix.
+
+    Row i (query) sees key j iff ``j <= i`` and (``i - j < window`` or
+    ``j < num_global``).  The diagonal is always present (window >= 1),
+    so no row is empty and the fused kernel's softmax-over-present-
+    entries semantics coincide with dense masked softmax.
+    """
+    from ..core import CSRMatrix
+    assert window >= 1, window
+    S = int(seq_len)
+    g = min(int(num_global), S)
+    row_ptr = np.zeros(S + 1, np.int64)
+    cols = []
+    for i in range(S):
+        lo = max(0, i - window + 1)
+        local = range(lo, i + 1)
+        if g and lo > g:
+            row_cols = list(range(g)) + list(local)
+        else:
+            row_cols = list(range(min(lo, g))) + list(local)
+        cols.extend(row_cols)
+        row_ptr[i + 1] = len(cols)
+    col_indices = np.asarray(cols, np.int32)
+    vals = jnp.ones((len(cols),), jnp.float32)
+    return CSRMatrix((S, S), row_ptr, col_indices, vals)
+
+
+@functools.lru_cache(maxsize=64)
+def _mask_and_artifact(seq_len: int, head_dim: int, window: int,
+                       num_global: int, backend: str,
+                       interpret: Optional[bool]):
+    import jax
+
+    from ..core import compile_sparse_attention
+    # the first call usually happens INSIDE a trace (the layer runs
+    # under lax.scan); the artifact's descriptor tables are constants
+    # cached across traces, so they must be concrete, not trace-staged
+    with jax.ensure_compile_time_eval():
+        a = sparse_attention_mask(seq_len, window, num_global)
+        art = compile_sparse_attention(a, head_dim, head_dim,
+                                       backend=backend,
+                                       interpret=interpret)
+    return a, art
+
+
+def sparse_self_attention_layer(p, x, *, positions, head_dim, num_heads,
+                                num_kv_heads, window, num_global=0,
+                                rope_theta=1e4, qk_norm=False,
+                                norm_eps=1e-5, backend="auto",
+                                interpret=None):
+    """Pre-norm sparse self-attention block: x + sattn(norm(x)).
+
+    Same residual shape as :func:`~repro.models.layers.
+    self_attention_layer`; the attend step runs the fused artifact per
+    (batch, head) with GQA head sharing (kv head = h // (H // KV)).
+    """
+    B, S, _ = x.shape
+    h = layers.rms_norm(x, p["ln"], norm_eps)
+    q, k, v = layers.attn_project_qkv(p, h, num_heads, num_kv_heads,
+                                      head_dim, qk_norm=qk_norm,
+                                      norm_eps=norm_eps)
+    q = layers.apply_rope(q, positions, rope_theta)
+    k = layers.apply_rope(k, positions, rope_theta)
+    a, art = _mask_and_artifact(S, head_dim, int(window), int(num_global),
+                                backend, interpret)
+    vals = jnp.ones((a.nnz,), jnp.float32)
+    G = num_heads // num_kv_heads
+    outs = []
+    for b in range(B):
+        per_head = [
+            art(vals,
+                q[b, :, hh, :].astype(jnp.float32),
+                k[b, :, hh // G, :].astype(jnp.float32),
+                v[b, :, hh // G, :].astype(jnp.float32))
+            for hh in range(num_heads)
+        ]
+        outs.append(jnp.stack(per_head, axis=1))        # (S, H, hd)
+    out = jnp.stack(outs, axis=0).astype(x.dtype)       # (B, S, H, hd)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return x + out

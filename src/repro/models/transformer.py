@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
-from . import layers, mamba, moe, rwkv6
+from . import layers, mamba, moe, rwkv6, sparse_attention
 
 # sentinel position for unfilled KV-cache slots: +2^30 fails the causal
 # test (qpos >= kvpos) so empty slots never attend
@@ -203,7 +203,11 @@ def _init_rwkv(cfg: ArchConfig, rng, dt):
     return {"tm": tm, "cm": cm}
 
 
+# "sattn" (sparse attention, DESIGN.md §13) reuses the attn projection
+# stack verbatim — only the attend step differs (fused descriptor-stream
+# sandwich in train, dense masked fallback in serve)
 _SLOT_INIT = {"attn": _init_attn, "xattn": _init_xattn,
+              "sattn": _init_attn,
               "mamba": _init_mamba, "rwkv": _init_rwkv}
 _FFN_INIT = {"dense": _init_dense_ffn, "moe": _init_moe_ffn}
 
@@ -261,6 +265,15 @@ def _apply_slot_train(cfg: ArchConfig, kind: str, slot_params, x, positions,
             causal=True, window=cfg.sliding_window, qk_norm=cfg.qk_norm,
             norm_eps=cfg.norm_eps, chunk_q=chunk_q,
             unroll_chunks=unroll_chunks, causal_skip=causal_skip)
+    elif kind == "sattn":
+        x = sparse_attention.sparse_self_attention_layer(
+            slot_params["sattn"], x, positions=positions,
+            head_dim=cfg.head_dim, num_heads=cfg.num_heads,
+            num_kv_heads=cfg.num_kv_heads,
+            window=cfg.sparse_attn_window,
+            num_global=cfg.sparse_attn_global,
+            rope_theta=cfg.rope_theta, qk_norm=cfg.qk_norm,
+            norm_eps=cfg.norm_eps)
     elif kind == "xattn":
         x = layers.cross_attention_layer(
             slot_params["xattn"], x, image_embeds, head_dim=cfg.head_dim,
@@ -355,8 +368,11 @@ def init_decode_cache(cfg: ArchConfig, batch: int, cache_len: int):
     KV, hd = cfg.num_kv_heads, cfg.head_dim
     caches = {}
     for i, kind in enumerate(cfg.pattern):
-        if kind == "attn":
-            T = attn_cache_len(cfg, cache_len)
+        if kind in ("attn", "sattn"):
+            # sattn keeps the FULL cache: rolling window eviction would
+            # drop the global tokens every later query must still see
+            T = cache_len if kind == "sattn" \
+                else attn_cache_len(cfg, cache_len)
             caches[f"slot{i}"] = {
                 "k": jnp.zeros((P, batch, T, KV, hd), dt),
                 "v": jnp.zeros((P, batch, T, KV, hd), dt),
@@ -388,7 +404,7 @@ def init_decode_cache(cfg: ArchConfig, batch: int, cache_len: int):
 # Decode step (one new token against the caches)
 # ---------------------------------------------------------------------------
 
-def _decode_attn(cfg, p, x, cache, pos):
+def _decode_attn(cfg, p, x, cache, pos, *, window=None, num_global=0):
     B = x.shape[0]
     h = layers.rms_norm(x, p["ln"], cfg.norm_eps)
     q, k, v = layers.attn_project_qkv(p, h, cfg.num_heads, cfg.num_kv_heads,
@@ -407,7 +423,7 @@ def _decode_attn(cfg, p, x, cache, pos):
                                          posb.astype(jnp.int32), (0, idx))
     out = layers.gqa_attention(q, ck, cv, q_positions=posb,
                                kv_positions=ckpos, causal=True,
-                               window=cfg.sliding_window)
+                               window=window, num_global=num_global)
     out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
     return x + out, {"k": ck, "v": cv, "kpos": ckpos}
 
@@ -443,7 +459,17 @@ def forward_decode(cfg: ArchConfig, params, token, caches, pos, *,
             sp = period_params[f"slot{i}"]
             if kind == "attn":
                 x, nc = _decode_attn(cfg, sp["attn"], x,
-                                     cache_p[f"slot{i}"], pos)
+                                     cache_p[f"slot{i}"], pos,
+                                     window=cfg.sliding_window)
+            elif kind == "sattn":
+                # serve-side fallback: dense masked attention with the
+                # SAME window+global mask the fused train path encodes
+                # in its CSR structure (softmax-over-present-entries
+                # semantics coincide — the diagonal is always present)
+                x, nc = _decode_attn(cfg, sp["sattn"], x,
+                                     cache_p[f"slot{i}"], pos,
+                                     window=cfg.sparse_attn_window,
+                                     num_global=cfg.sparse_attn_global)
             elif kind == "xattn":
                 x, nc = _decode_xattn(cfg, sp["xattn"], x, cache_p[f"slot{i}"])
             elif kind == "mamba":
@@ -510,6 +536,35 @@ def prefill(cfg: ArchConfig, params, tokens, cache_len: int, *,
                 out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
                 x = x + out
                 T = attn_cache_len(cfg, cache_len)
+                keep = min(S, T)
+                ck = jnp.zeros((B, T) + k.shape[2:], k.dtype
+                               ).at[:, :keep].set(k[:, -keep:])
+                cv = jnp.zeros((B, T) + v.shape[2:], v.dtype
+                               ).at[:, :keep].set(v[:, -keep:])
+                ckpos = jnp.full((B, T), UNFILLED_POS, jnp.int32
+                                 ).at[:, :keep].set(positions[:, -keep:])
+                new_caches[f"slot{i}"] = {"k": ck, "v": cv, "kpos": ckpos}
+            elif kind == "sattn":
+                # dense masked fallback for serving (see _decode_attn's
+                # sattn branch); cache is full-length — global tokens
+                # must survive, so there is no windowed eviction here
+                p = sp["sattn"]
+                h = layers.rms_norm(x, p["ln"], cfg.norm_eps)
+                q, k, v = layers.attn_project_qkv(
+                    p, h, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim,
+                    qk_norm=cfg.qk_norm, norm_eps=cfg.norm_eps)
+                q = layers.apply_rope(q, positions, cfg.rope_theta)
+                k = layers.apply_rope(k, positions, cfg.rope_theta)
+                out = layers.gqa_attention(
+                    q, k, v, q_positions=positions,
+                    kv_positions=positions, causal=True,
+                    window=cfg.sparse_attn_window,
+                    num_global=cfg.sparse_attn_global, chunk_q=chunk_q,
+                    unroll_chunks=unroll_chunks)
+                out = jnp.einsum("bshk,hkd->bsd", out,
+                                 p["wo"].astype(x.dtype))
+                x = x + out
+                T = cache_len
                 keep = min(S, T)
                 ck = jnp.zeros((B, T) + k.shape[2:], k.dtype
                                ).at[:, :keep].set(k[:, -keep:])

@@ -1,0 +1,394 @@
+"""Acceptance suite for the fused sparse-attention sandwich
+(DESIGN.md §13): SDDMM score -> in-register segment softmax -> S·V
+through the SpMM descriptor stream, ONE pallas_call per chip, the score
+matrix never materialized in HBM.
+
+Pinned here:
+
+  * numerics: fused == dense masked-softmax oracle (f64 numpy) across
+    backends, stagings, strategies — including weighted masks
+    (p ∝ w·exp(z)), empty rows (output 0), and multi-trip block-rows
+    (the running-max rescale across trips must keep them exact),
+  * gradients: the custom-VJP backward (jnp reference recompute)
+    matches the ref backend's gradient for q, k, v AND the mask vals,
+  * CGCM merging and sharding are bit-pure re-partitionings,
+  * the Table IV invariant: exactly one pallas_call per chip per
+    forward, on the traced jaxpr and in DISPATCH_COUNTS,
+  * the jit-cache key separates every resolved knob,
+  * sddmm_csr's interpret auto-resolution (satellite of the same PR),
+  * the model-layer bridge: sparse_self_attention_layer == dense GQA
+    attention with the equivalent window+global mask.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CSRMatrix, compile_sparse_attention, random_csr,
+                        sparse_attention)
+from repro.core.jit_cache import JitCache
+from repro.core.plan import STRATEGIES
+from repro.kernels import ops
+from repro.kernels.sddmm import sddmm_csr
+
+ROOT = Path(__file__).resolve().parents[1]
+N_DEV = len(jax.devices())
+MAX_CHIPS = min(N_DEV, 4)
+FUSED = ("pallas_ell", "pallas_bcsr")
+
+
+def _dense_oracle(a, vals, q, k, v):
+    """f64 numpy oracle: softmax over present entries with weights w —
+    p ∝ w·exp(z), empty rows -> 0."""
+    m, n = a.shape
+    rows = np.repeat(np.arange(m), np.diff(a.row_ptr))
+    W = np.zeros((m, n), np.float64)
+    W[rows, a.col_indices] = np.asarray(vals, np.float64)
+    scale = q.shape[1] ** -0.5
+    z = (np.asarray(q, np.float64) @ np.asarray(k, np.float64).T) * scale
+    zm = np.where(W > 0, z, -np.inf)
+    zmax = np.max(zm, axis=1, initial=-np.inf)
+    zmax = np.where(np.isfinite(zmax), zmax, 0.0)
+    zc = np.where(W > 0, z, zmax[:, None])   # inert where absent
+    p = W * np.exp(zc - zmax[:, None])
+    denom = p.sum(axis=1)
+    out = p @ np.asarray(v, np.float64)
+    return out / np.where(denom > 0, denom, 1.0)[:, None]
+
+
+def _qkv(m, n, dh, dv, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((m, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((n, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((n, dv)), jnp.float32)
+    return q, k, v
+
+
+def _mask(m=48, n=40, seed=0, density=0.15, family="powerlaw",
+          weighted=True):
+    a = random_csr(m, n, density=density, family=family, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    vals = (rng.uniform(0.2, 2.0, a.nnz).astype(np.float32) if weighted
+            else np.ones(a.nnz, np.float32))
+    return CSRMatrix(a.shape, a.row_ptr, a.col_indices, jnp.asarray(vals))
+
+
+# ---------------------------------------------------------------------------
+# Numerics vs the dense oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", FUSED)
+@pytest.mark.parametrize("staging", ("resident", "dma"))
+def test_fused_matches_dense_oracle(backend, staging):
+    a = _mask(seed=3)
+    q, k, v = _qkv(a.m, a.n, 12, 20, seed=4)
+    want = _dense_oracle(a, a.vals, q, k, v)
+    for strategy in STRATEGIES:
+        c = compile_sparse_attention(
+            a, 12, 20, strategy=strategy, backend=backend,
+            interpret=True, staging=staging, cache=JitCache())
+        got = np.asarray(c(jnp.asarray(a.vals), q, k, v))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5,
+                                   err_msg=f"{backend}/{staging}/"
+                                           f"{strategy}")
+
+
+@pytest.mark.parametrize("backend", FUSED)
+def test_multi_trip_rows_stay_exact(backend):
+    """A fully-dense heavy row spans many descriptor trips; the running
+    max must rescale the accumulator so the result matches the oracle
+    as tightly as a single-trip row does."""
+    rng = np.random.default_rng(7)
+    n = 64
+    dense = np.zeros((24, n), np.float32)
+    dense[0] = rng.uniform(0.2, 2.0, n)               # heavy: all of n
+    dense[1, :40] = rng.uniform(0.2, 2.0, 40)
+    for i in range(2, 24):
+        cols = rng.choice(n, size=rng.integers(1, 5), replace=False)
+        dense[i, cols] = rng.uniform(0.2, 2.0, cols.size)
+    a = CSRMatrix.from_dense(dense)
+    # large logits stress the rescale: scale q up so exp() would
+    # overflow without the running max
+    q, k, v = _qkv(a.m, a.n, 8, 8, seed=8)
+    q = q * 12.0
+    want = _dense_oracle(a, a.vals, q, k, v)
+    got = np.asarray(sparse_attention(a, q, k, v, backend=backend,
+                                      interpret=True, cache=JitCache()))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_empty_rows_produce_zero_output():
+    row_ptr = np.array([0, 2, 2, 3, 3], np.int64)
+    cols = np.array([0, 3, 1], np.int32)
+    a = CSRMatrix((4, 5), row_ptr, cols, jnp.ones((3,), jnp.float32))
+    q, k, v = _qkv(4, 5, 6, 6, seed=9)
+    y = np.asarray(sparse_attention(a, q, k, v, backend="pallas_ell",
+                                    interpret=True, cache=JitCache()))
+    assert np.all(y[1] == 0) and np.all(y[3] == 0)
+    np.testing.assert_allclose(y, _dense_oracle(a, a.vals, q, k, v),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", FUSED)
+def test_gradients_match_ref_backend(backend):
+    a = _mask(seed=11)
+    q, k, v = _qkv(a.m, a.n, 8, 12, seed=12)
+    vals = jnp.asarray(a.vals)
+
+    def loss(c):
+        def f(w, qq, kk, vv):
+            return jnp.sum(jnp.sin(c(w, qq, kk, vv)))
+        return jax.grad(f, argnums=(0, 1, 2, 3))(vals, q, k, v)
+
+    g_fused = loss(compile_sparse_attention(
+        a, 8, 12, backend=backend, interpret=True, cache=JitCache()))
+    g_ref = loss(compile_sparse_attention(
+        a, 8, 12, backend="ref", cache=JitCache()))
+    for gf, gr, name in zip(g_fused, g_ref, ("vals", "q", "k", "v")):
+        np.testing.assert_allclose(np.asarray(gf), np.asarray(gr),
+                                   rtol=1e-4, atol=1e-5, err_msg=name)
+
+
+@pytest.mark.parametrize("backend", FUSED)
+def test_merged_bit_matches_unmerged(backend):
+    a = _mask(m=64, n=48, seed=13, density=0.08)
+    q, k, v = _qkv(a.m, a.n, 8, 8, seed=14)
+    y0 = sparse_attention(a, q, k, v, backend=backend, interpret=True,
+                          merge_threshold=0, cache=JitCache())
+    y1 = sparse_attention(a, q, k, v, backend=backend, interpret=True,
+                          merge_threshold=16, cache=JitCache())
+    assert np.array_equal(np.asarray(y0), np.asarray(y1))
+
+
+@pytest.mark.parametrize("backend", FUSED)
+@pytest.mark.parametrize("staging", ("resident", "dma"))
+def test_sharded_bit_matches_single_chip(backend, staging):
+    a = _mask(m=64, n=48, seed=15, density=0.1)
+    q, k, v = _qkv(a.m, a.n, 8, 8, seed=16)
+    y0 = sparse_attention(a, q, k, v, backend=backend, interpret=True,
+                          staging=staging, cache=JitCache())
+    for chips in range(1, MAX_CHIPS + 1):
+        y = sparse_attention(a, q, k, v, backend=backend,
+                             interpret=True, staging=staging,
+                             n_chips=chips, cache=JitCache())
+        assert np.array_equal(np.asarray(y0), np.asarray(y)), \
+            (chips, backend, staging)
+
+
+# ---------------------------------------------------------------------------
+# The Table IV invariant: one pallas_call per chip
+# ---------------------------------------------------------------------------
+
+def _iter_eqns(jaxpr):
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for val in eqn.params.values():
+            inner = val if hasattr(val, "eqns") else getattr(val, "jaxpr",
+                                                             None)
+            if hasattr(inner, "eqns"):
+                yield from _iter_eqns(inner)
+
+
+@pytest.mark.parametrize("backend", FUSED)
+@pytest.mark.parametrize("staging", ("resident", "dma"))
+def test_forward_is_one_pallas_call(backend, staging):
+    a = _mask(seed=17)
+    q, k, v = _qkv(a.m, a.n, 8, 8, seed=18)
+    c = compile_sparse_attention(a, 8, 8, backend=backend,
+                                 interpret=True, staging=staging,
+                                 cache=JitCache())
+    jaxpr = jax.make_jaxpr(
+        lambda w, qq, kk, vv: c(w, qq, kk, vv))(
+        jnp.asarray(a.vals), q, k, v)
+    pallas = [e for e in _iter_eqns(jaxpr.jaxpr)
+              if e.primitive.name == "pallas_call"]
+    assert len(pallas) == 1
+
+    ops.reset_dispatch_counts()
+    y = c(jnp.asarray(a.vals), q, k, v)
+    jax.block_until_ready(y)
+    assert ops.DISPATCH_COUNTS["attn_fused"] == 1
+    assert ops.DISPATCH_COUNTS["attn_fused_dma"] == (
+        1 if staging == "dma" else 0)
+    assert ops.DISPATCH_COUNTS["sddmm"] == 0   # no separate SDDMM pass
+
+
+@pytest.mark.skipif(N_DEV < 2, reason="single-device host")
+@pytest.mark.parametrize("backend", FUSED)
+def test_sharded_forward_is_one_pallas_call_per_chip(backend):
+    chips = MAX_CHIPS
+    a = _mask(m=64, n=48, seed=19, density=0.1)
+    q, k, v = _qkv(a.m, a.n, 8, 8, seed=20)
+    c = compile_sparse_attention(a, 8, 8, backend=backend,
+                                 interpret=True, n_chips=chips,
+                                 cache=JitCache())
+    jaxpr = jax.make_jaxpr(
+        lambda w, qq, kk, vv: c(w, qq, kk, vv))(
+        jnp.asarray(a.vals), q, k, v)
+    eqns = list(_iter_eqns(jaxpr.jaxpr))
+    shard_eqns = [e for e in eqns if e.primitive.name == "shard_map"]
+    assert len(shard_eqns) == 1
+    body = shard_eqns[0].params["jaxpr"]
+    body = body if hasattr(body, "eqns") else body.jaxpr
+    pallas = [e for e in _iter_eqns(body)
+              if e.primitive.name == "pallas_call"]
+    assert len(pallas) == 1   # one per chip inside the mapped body
+
+    ops.reset_dispatch_counts()
+    y = c(jnp.asarray(a.vals), q, k, v)
+    jax.block_until_ready(y)
+    assert ops.DISPATCH_COUNTS["attn_fused"] == chips
+    assert ops.DISPATCH_COUNTS["attn_fused_sharded"] == 1
+
+
+def test_acceptance_on_8_device_mesh():
+    """ISSUE acceptance on a forced 8-device host mesh: sharded fused
+    == single-chip fused bit-identical, 8 dispatches per forward, and
+    both match the ref oracle."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(ROOT / "src")
+    code = textwrap.dedent("""
+        import jax, numpy as np, jax.numpy as jnp
+        assert len(jax.devices()) == 8
+        from repro.core import CSRMatrix, random_csr, sparse_attention
+        from repro.core.jit_cache import JitCache
+        from repro.kernels import ops
+        s = random_csr(96, 64, density=0.08, family="powerlaw", seed=0)
+        rng = np.random.default_rng(1)
+        # mask weights are non-negative by contract (p ∝ w·exp(z))
+        a = CSRMatrix(s.shape, s.row_ptr, s.col_indices,
+                      jnp.asarray(rng.uniform(0.2, 2.0, s.nnz),
+                                  jnp.float32))
+        q = jnp.asarray(rng.standard_normal((96, 8)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((64, 8)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((64, 16)), jnp.float32)
+        y_ref = sparse_attention(a, q, k, v, backend="ref",
+                                 cache=JitCache())
+        for backend in ("pallas_ell", "pallas_bcsr"):
+            y0 = sparse_attention(a, q, k, v, backend=backend,
+                                  interpret=True, cache=JitCache())
+            ops.reset_dispatch_counts()
+            y8 = sparse_attention(a, q, k, v, backend=backend,
+                                  interpret=True, n_chips=8,
+                                  cache=JitCache())
+            assert ops.DISPATCH_COUNTS["attn_fused"] == 8, backend
+            assert np.array_equal(np.asarray(y0), np.asarray(y8)), backend
+            np.testing.assert_allclose(np.asarray(y8), np.asarray(y_ref),
+                                       rtol=1e-4, atol=1e-4)
+        print("OK")
+    """)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=540)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# Cache-key discipline + the sddmm satellite
+# ---------------------------------------------------------------------------
+
+def test_jit_cache_key_separates_knobs():
+    a = _mask(seed=21)
+    cache = JitCache()
+    c0 = compile_sparse_attention(a, 8, backend="pallas_ell",
+                                  interpret=True, cache=cache)
+    assert compile_sparse_attention(a, 8, backend="pallas_ell",
+                                    interpret=True, cache=cache) is c0
+    distinct = [
+        compile_sparse_attention(a, 8, backend="pallas_ell",
+                                 interpret=True, staging="dma",
+                                 cache=cache),
+        compile_sparse_attention(a, 8, backend="pallas_ell",
+                                 interpret=True, sm_scale=1.0,
+                                 cache=cache),
+        compile_sparse_attention(a, 8, 16, backend="pallas_ell",
+                                 interpret=True, cache=cache),
+        compile_sparse_attention(a, 8, backend="pallas_ell",
+                                 interpret=True, merge_threshold=16,
+                                 cache=cache),
+    ]
+    assert all(c is not c0 for c in distinct)
+    assert len({id(c) for c in distinct}) == len(distinct)
+
+
+def test_sddmm_csr_interpret_auto_resolves():
+    """Satellite: interpret=None must resolve like the fused kernels
+    (interpreted off-TPU) instead of the old hardwired default, count a
+    dispatch, and agree with the explicit interpret=True path."""
+    a = random_csr(24, 16, density=0.2, family="uniform", seed=22)
+    rng = np.random.default_rng(23)
+    dy = jnp.asarray(rng.standard_normal((a.m, 8)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((a.n, 8)), jnp.float32)
+    ops.reset_dispatch_counts()
+    d_auto = sddmm_csr(a, dy, x, T=8)
+    assert ops.DISPATCH_COUNTS["sddmm"] == 1
+    d_true = sddmm_csr(a, dy, x, T=8, interpret=True)
+    assert np.array_equal(np.asarray(d_auto), np.asarray(d_true))
+    rows = np.repeat(np.arange(a.m), np.diff(a.row_ptr))
+    want = np.sum(np.asarray(dy)[rows] * np.asarray(x)[a.col_indices],
+                  axis=1)
+    np.testing.assert_allclose(np.asarray(d_auto), want, rtol=1e-5,
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Model-layer bridge
+# ---------------------------------------------------------------------------
+
+def test_sparse_attention_mask_structure():
+    from repro.models.sparse_attention import sparse_attention_mask
+    S, w, g = 20, 4, 3
+    a = sparse_attention_mask(S, w, g)
+    assert a.shape == (S, S)
+    dense = np.asarray(a.to_dense())
+    for i in range(S):
+        for j in range(S):
+            want = j <= i and (i - j < w or j < g)
+            assert bool(dense[i, j] != 0) == want, (i, j)
+
+
+def test_sattn_layer_matches_dense_masked_attention():
+    """The fused sandwich through the model layer == dense GQA attention
+    with the equivalent causal window+global mask (same softmax over
+    the same present entries)."""
+    from repro.models import layers
+    from repro.models.sparse_attention import sparse_self_attention_layer
+    B, S, D, H, KV, hd = 2, 16, 32, 4, 2, 8
+    w, g = 6, 2
+    rng = np.random.default_rng(30)
+    x = jnp.asarray(rng.standard_normal((B, S, D)) * 0.3, jnp.float32)
+    p = {
+        "ln": jnp.ones((D,), jnp.float32),
+        "wq": jnp.asarray(rng.standard_normal((D, H, hd)) * 0.1,
+                          jnp.float32),
+        "wk": jnp.asarray(rng.standard_normal((D, KV, hd)) * 0.1,
+                          jnp.float32),
+        "wv": jnp.asarray(rng.standard_normal((D, KV, hd)) * 0.1,
+                          jnp.float32),
+        "wo": jnp.asarray(rng.standard_normal((H, hd, D)) * 0.1,
+                          jnp.float32),
+    }
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                 (B, S))
+    got = sparse_self_attention_layer(
+        p, x, positions=positions, head_dim=hd, num_heads=H,
+        num_kv_heads=KV, window=w, num_global=g, rope_theta=1e4)
+
+    h = layers.rms_norm(x, p["ln"], 1e-5)
+    q, k, v = layers.attn_project_qkv(p, h, H, KV, hd, qk_norm=False,
+                                      norm_eps=1e-5)
+    q = layers.apply_rope(q, positions, 1e4)
+    k = layers.apply_rope(k, positions, 1e4)
+    out = layers.gqa_attention(q, k, v, q_positions=positions,
+                               kv_positions=positions, causal=True,
+                               window=w, num_global=g)
+    want = x + jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)

@@ -11,8 +11,8 @@ import json
 import pytest
 
 from benchmarks.common import (CALIB_BENCH, bench_record,
-                               check_bench_regression, load_bench_json,
-                               write_bench_json)
+                               check_bench_regression, format_bench_diff,
+                               load_bench_json, write_bench_json)
 
 
 def _rec(bench="fused_ell", strategy="nnz_split", backend="pallas_ell",
@@ -119,6 +119,46 @@ def test_json_roundtrip_and_validation(tmp_path):
         load_bench_json(notalist)
 
 
+def test_diff_table_verdicts_match_the_gate():
+    """The job-summary markdown table is rendered from the SAME gate
+    call CI exits on: a regressed cell shows REGRESSION, a vanished
+    cell shows the coverage failure, a new PR cell shows as new, and
+    everything else is OK — one row per cell in the union."""
+    base = [bench_record(CALIB_BENCH, "-", "dense", 0, 1.0, 0),
+            _rec(wall_ms=1.0),                        # regresses
+            _rec(bench="fused_mixed", wall_ms=1.0),   # stays fine
+            _rec(bench="gone", wall_ms=5.0)]          # disappears
+    pr = [bench_record(CALIB_BENCH, "-", "dense", 0, 1.0, 0),
+          _rec(wall_ms=10.0),
+          _rec(bench="fused_mixed", wall_ms=1.1),
+          _rec(bench="brand_new", wall_ms=1.0)]
+    table = format_bench_diff(pr, base, factor=2.0)
+    rows = {line.split("|")[1].strip(): line
+            for line in table.splitlines() if line.startswith("| `")}
+    assert len(rows) == 5
+    assert "REGRESSION" in rows["`fused_ell/nnz_split/pallas_ell/0`"]
+    assert "coverage" in rows["`gone/nnz_split/pallas_ell/0`"]
+    assert "new" in rows["`brand_new/nnz_split/pallas_ell/0`"]
+    assert "OK" in rows["`fused_mixed/nnz_split/pallas_ell/0`"]
+    assert "calib" in rows["`calib/-/dense/0`"]
+    # the wall ratio column is machine-scale normalized: 10x shows 10.00
+    assert "| 10.00 |" in rows["`fused_ell/nnz_split/pallas_ell/0`"]
+
+
+def test_diff_table_scale_relaxes_ratio():
+    """A 2x-slower runner halves the displayed ratio, mirroring the
+    gate's calib normalization."""
+    base = [bench_record(CALIB_BENCH, "-", "dense", 0, 1.0, 0),
+            _rec(wall_ms=1.0)]
+    pr = [bench_record(CALIB_BENCH, "-", "dense", 0, 2.0, 0),
+          _rec(wall_ms=3.0)]
+    table = format_bench_diff(pr, base, factor=2.0)
+    assert "machine scale 2.00" in table
+    row = next(line for line in table.splitlines()
+               if line.startswith("| `fused_ell"))
+    assert "| 1.50 |" in row and "OK" in row
+
+
 def test_checked_in_baseline_is_valid():
     """The baseline CI gates on must stay schema-valid and cover the
     fused hot-path cells (both execution units, sharded + not)."""
@@ -127,6 +167,8 @@ def test_checked_in_baseline_is_valid():
         Path(__file__).resolve().parents[1] / "BENCH_baseline.json")
     benches = {r["bench"] for r in baseline}
     assert {"calib", "fused_ell", "fused_mixed", "fused_ell_sharded",
-            "fused_mixed_sharded", "codegen_plan"} <= benches
+            "fused_mixed_sharded", "codegen_plan", "attn_fused",
+            "attn_fused_dma", "attn_fused_sharded",
+            "attn_fused_skew_merged"} <= benches
     backends = {r["backend"] for r in baseline}
     assert {"pallas_ell", "pallas_bcsr"} <= backends
