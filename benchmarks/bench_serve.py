@@ -10,6 +10,14 @@ everything that has arrived (up to ``max_batch``) as one round, adds
 the measured service time, and records ``latency = completion -
 arrival`` per request — queueing + service on one clock.
 
+The continuous-batching replay (``run_cb_stream``) pushes the same
+virtual stream through ``SpmmScheduler`` (DESIGN.md §14) instead of
+caller-formed rounds: the scheduler's injected clock runs on the
+arrival timeline, batch composition is driven by the NOMINAL service
+time (deterministic artifacts and cache cells, as above), and real
+measured tick walls chain on a second clock for the latency
+percentiles.
+
 Smoke cells (gated like every other cell, benchmarks/common.py):
 
   serve_p50 / serve_p99   wall_ms = latency percentile over the warm
@@ -23,6 +31,15 @@ Smoke cells (gated like every other cell, benchmarks/common.py):
                           (key instability, clear-vs-inflight bugs)
                           multiplies the count ~3x and trips the 2x
                           gate.
+  serve_cb_p50/_p99       same percentiles over the warm continuous-
+                          batching replay; dispatches = fused
+                          dispatches per request through the scheduler
+  serve_fairness          hot-tenant flood: one tenant bursts, cold
+                          tenants trickle.  wall_ms = cold-tenant p99
+                          latency; dispatches = max cold queue wait in
+                          TICKS (deterministic) — a DRR/starvation
+                          regression blows the tick bound and trips
+                          the 2x gate structurally.
 """
 from __future__ import annotations
 
@@ -43,7 +60,8 @@ except ImportError:          # plain-script run: python benchmarks/...
 
 from repro.core import random_csr
 from repro.core.jit_cache import JitCache
-from repro.launch.serve import SpmmRequest, SpmmServer
+from repro.launch.serve import (SpmmRequest, SpmmResponse, SpmmScheduler,
+                                SpmmServer)
 
 
 def make_tenants(seed: int = 0, d: int = 24) -> list:
@@ -129,6 +147,94 @@ def run_stream(server: SpmmServer, tenants, stream, batches) -> dict:
     }
 
 
+def run_cb_stream(server: SpmmServer, tenants, stream, *,
+                  nominal_service_s: float = 0.004,
+                  max_queue_per_tenant: int = 64,
+                  deadlines=None) -> dict:
+    """Replay the stream through the continuous-batching scheduler.
+
+    Two chained clocks, same trick as ``form_batches``/``run_stream``:
+    a NOMINAL clock (arrivals + fixed nominal service time) decides
+    when the scheduler ticks and therefore which batches — and which
+    batched artifacts — exist, deterministically; REAL measured tick
+    walls chain on the measured clock for the latency percentiles.
+    The scheduler's injected clock tracks the arrival timeline, so
+    ``queue_wait_ticks`` comes back on the virtual scale too."""
+    vclock = [0.0]
+    sched = SpmmScheduler(server,
+                          max_queue_per_tenant=max_queue_per_tenant,
+                          clock=lambda: vclock[0])
+    n = len(stream)
+    inflight = []                # (arrival_s, tenant_name, future)
+    latencies = []
+    lat_by_tenant = {}           # tenant -> [latency_s, ...]
+    waits_ticks = {}             # tenant -> [queue_wait_ticks, ...]
+    rejected = 0
+    d0 = server.batches_dispatched
+    m0 = server.cache.stats()["misses"]
+    i = 0
+    nom = meas = 0.0
+    while i < n or sched.pending:
+        while i < n and stream[i][0] <= nom:
+            arr, t = stream[i]
+            vclock[0] = arr
+            name, a, x = tenants[t]
+            dl = deadlines[t] if deadlines is not None else None
+            fut = sched.submit(SpmmRequest(tenant=name, a=a, x=x,
+                                           deadline_s=dl))
+            if fut.done() and fut.rejected:
+                rejected += 1
+            else:
+                inflight.append((arr, name, fut))
+            i += 1
+        if not sched.pending:
+            nom = stream[i][0]   # idle: jump to the next arrival
+            meas = max(meas, nom)
+            continue
+        t0 = time.perf_counter()
+        sched.tick()
+        wall = time.perf_counter() - t0
+        done = [e for e in inflight if e[2].done()]
+        inflight = [e for e in inflight if not e[2].done()]
+        if done:
+            # a batch can't start before its last member arrived
+            meas = max(meas, max(arr for arr, _, _ in done)) + wall
+            for arr, name, fut in done:
+                resp = fut.result(timeout=0)
+                assert isinstance(resp, SpmmResponse)
+                latencies.append(meas - arr)
+                lat_by_tenant.setdefault(name, []).append(meas - arr)
+                waits_ticks.setdefault(name, []).append(
+                    resp.queue_wait_ticks)
+        nom += nominal_service_s
+    sched.close()
+    lat = np.asarray(latencies)
+    return {
+        "p50_ms": float(np.percentile(lat, 50) * 1e3),
+        "p99_ms": float(np.percentile(lat, 99) * 1e3),
+        "throughput_rps": float(len(lat) / max(meas, 1e-9)),
+        "dispatches": server.batches_dispatched - d0,
+        "misses": server.cache.stats()["misses"] - m0,
+        "n_requests": len(lat),
+        "rejected": rejected,
+        "waits_ticks": waits_ticks,
+        "lat_by_tenant": lat_by_tenant,
+    }
+
+
+def fairness_stream(tenants, *, burst: int = 12, n_cold: int = 10,
+                    mean_gap_s: float = 0.003, seed: int = 0) -> list:
+    """Hot-tenant flood: tenant 0 bursts ``burst`` requests at t=0,
+    the remaining (cold) tenants trickle in on Poisson gaps."""
+    rng = np.random.default_rng(seed)
+    stream = [(0.0, 0)] * burst
+    arrivals = np.cumsum(rng.exponential(mean_gap_s, size=n_cold))
+    picks = rng.integers(1, len(tenants), size=n_cold)
+    stream += [(float(arrivals[i]), int(picks[i]))
+               for i in range(n_cold)]
+    return sorted(stream, key=lambda e: e[0])
+
+
 def smoke_records(n_requests: int = 18, seed: int = 0) -> list:
     tenants = make_tenants(seed)
     stream = poisson_stream(tenants, n_requests=n_requests,
@@ -141,12 +247,38 @@ def smoke_records(n_requests: int = 18, seed: int = 0) -> list:
     total_misses = cold["misses"] + warm1["misses"] + warm2["misses"]
     per_req = warm2["dispatches"] / warm2["n_requests"]
     backend = server.backend
+    # continuous batching: cold replay compiles the scheduler's batch
+    # compositions, warm replay measures them (DESIGN.md §14)
+    cb_server = SpmmServer(interpret=True, max_batch=4,
+                           cache=JitCache())
+    run_cb_stream(cb_server, tenants, stream)
+    cb = run_cb_stream(cb_server, tenants, stream)
+    cb_per_req = cb["dispatches"] / cb["n_requests"]
+    # fairness: hot-tenant flood, cold-tenant p99 must stay bounded.
+    # The burst forms batch compositions (4x the hot structure) the
+    # Poisson replays never built — warm them first so the measured
+    # replay times dispatches, not compiles.
+    flood = fairness_stream(tenants, seed=seed)
+    run_cb_stream(cb_server, tenants, flood)
+    fair = run_cb_stream(cb_server, tenants, flood)
+    cold_names = [name for name, _, _ in tenants[1:]]
+    cold_lat_ticks = max(max(fair["waits_ticks"].get(nm, [0]))
+                         for nm in cold_names)
+    cold_lats = [v for nm in cold_names
+                 for v in fair["lat_by_tenant"].get(nm, [])]
+    cold_p99 = float(np.percentile(np.asarray(cold_lats), 99) * 1e3)
     return [
         bench_record("serve_p50", "-", backend, 0, warm2["p50_ms"],
                      per_req),
         bench_record("serve_p99", "-", backend, 0, warm2["p99_ms"],
                      per_req),
         bench_record("serve_cache", "-", backend, 0, 0.0, total_misses),
+        bench_record("serve_cb_p50", "-", backend, 0, cb["p50_ms"],
+                     cb_per_req),
+        bench_record("serve_cb_p99", "-", backend, 0, cb["p99_ms"],
+                     cb_per_req),
+        bench_record("serve_fairness", "-", backend, 0, cold_p99,
+                     cold_lat_ticks),
     ]
 
 
@@ -166,6 +298,15 @@ def run(n_requests: int = 64, seed: int = 0) -> list:
             f"p99_ms={r['p99_ms']:.2f};rps={r['throughput_rps']:.0f};"
             f"dispatch_per_req={r['dispatches'] / r['n_requests']:.2f};"
             f"warm_misses={r['misses']}"))
+    # continuous batching through the scheduler, same stream
+    server = SpmmServer(interpret=True, max_batch=4, cache=JitCache())
+    run_cb_stream(server, tenants, stream)               # cold warmup
+    r = run_cb_stream(server, tenants, stream)
+    rows.append(csv_row(
+        f"serve_cb_b4_n{n_requests}", r["p50_ms"] * 1e3,
+        f"p99_ms={r['p99_ms']:.2f};rps={r['throughput_rps']:.0f};"
+        f"dispatch_per_req={r['dispatches'] / r['n_requests']:.2f};"
+        f"warm_misses={r['misses']}"))
     return rows
 
 

@@ -22,8 +22,11 @@ sparse-attention sandwich, DESIGN.md §13: resident/``_dma``/sharded
 (plan/pack/tune host cost via ``kernels.ops.BUILD_SECONDS``) and
 ``bench_serve.smoke_records`` (the serving tier's Poisson-stream
 ``serve_p50``/``serve_p99`` latency and ``serve_cache`` miss-count
-cells, DESIGN.md §12), plus the ``calib`` record that normalizes
-wall-clock across runner speeds.
+cells, DESIGN.md §12, plus the continuous-batching scheduler's
+``serve_cb_p50``/``serve_cb_p99`` and the hot-tenant-flood
+``serve_fairness`` cell — cold-tenant p99 wall with the max cold
+queue wait in ticks as the structural gate, DESIGN.md §14), and the
+``calib`` record that normalizes wall-clock across runner speeds.
 """
 from __future__ import annotations
 

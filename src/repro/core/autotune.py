@@ -116,6 +116,72 @@ def predict_seconds(a: CSRMatrix, d: int, cfg: TuneConfig, *,
     return max(compute_s, memory_s) + ws.num_trips * TRIP_OVERHEAD_S
 
 
+def spmm_tune_key(a: CSRMatrix, d: int, *, backend: str, interpret: bool,
+                  x_sharding: str, mesh,
+                  candidates: Sequence[TuneConfig]) -> Tuple:
+    """The memoization key for one search — factored out so the batched
+    knob resolver (DESIGN.md §14.3) can *peek* a member's winner with
+    exactly the key its solo warmup used."""
+    return ("spmm_tune", a.fingerprint, d, backend, interpret, x_sharding,
+            mesh_fingerprint(mesh),
+            tuple(dataclasses.astuple(c) for c in candidates))
+
+
+def lookup_tune_result(a: CSRMatrix, d: int, *, backend: str,
+                       interpret: bool, x_sharding: str = "replicated",
+                       mesh=None,
+                       candidates: Sequence[TuneConfig],
+                       cache: JitCache = GLOBAL_CACHE
+                       ) -> Optional[TuneResult]:
+    """The memoized :class:`TuneResult` for one instance, or ``None``
+    when its search has not run (or was evicted).  Never builds and
+    never touches cache stats/recency — safe to call on the dispatch
+    path."""
+    key = spmm_tune_key(a, d, backend=backend, interpret=interpret,
+                        x_sharding=x_sharding, mesh=mesh,
+                        candidates=list(candidates))
+    return cache.peek(key)
+
+
+def resolve_batch_config(results: Sequence[Optional[TuneResult]],
+                         fallback: TuneConfig) -> TuneConfig:
+    """One static configuration for a batched dispatch from the
+    members' memoized solo winners (DESIGN.md §14.3).
+
+    The batched artifact needs ONE knob set, so per-member winners are
+    folded: ``strategy``/``bm``/``bk``/``mxu_gain``/``staging`` by
+    majority vote (ties broken toward the fallback, then toward the
+    earliest member — deterministic for a given batch composition) and
+    ``merge_threshold`` by *min* — the conservative CGCM bound, since
+    the packer already coerces the batch to the minimum member width
+    and a low threshold never merges more than a high one would.
+    Members with no memoized result (search not run yet, or evicted)
+    vote for the fallback.
+    """
+    votes = [r.config if r is not None else fallback for r in results]
+    if not votes:
+        return fallback
+
+    def _majority(field: str):
+        tally: dict = {}
+        order: list = []
+        for v in votes:
+            val = getattr(v, field)
+            if val not in tally:
+                order.append(val)
+            tally[val] = tally.get(val, 0) + 1
+        best = max(tally.values())
+        tied = [val for val in order if tally[val] == best]
+        fb = getattr(fallback, field)
+        return fb if fb in tied else tied[0]
+
+    return TuneConfig(
+        strategy=_majority("strategy"), bm=_majority("bm"),
+        bk=_majority("bk"), mxu_gain=_majority("mxu_gain"),
+        merge_threshold=min(v.merge_threshold for v in votes),
+        staging=_majority("staging"))
+
+
 def _wall_time_measure(compiled, vals, x, *, repeats: int = 3) -> float:
     """Default measurement hook: min-of-N blocked wall time after one
     warmup forward (which also pays tracing/compilation, keeping it out
@@ -137,6 +203,7 @@ def autotune_spmm(a: CSRMatrix, d: int, *, backend: str = "auto",
                   x_sharding: Optional[str] = None,
                   candidates: Optional[Sequence[TuneConfig]] = None,
                   measure: Optional[Callable] = None, top_k: int = 3,
+                  cache_priority: float = 0.0,
                   cache: JitCache = GLOBAL_CACHE):
     """Search the plan space for this instance and return the winning
     compiled artifact (``compile_spmm`` of the winner — a jit-cache hit
@@ -146,7 +213,7 @@ def autotune_spmm(a: CSRMatrix, d: int, *, backend: str = "auto",
         a, d, backend=backend, bm=bm, bk=bk, mxu_gain=mxu_gain,
         interpret=interpret, mesh=mesh, n_chips=n_chips, staging=staging,
         x_sharding=x_sharding, candidates=candidates, measure=measure,
-        top_k=top_k, cache=cache)
+        top_k=top_k, cache_priority=cache_priority, cache=cache)
     return compiled
 
 
@@ -158,6 +225,7 @@ def autotune_spmm_with_result(
         x_sharding: Optional[str] = None,
         candidates: Optional[Sequence[TuneConfig]] = None,
         measure: Optional[Callable] = None, top_k: int = 3,
+        cache_priority: float = 0.0,
         cache: JitCache = GLOBAL_CACHE) -> Tuple[object, TuneResult]:
     """:func:`autotune_spmm` plus the full :class:`TuneResult` (the
     bench tables report the per-candidate rankings)."""
@@ -187,9 +255,9 @@ def autotune_spmm_with_result(
     measure = measure or _wall_time_measure
     mixed = backend == "pallas_bcsr"
 
-    key = ("spmm_tune", a.fingerprint, d, backend, interpret, x_sharding,
-           mesh_fingerprint(mesh),
-           tuple(dataclasses.astuple(c) for c in candidates))
+    key = spmm_tune_key(a, d, backend=backend, interpret=interpret,
+                        x_sharding=x_sharding, mesh=mesh,
+                        candidates=candidates)
 
     def _search() -> TuneResult:
         t0 = time.perf_counter()
@@ -216,9 +284,10 @@ def autotune_spmm_with_result(
         record_build_seconds("tune", res.tune_seconds)
         return res
 
-    result: TuneResult = cache.get_or_build(key, _search)
+    result: TuneResult = cache.get_or_build(key, _search,
+                                            priority=cache_priority)
     compiled = compile_spmm(
         a, d, backend=backend, interpret=interpret, mesh=mesh,
-        x_sharding=x_sharding, cache=cache,
-        **result.config.compile_kwargs())
+        x_sharding=x_sharding, cache_priority=cache_priority,
+        cache=cache, **result.config.compile_kwargs())
     return compiled, result

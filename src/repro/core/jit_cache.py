@@ -21,6 +21,16 @@ unbounded, the pre-existing behavior): the autotuner memoizes search
 results and every candidate artifact it measured, so a long-lived
 serving process would otherwise grow without bound.  ``stats()``
 reports hits/misses/evictions for the serving tier.
+
+Eviction is SLA-aware (DESIGN.md §14.4): every entry carries a
+``priority`` (default 0.0) and the victim is the least-recently-used
+entry *among the lowest-priority class* — plain LRU when every entry is
+at the default, but an artifact protected by a tenant's tight deadline
+hint (the serving tier maps ``deadline_s`` to ``1/deadline``) outlives
+colder entries even when it was touched less recently.  Priorities only
+reorder who dies first; they never exempt an entry from the capacity
+bound, so a cache full of protected artifacts still evicts (the
+least-protected first) instead of growing without bound.
 """
 from __future__ import annotations
 
@@ -55,6 +65,11 @@ class CacheEntry:
     value: Any
     build_seconds: float
     hits: int = 0
+    # SLA eviction score (DESIGN.md §14.4): higher survives longer.
+    # Monotone — repeated get_or_build calls take the max, so a tenant
+    # tightening its deadline upgrades the artifact but a later relaxed
+    # request never downgrades protection someone else relies on.
+    priority: float = 0.0
 
 
 class JitCache:
@@ -75,17 +90,24 @@ class JitCache:
         self.hits = 0
         self.evictions = 0
 
-    def get_or_build(self, key: Key, builder: Callable[[], Any]) -> Any:
+    def get_or_build(self, key: Key, builder: Callable[[], Any], *,
+                     priority: float = 0.0) -> Any:
         """Return the cached value for ``key``, building it at most once
         even under concurrent callers (single-flight).  Waiters of a
         successful build count as hits; if the builder raises, exactly
-        one waiter at a time retries."""
+        one waiter at a time retries.
+
+        ``priority`` is the entry's SLA eviction score (DESIGN.md
+        §14.4): 0.0 (the default) is plain LRU; higher values survive
+        lower ones when the capacity bound forces an eviction.  Hits
+        merge with max, so protection only ever ratchets up."""
         while True:
             with self._lock:
                 ent = self._entries.get(key)
                 if ent is not None:
                     ent.hits += 1
                     self.hits += 1
+                    ent.priority = max(ent.priority, priority)
                     self._entries.move_to_end(key)
                     return ent.value
                 event = self._inflight.get(key)
@@ -114,12 +136,12 @@ class JitCache:
             with self._lock:
                 if self._generation == gen:
                     self._entries[key] = CacheEntry(
-                        value, time.perf_counter() - t0)
+                        value, time.perf_counter() - t0,
+                        priority=priority)
                     self._entries.move_to_end(key)
                     while (self.capacity is not None
                            and len(self._entries) > self.capacity):
-                        self._entries.popitem(last=False)   # LRU out
-                        self.evictions += 1
+                        self._evict_one_locked()
                 # else: clear() ran mid-build — the artifact was built
                 # against invalidated state, so hand it to OUR caller
                 # (who asked before the clear) but never cache it.
@@ -129,6 +151,40 @@ class JitCache:
                     self._inflight.pop(key)
             event.set()
             return value
+
+    def _evict_one_locked(self) -> None:
+        """Drop ONE entry: the least-recently-used member of the
+        lowest-priority class.  OrderedDict order IS recency order, so
+        the first entry at the minimum priority is the victim — plain
+        LRU when priorities are uniform (the pre-SLA behavior, pinned
+        by the test_autotune LRU suite)."""
+        lowest = min(e.priority for e in self._entries.values())
+        for key, ent in self._entries.items():
+            if ent.priority == lowest:
+                del self._entries[key]
+                self.evictions += 1
+                return
+
+    def peek(self, key: Key) -> Optional[Any]:
+        """Return the cached value without building, counting a hit, or
+        touching recency — the read the batched-autotune knob resolver
+        uses to consult members' memoized TuneResults (DESIGN.md §14.3)
+        without perturbing eviction order."""
+        with self._lock:
+            ent = self._entries.get(key)
+            return None if ent is None else ent.value
+
+    def prioritize(self, key: Key, priority: float) -> bool:
+        """Raise an existing entry's eviction priority (max-merge);
+        returns False when the key is absent.  The serving tier calls
+        this when a tenant's deadline hint tightens after its artifact
+        was already built."""
+        with self._lock:
+            ent = self._entries.get(key)
+            if ent is None:
+                return False
+            ent.priority = max(ent.priority, priority)
+            return True
 
     def build_seconds(self, key: Key) -> Optional[float]:
         with self._lock:

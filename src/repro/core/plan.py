@@ -1429,15 +1429,30 @@ def build_batched_workspace(structures, d: int, *,
     alone; only the CGCM width is coerced to a common value (the
     minimum of the members' own choices — the kernel takes one static
     width, and CGCM is bit-identical at any width).
+
+    ``merge_threshold`` may be a single int (every member, the solo
+    semantics) or a sequence of R per-member ints — the batched
+    AUTOTUNED path (DESIGN.md §14.3) feeds each member its own tuned
+    threshold, and the min-coercion of the resulting widths keeps the
+    kernel's one static width.
     """
     if not structures:
         raise ValueError("build_batched_workspace needs >= 1 request")
     mixed = backend == "pallas_bcsr"
     structures = [(np.asarray(rp), np.asarray(ci), tuple(shape))
                   for rp, ci, shape in structures]
+    if np.ndim(merge_threshold) == 0:
+        merge_thresholds = [int(merge_threshold)] * len(structures)
+    else:
+        merge_thresholds = [int(t) for t in merge_threshold]
+        if len(merge_thresholds) != len(structures):
+            raise ValueError(
+                f"per-member merge_threshold needs one entry per "
+                f"request: got {len(merge_thresholds)} for "
+                f"{len(structures)} structures")
     mw = min(choose_merge_width(rp, row_block=row_block,
-                                merge_threshold=merge_threshold)
-             for rp, _, _ in structures)
+                                merge_threshold=t)
+             for (rp, _, _), t in zip(structures, merge_thresholds))
     plans: List = []
     shards: List[FusedEllWorkspace] = []
     bases: List[int] = []

@@ -540,6 +540,7 @@ def compile_spmm(a: CSRMatrix, d: int, *, strategy: str = "nnz_split",
                  x_sharding: Optional[str] = None,
                  merge_threshold: int = 0, autotune: bool = False,
                  measure=None, candidates=None, top_k: int = 3,
+                 cache_priority: float = 0.0,
                  cache: JitCache = GLOBAL_CACHE) -> CompiledSpmm:
     """Build (or fetch) the structure-specialized SpMM artifact.
 
@@ -578,7 +579,12 @@ def compile_spmm(a: CSRMatrix, d: int, *, strategy: str = "nnz_split",
     staging per instance (``core.autotune``, memoized in the same
     cache) — the explicit knobs then serve as the search's fallback
     configuration, and ``measure`` / ``candidates`` / ``top_k`` pass
-    through to the search (deterministic tests inject a fake timer)."""
+    through to the search (deterministic tests inject a fake timer).
+
+    ``cache_priority`` is the artifact's SLA eviction score (DESIGN.md
+    §14.4): the serving tier maps a tenant's deadline hint onto it so a
+    capacity-bounded cache sheds cold tenants' artifacts before those a
+    tight-SLA tenant would have to rebuild on its critical path."""
     if autotune:
         from .autotune import autotune_spmm
         return autotune_spmm(a, d, backend=backend, bm=bm, bk=bk,
@@ -586,6 +592,7 @@ def compile_spmm(a: CSRMatrix, d: int, *, strategy: str = "nnz_split",
                              mesh=mesh, n_chips=n_chips, staging=staging,
                              x_sharding=x_sharding, measure=measure,
                              candidates=candidates, top_k=top_k,
+                             cache_priority=cache_priority,
                              cache=cache)
     backend = _resolve_backend(
         backend, sharded=mesh is not None or n_chips is not None)
@@ -604,7 +611,8 @@ def compile_spmm(a: CSRMatrix, d: int, *, strategy: str = "nnz_split",
                                   interpret=interpret, staging=staging,
                                   x_sharding=x_sharding,
                                   merge_threshold=merge_threshold,
-                                  mesh=mesh, cache=cache))
+                                  mesh=mesh, cache=cache),
+        priority=cache_priority)
 
 
 class CompiledBatchedSpmm:
@@ -625,7 +633,7 @@ class CompiledBatchedSpmm:
                  bm: int = 8, bk: int = 8, mxu_gain: float = 4.0,
                  interpret: Optional[bool] = None,
                  staging: Optional[str] = None,
-                 merge_threshold: int = 0):
+                 merge_threshold=0):
         # sharded=True resolution: batching stacks descriptor tables, so
         # "auto" must land on a fused backend even on CPU (interpret)
         self.backend = _resolve_backend(backend, sharded=True)
@@ -638,7 +646,11 @@ class CompiledBatchedSpmm:
         self.bm = bm
         self.bk = bk
         self.mxu_gain = mxu_gain
-        self.merge_threshold = int(merge_threshold)
+        # scalar = one CGCM threshold for every member; a sequence
+        # carries each member's own tuned threshold into the common-
+        # width fold (DESIGN.md §14.3)
+        self.merge_threshold = _normalize_batch_merge_threshold(
+            merge_threshold, len(structures))
         self.interpret = resolve_interpret(interpret)
         self.staging = _resolve_staging_for(self.backend, staging,
                                             self.interpret)
@@ -729,25 +741,48 @@ class CompiledBatchedSpmm:
                 for r in range(self.n_requests)]
 
 
+def _normalize_batch_merge_threshold(merge_threshold, n_requests: int):
+    """Scalar -> int; per-member sequence -> tuple of ints, collapsed
+    back to the scalar when every member agrees so a uniform tuple and
+    the plain scalar share one cache key (and one artifact)."""
+    if np.ndim(merge_threshold) == 0:
+        return int(merge_threshold)
+    ts = tuple(int(t) for t in merge_threshold)
+    if len(ts) != n_requests:
+        raise ValueError(
+            f"per-request merge_threshold needs {n_requests} entries, "
+            f"got {len(ts)}")
+    if len(set(ts)) == 1:
+        return ts[0]
+    return ts
+
+
 def compile_batched_spmm(structures, d: int, *,
                          strategy: str = "nnz_split",
                          backend: str = "auto", bm: int = 8, bk: int = 8,
                          mxu_gain: float = 4.0,
                          interpret: Optional[bool] = None,
                          staging: Optional[str] = None,
-                         merge_threshold: int = 0,
+                         merge_threshold=0,
+                         cache_priority: float = 0.0,
                          cache: JitCache = GLOBAL_CACHE
                          ) -> CompiledBatchedSpmm:
     """Build (or fetch) the batched multi-tenant artifact (DESIGN.md
     §12): the cache key is the ORDERED tuple of member fingerprints
     plus every knob a solo key carries — so a serving endpoint that
     sees the same batch composition twice pays plan/pack exactly once,
-    the Table IV amortization applied across tenants."""
+    the Table IV amortization applied across tenants.
+
+    ``merge_threshold`` may be one scalar or a per-member sequence (the
+    batched-autotune resolver hands each member its own tuned CGCM
+    threshold, DESIGN.md §14.3).  ``cache_priority`` is the artifact's
+    SLA eviction score (DESIGN.md §14.4)."""
     structures = tuple(structures)
     backend = _resolve_backend(backend, sharded=True)
     interpret = resolve_interpret(interpret)
     staging = _resolve_staging_for(backend, staging, interpret)
-    merge_threshold = int(merge_threshold)
+    merge_threshold = _normalize_batch_merge_threshold(
+        merge_threshold, len(structures))
     key = ("spmm_batch", tuple(a.fingerprint for a in structures), d,
            strategy, backend, bm, bk, mxu_gain, interpret, staging,
            merge_threshold)
@@ -755,7 +790,8 @@ def compile_batched_spmm(structures, d: int, *,
         key, lambda: CompiledBatchedSpmm(
             structures, d, strategy=strategy, backend=backend, bm=bm,
             bk=bk, mxu_gain=mxu_gain, interpret=interpret,
-            staging=staging, merge_threshold=merge_threshold))
+            staging=staging, merge_threshold=merge_threshold),
+        priority=cache_priority)
 
 
 def spmm(a: CSRMatrix, x, *, strategy: str = "nnz_split",

@@ -112,6 +112,16 @@ class DeviceStage:
     them in series.  Iterating yields ``(item, staged)`` pairs in input
     order; an exception raised by the source or the transfer re-raises
     at the consumer's next pull.
+
+    The stage owns a thread, so it has a lifecycle: ``close()`` (or the
+    context manager) stops the look-ahead and joins the worker.
+    Without it, a consumer that abandons iteration early — or an
+    exhausted bounded queue on the producer's error path — left the
+    worker blocked on ``put`` forever: a leaked thread pinning its
+    staged device buffers for the life of the process.  Every ``put``
+    is close-aware (bounded wait, re-checked against the close flag),
+    so close always wins, and ``close`` drains the queue so a blocked
+    worker can finish and be joined.
     """
 
     _DONE = object()
@@ -124,20 +134,58 @@ class DeviceStage:
             transfer = jax.device_put
         self._transfer = transfer
         self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._closed = threading.Event()
         self._thread = threading.Thread(
             target=self._worker, args=(iter(items),), daemon=True)
         self._thread.start()
 
+    def _put(self, obj) -> bool:
+        """Close-aware put: blocks like ``Queue.put`` but gives up as
+        soon as the stage is closed.  Returns False when the item was
+        dropped because of a close."""
+        while not self._closed.is_set():
+            try:
+                self._q.put(obj, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
+
     def _worker(self, it):
         try:
             for item in it:
-                self._q.put((item, self._transfer(item)))
-            self._q.put(self._DONE)
+                if self._closed.is_set():
+                    return
+                if not self._put((item, self._transfer(item))):
+                    return
+            self._put(self._DONE)
         except BaseException as e:      # surfaces at the consumer
-            self._q.put(e)
+            self._put(e)
+
+    def close(self) -> None:
+        """Stop the look-ahead and join the worker.  Idempotent; safe
+        whether iteration finished, was abandoned, or never started.
+        Items already staged are discarded."""
+        self._closed.set()
+        # drain so a worker mid-put (bounded queue full) can observe
+        # the flag and exit instead of spinning until the timeout
+        while True:
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break
+        self._thread.join()
+
+    def __enter__(self) -> "DeviceStage":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     def __iter__(self):
         while True:
+            if self._closed.is_set():
+                return
             got = self._q.get()
             if got is self._DONE:
                 return

@@ -18,9 +18,23 @@ generated artifact across requests.  ``SpmmServer`` is that endpoint
     transfer (or host-side packing) of batch k+1;
   * ``autotune=True`` runs the predict-then-measure search on first
     sight of a structure and serves its solo dispatches with the
-    winning config.
+    winning config — batched dispatches resolve ONE configuration from
+    the members' memoized winners (DESIGN.md §14.3);
+  * a tenant's ``deadline_s`` hint maps onto the artifact's eviction
+    priority, so a capacity-bounded cache sheds cold tenants first
+    (DESIGN.md §14.4).
 
-  # SpMM endpoint smoke (exercises batching + cache + staging):
+``SpmmScheduler`` (DESIGN.md §14) is the continuous-batching layer on
+top: ``submit()`` enqueues one request and returns a future
+immediately; a scheduler loop — running on an injectable clock and an
+injectable executor, so every scheduling decision is reproducible in
+tests without threads or wall time — re-forms ``(d_bucket,
+fingerprint-set)`` batches every tick from whatever is queued, with
+bounded per-tenant queue depth (overflow gets an explicit
+:class:`SpmmRejected`, never a silent drop) and deficit-round-robin
+fairness so a hot tenant cannot starve the rest.
+
+  # SpMM endpoint smoke (exercises batching + scheduler + cache):
   PYTHONPATH=src python -m repro.launch.serve --smoke
 
   # LM generate driver:
@@ -30,16 +44,19 @@ generated artifact across requests.  ``SpmmServer`` is that endpoint
 from __future__ import annotations
 
 import argparse
+import collections
 import dataclasses
 import threading
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..configs import get_config, reduced
+from ..core.autotune import (TuneConfig, default_candidates,
+                             lookup_tune_result, resolve_batch_config)
 from ..core.csr import CSRMatrix, random_csr
 from ..core.jit_cache import GLOBAL_CACHE, JitCache
 from ..core.spmm import (FUSED_BACKENDS, _resolve_backend,
@@ -116,11 +133,25 @@ def d_bucket(d: int) -> int:
     return b
 
 
+def _sla_priority(deadline_s: Optional[float]) -> float:
+    """Deadline hint -> cache eviction score (DESIGN.md §14.4): tighter
+    deadline, higher score; no hint stays 0.0 == plain LRU.  The floor
+    keeps a degenerate deadline from minting an unbounded priority."""
+    if deadline_s is None:
+        return 0.0
+    return 1.0 / max(float(deadline_s), 1e-3)
+
+
 @dataclasses.dataclass
 class SpmmRequest:
     tenant: str
     a: CSRMatrix
     x: np.ndarray                  # (n, d_r) dense operand
+    # SLA hint: seconds the tenant can tolerate end-to-end.  Not a
+    # scheduling deadline (DRR stays the fairness policy) — it maps to
+    # the artifact's eviction priority so a capacity-bounded cache
+    # sheds cold tenants before deadline-critical ones (§14.4).
+    deadline_s: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -131,6 +162,11 @@ class SpmmResponse:
     batch_size: int                # requests in the fused dispatch
     latency_s: float               # round entry -> this batch done
     cache_stats: dict              # JitCache.stats() at completion
+    # continuous-batching metrics (DESIGN.md §14.2) — defaults keep
+    # direct SpmmServer.serve() responses unchanged
+    queue_wait_s: float = 0.0      # admission -> dispatch, clock units
+    queue_wait_ticks: int = 0      # scheduler passes spent queued
+    tenant_share: float = 1.0      # tenant's fraction of this batch
 
 
 class SpmmServer:
@@ -172,36 +208,81 @@ class SpmmServer:
         self.merge_threshold = int(merge_threshold)
         # autotune=True: first sight of a structure runs the predict-
         # then-measure search (memoized in the cache) and solo
-        # dispatches use the winner; BATCHED dispatches keep the
-        # server's fixed knobs — one batch needs one configuration,
-        # and fixed knobs keep batched == solo bit-identity testable
+        # dispatches use the winner; BATCHED dispatches fold the
+        # members' memoized winners into ONE configuration
+        # (core.autotune.resolve_batch_config, DESIGN.md §14.3) with
+        # the server's fixed knobs as the fallback vote
         self.autotune = bool(autotune)
         self.measure = measure
         self.max_batch = int(max_batch)
         self.stage_depth = int(stage_depth)
         self.cache = GLOBAL_CACHE if cache is None else cache
+        # the candidate grid the solo warmups search — the batched knob
+        # resolver must peek with EXACTLY this grid or the keys miss
+        self._tune_candidates = default_candidates(
+            bm=self.bm, bk=self.bk, mxu_gain=self.mxu_gain,
+            staging=self.staging)
+        self._fallback_config = TuneConfig(
+            strategy=self.strategy, bm=self.bm, bk=self.bk,
+            mxu_gain=self.mxu_gain,
+            merge_threshold=self.merge_threshold, staging=self.staging)
         self._lock = threading.Lock()
         self._seen: set = set()        # warmed (fingerprint, bucket)
+        self._sla: Dict[tuple, float] = {}   # (fp, bucket) -> priority
         self.requests_served = 0
         self.batches_dispatched = 0
 
     # -- warmup -------------------------------------------------------------
-    def warmup(self, a: CSRMatrix, d: int):
+    def _priority_for(self, a: CSRMatrix, b: int,
+                      deadline_s: Optional[float]) -> float:
+        """Fold this request's deadline hint into the structure's
+        sticky SLA score (max-merge, §14.4) and return the result."""
+        key = (a.fingerprint, b)
+        pri = _sla_priority(deadline_s)
+        with self._lock:
+            pri = max(pri, self._sla.get(key, 0.0))
+            if pri > 0.0:
+                self._sla[key] = pri
+        return pri
+
+    def warmup(self, a: CSRMatrix, d: int,
+               deadline_s: Optional[float] = None):
         """Single-flight warmup for one tenant structure: build (or
         fetch) the solo artifact for (fingerprint, d-bucket).  Safe to
         call from N threads on first sight — the cache's single-flight
-        gate admits ONE builder and blocks the rest on its result."""
+        gate admits ONE builder and blocks the rest on its result.
+        ``deadline_s`` tightens the artifact's eviction priority
+        (§14.4); omitting it never loosens one already recorded."""
         b = d_bucket(d)
+        pri = self._priority_for(a, b, deadline_s)
         compiled = compile_spmm(
             a, b, strategy=self.strategy, backend=self.backend,
             bm=self.bm, bk=self.bk, mxu_gain=self.mxu_gain,
             interpret=self.interpret, staging=self.staging,
             merge_threshold=self.merge_threshold,
             autotune=self.autotune, measure=self.measure,
-            cache=self.cache)
+            cache_priority=pri, cache=self.cache)
         with self._lock:
             self._seen.add((a.fingerprint, b))
         return compiled
+
+    def _batch_knobs(self, members: Sequence[SpmmRequest], b: int):
+        """The batched dispatch's knob set.  Fixed-knob servers return
+        the constructor knobs (batched == solo bit-identity holds, §12);
+        autotuning servers fold the members' memoized solo winners into
+        one configuration plus a per-member CGCM-threshold tuple
+        (DESIGN.md §14.3).  Pure cache peeks — never triggers a search."""
+        if not self.autotune:
+            return self._fallback_config, self.merge_threshold
+        results = [lookup_tune_result(
+            r.a, b, backend=self.backend, interpret=self.interpret,
+            candidates=self._tune_candidates, cache=self.cache)
+            for r in members]
+        cfg = resolve_batch_config(results, self._fallback_config)
+        thresholds = tuple(
+            res.config.merge_threshold if res is not None
+            else self.merge_threshold for res in results)
+        return cfg, thresholds
 
     # -- serving ------------------------------------------------------------
     def serve(self, requests: Sequence[SpmmRequest]
@@ -223,7 +304,7 @@ class SpmmServer:
             key = (r.a.fingerprint, d_bucket(r.x.shape[1]))
             with self._lock:
                 hits.append(key in self._seen)
-            self.warmup(r.a, r.x.shape[1])
+            self.warmup(r.a, r.x.shape[1], deadline_s=r.deadline_s)
         buckets: Dict[int, List[int]] = {}
         for i, r in enumerate(requests):
             buckets.setdefault(d_bucket(r.x.shape[1]), []).append(i)
@@ -243,16 +324,20 @@ class SpmmServer:
                 x[:, :np.asarray(r.x).shape[1]] = np.asarray(r.x)
                 return idxs, compiled, (np.asarray(r.a.vals, np.float32),
                                         x)
+            members = [requests[i] for i in idxs]
+            cfg, thresholds = self._batch_knobs(members, b)
+            pri = max(self._priority_for(r.a, b, r.deadline_s)
+                      for r in members)
             compiled = compile_batched_spmm(
-                [requests[i].a for i in idxs], b, strategy=self.strategy,
-                backend=self.backend, bm=self.bm, bk=self.bk,
-                mxu_gain=self.mxu_gain, interpret=self.interpret,
-                staging=self.staging,
-                merge_threshold=self.merge_threshold, cache=self.cache)
+                [r.a for r in members], b, strategy=cfg.strategy,
+                backend=self.backend, bm=cfg.bm, bk=cfg.bk,
+                mxu_gain=cfg.mxu_gain, interpret=self.interpret,
+                staging=cfg.staging, merge_threshold=thresholds,
+                cache_priority=pri, cache=self.cache)
             vals = np.concatenate(
-                [np.asarray(requests[i].a.vals, np.float32).ravel()
-                 for i in idxs])
-            x = compiled.stack_inputs([requests[i].x for i in idxs])
+                [np.asarray(r.a.vals, np.float32).ravel()
+                 for r in members])
+            x = compiled.stack_inputs([r.x for r in members])
             return idxs, compiled, (vals, x)
 
         def _transfer(job):
@@ -260,26 +345,27 @@ class SpmmServer:
             return jax.device_put(arrs)
 
         responses: List[Optional[SpmmResponse]] = [None] * len(requests)
-        staged = DeviceStage((_prep(c) for c in chunks),
-                             depth=self.stage_depth, transfer=_transfer)
-        for (idxs, compiled, _), (vals_d, x_d) in staged:
-            if len(idxs) == 1:
-                ys = [compiled(vals_d, x_d)]
-            else:
-                ys = compiled(vals_d, x_d)
-            ys = [np.asarray(y) for y in ys]
-            done = time.perf_counter()
-            stats = self.cache.stats()
-            for j, i in enumerate(idxs):
-                r = requests[i]
-                responses[i] = SpmmResponse(
-                    tenant=r.tenant,
-                    y=ys[j][:, :np.asarray(r.x).shape[1]],
-                    cache_hit=hits[i], batch_size=len(idxs),
-                    latency_s=done - t0, cache_stats=stats)
-            with self._lock:
-                self.batches_dispatched += 1
-                self.requests_served += len(idxs)
+        with DeviceStage((_prep(c) for c in chunks),
+                         depth=self.stage_depth,
+                         transfer=_transfer) as staged:
+            for (idxs, compiled, _), (vals_d, x_d) in staged:
+                if len(idxs) == 1:
+                    ys = [compiled(vals_d, x_d)]
+                else:
+                    ys = compiled(vals_d, x_d)
+                ys = [np.asarray(y) for y in ys]
+                done = time.perf_counter()
+                stats = self.cache.stats()
+                for j, i in enumerate(idxs):
+                    r = requests[i]
+                    responses[i] = SpmmResponse(
+                        tenant=r.tenant,
+                        y=ys[j][:, :np.asarray(r.x).shape[1]],
+                        cache_hit=hits[i], batch_size=len(idxs),
+                        latency_s=done - t0, cache_stats=stats)
+                with self._lock:
+                    self.batches_dispatched += 1
+                    self.requests_served += len(idxs)
         return responses    # type: ignore[return-value]
 
     def stats(self) -> dict:
@@ -289,6 +375,311 @@ class SpmmServer:
                      requests_served=self.requests_served,
                      batches_dispatched=self.batches_dispatched)
         return s
+
+
+# -- continuous batching (DESIGN.md §14) -------------------------------------
+
+@dataclasses.dataclass
+class SpmmRejected:
+    """Explicit admission-control verdict: the request was NOT served
+    and never will be.  Rejection is a response, not an exception — the
+    future resolves to this instead of an :class:`SpmmResponse`, so a
+    caller that forgets to special-case overflow fails loudly on the
+    missing ``.y`` rather than hanging on a dropped request."""
+    tenant: str
+    reason: str                    # "queue_full" | "shutdown"
+    queue_depth: int               # tenant's depth at the decision
+    limit: int                     # the configured bound
+
+
+class SpmmFuture:
+    """The handle ``submit`` returns immediately: ``result()`` blocks
+    (with optional timeout) until the scheduler resolves it to an
+    :class:`SpmmResponse`, an :class:`SpmmRejected`, or re-raises the
+    dispatch error.  Thread-safe; resolution is one-shot."""
+
+    def __init__(self):
+        self._event = threading.Event()
+        self._value = None
+        self._exc: Optional[BaseException] = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    @property
+    def rejected(self) -> bool:
+        return isinstance(self._value, SpmmRejected)
+
+    def _resolve(self, value) -> None:
+        self._value = value
+        self._event.set()
+
+    def _fail(self, exc: BaseException) -> None:
+        self._exc = exc
+        self._event.set()
+
+    def result(self, timeout: Optional[float] = None
+               ) -> Union[SpmmResponse, SpmmRejected]:
+        if not self._event.wait(timeout):
+            raise TimeoutError("SpMM request not resolved yet")
+        if self._exc is not None:
+            raise self._exc
+        return self._value
+
+
+@dataclasses.dataclass
+class _Queued:
+    request: SpmmRequest
+    future: SpmmFuture
+    seq: int                       # global admission order
+    arrival_tick: int              # scheduler ticks completed at submit
+    arrival_time: float            # scheduler clock at submit
+
+
+class ThreadTickLoop:
+    """The production executor: one daemon thread calls ``tick()``
+    until stopped, parking on an event for ``interval_s`` whenever a
+    tick dispatches nothing (``submit`` kicks the event, so admission
+    latency is not bounded by the park interval).  Tests never use
+    this — they tick manually or through the inline executor in
+    ``tests/harness.py``."""
+
+    def __init__(self, interval_s: float = 0.001):
+        self.interval_s = float(interval_s)
+        self._stop = threading.Event()
+        self._wake = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    def start(self, tick: Callable[[], int]) -> None:
+        def _loop():
+            while not self._stop.is_set():
+                if tick() == 0:
+                    self._wake.wait(self.interval_s)
+                    self._wake.clear()
+        self._thread = threading.Thread(target=_loop, daemon=True,
+                                        name="spmm-scheduler")
+        self._thread.start()
+
+    def kick(self) -> None:
+        self._wake.set()
+
+    def stop(self) -> None:
+        self._stop.set()
+        self._wake.set()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+class SpmmScheduler:
+    """Continuous batching over one :class:`SpmmServer` (DESIGN.md
+    §14): a standing request queue replaces the caller-assembled
+    ``serve([...])`` round.
+
+    * ``submit`` admits or rejects immediately — per-tenant FIFO queues
+      bounded at ``max_queue_per_tenant``; overflow resolves the future
+      to :class:`SpmmRejected` (§14.1), never a silent drop.
+    * ``tick`` is ONE scheduling pass: pick the d-bucket of the
+      globally oldest queued request (some tenant's FIFO head, so the
+      choice itself cannot starve), then fill up to the server's
+      ``max_batch`` by deficit-round-robin over the tenant rotation
+      (§14.2) and dispatch through ``server.serve`` — the same batched
+      single-flight jit-cache path, so responses stay bit-identical to
+      solo dispatch.
+    * time and execution are INJECTED: ``clock`` stamps queue-wait
+      metrics; ``executor=None`` means the caller ticks (deterministic
+      tests), ``executor="thread"`` mounts :class:`ThreadTickLoop`, and
+      any object with ``start(tick)``/``stop()`` (optionally
+      ``kick()``) slots in — the harness's inline executor drives the
+      same code the production thread does.
+    """
+
+    def __init__(self, server: SpmmServer, *,
+                 max_queue_per_tenant: int = 16, quantum: int = 1,
+                 clock: Callable[[], float] = time.monotonic,
+                 executor=None):
+        if max_queue_per_tenant < 1:
+            raise ValueError(f"max_queue_per_tenant must be >= 1, got "
+                             f"{max_queue_per_tenant}")
+        if quantum < 1:
+            raise ValueError(f"quantum must be >= 1, got {quantum}")
+        self.server = server
+        self.max_queue_per_tenant = int(max_queue_per_tenant)
+        self.quantum = int(quantum)
+        self.clock = clock
+        self._lock = threading.Lock()      # queue + counter state
+        self._tick_lock = threading.Lock()  # serializes dispatches
+        self._queues: Dict[str, Deque[_Queued]] = {}
+        self._rotation: List[str] = []     # tenants in first-seen order
+        self._deficit: Dict[str, float] = {}
+        self._rr = 0                       # rotation start, advances/tick
+        self._seq = 0
+        self._closed = False
+        self.ticks = 0
+        self.submitted = 0
+        self.rejected = 0
+        self.dispatched = 0
+        if executor == "thread":
+            executor = ThreadTickLoop()
+        self.executor = executor
+        if executor is not None:
+            executor.start(self.tick)
+
+    # -- admission ----------------------------------------------------------
+    def submit(self, request: SpmmRequest) -> SpmmFuture:
+        """Admit (or reject) one request; returns its future
+        immediately.  Malformed widths raise HERE, at the caller —
+        admission is the last point where an error has an owner."""
+        d_bucket(request.x.shape[1])
+        fut = SpmmFuture()
+        with self._lock:
+            self.submitted += 1
+            if self._closed:
+                self.rejected += 1
+                fut._resolve(SpmmRejected(
+                    tenant=request.tenant, reason="shutdown",
+                    queue_depth=0, limit=self.max_queue_per_tenant))
+                return fut
+            q = self._queues.get(request.tenant)
+            if q is None:
+                q = self._queues[request.tenant] = collections.deque()
+                self._rotation.append(request.tenant)
+                self._deficit[request.tenant] = 0.0
+            if len(q) >= self.max_queue_per_tenant:
+                self.rejected += 1
+                fut._resolve(SpmmRejected(
+                    tenant=request.tenant, reason="queue_full",
+                    queue_depth=len(q),
+                    limit=self.max_queue_per_tenant))
+                return fut
+            self._seq += 1
+            q.append(_Queued(request, fut, self._seq, self.ticks,
+                             self.clock()))
+        ex = self.executor
+        if ex is not None and hasattr(ex, "kick"):
+            ex.kick()
+        return fut
+
+    @property
+    def pending(self) -> int:
+        with self._lock:
+            return sum(len(q) for q in self._queues.values())
+
+    # -- the scheduler loop -------------------------------------------------
+    def _form_batch(self) -> List[_Queued]:
+        """One DRR pass (§14.2).  The batch bucket is the globally
+        oldest head's d-bucket; tenants are visited in rotation order
+        starting at ``_rr`` (which advances every tick, so a tenant
+        crowded out of a full batch is visited FIRST within
+        ``n_tenants`` ticks — the starvation bound the property tests
+        pin).  A visited tenant with a matching head earns ``quantum``
+        deficit and spends 1 per dequeued request; heads in other
+        buckets keep their deficit for the tick that picks their
+        bucket.  Only heads dequeue, so per-tenant FIFO is structural."""
+        with self._lock:
+            heads = [(q[0].seq, t) for t, q in self._queues.items() if q]
+            self.ticks += 1
+            if not heads:
+                return []
+            _, oldest = min(heads)
+            bucket = d_bucket(
+                self._queues[oldest][0].request.x.shape[1])
+            batch: List[_Queued] = []
+            cap = self.server.max_batch
+            n = len(self._rotation)
+            for i in range(n):
+                if len(batch) >= cap:
+                    break
+                t = self._rotation[(self._rr + i) % n]
+                q = self._queues[t]
+                if not q:
+                    self._deficit[t] = 0.0
+                    continue
+                if d_bucket(q[0].request.x.shape[1]) != bucket:
+                    continue
+                self._deficit[t] = min(
+                    self._deficit[t] + self.quantum,
+                    float(self.quantum * cap))
+                while (q and len(batch) < cap
+                       and self._deficit[t] >= 1.0
+                       and d_bucket(q[0].request.x.shape[1]) == bucket):
+                    batch.append(q.popleft())
+                    self._deficit[t] -= 1.0
+                if not q:
+                    self._deficit[t] = 0.0
+            self._rr = (self._rr + 1) % max(n, 1)
+            return batch
+
+    def tick(self) -> int:
+        """One scheduling pass: form one batch and dispatch it.
+        Returns the number of requests dispatched (0 = idle tick).  A
+        dispatch error resolves every member future with the exception
+        — the loop survives, the callers see the failure."""
+        with self._tick_lock:
+            batch = self._form_batch()
+            if not batch:
+                return 0
+            dispatch_tick = self.ticks - 1   # index of this pass
+            t_dispatch = self.clock()
+            try:
+                responses = self.server.serve(
+                    [qd.request for qd in batch])
+            except BaseException as e:
+                for qd in batch:
+                    qd.future._fail(e)
+                return len(batch)
+            counts: Dict[str, int] = {}
+            for qd in batch:
+                counts[qd.request.tenant] = \
+                    counts.get(qd.request.tenant, 0) + 1
+            for qd, resp in zip(batch, responses):
+                qd.future._resolve(dataclasses.replace(
+                    resp,
+                    queue_wait_s=max(t_dispatch - qd.arrival_time, 0.0),
+                    queue_wait_ticks=dispatch_tick - qd.arrival_tick,
+                    tenant_share=counts[qd.request.tenant] / len(batch)))
+            with self._lock:
+                self.dispatched += len(batch)
+            return len(batch)
+
+    # -- lifecycle ----------------------------------------------------------
+    def close(self, drain: bool = True) -> None:
+        """Stop admitting, stop the executor, then either drain the
+        queue through normal ticks (``drain=True`` — every pending
+        future resolves to a real response) or resolve the leftovers as
+        shutdown rejections.  Idempotent."""
+        with self._lock:
+            self._closed = True
+        if self.executor is not None:
+            self.executor.stop()
+            self.executor = None
+        if drain:
+            while self.tick():
+                pass
+        with self._lock:
+            leftovers = [qd for q in self._queues.values() for qd in q]
+            for q in self._queues.values():
+                q.clear()
+            self.rejected += len(leftovers)
+        for qd in leftovers:
+            qd.future._resolve(SpmmRejected(
+                tenant=qd.request.tenant, reason="shutdown",
+                queue_depth=0, limit=self.max_queue_per_tenant))
+
+    def __enter__(self) -> "SpmmScheduler":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close(drain=exc == (None, None, None))
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"ticks": self.ticks, "submitted": self.submitted,
+                    "rejected": self.rejected,
+                    "dispatched": self.dispatched,
+                    "pending": sum(len(q)
+                                   for q in self._queues.values()),
+                    "tenants": len(self._rotation)}
 
 
 # -- CLI ---------------------------------------------------------------------
@@ -315,9 +706,11 @@ def _smoke_requests(seed: int = 0) -> List[SpmmRequest]:
 
 
 def run_spmm_smoke() -> int:
-    """The CI serve-smoke: two rounds over a tiny multi-tenant mix.
-    Round 2 must be all cache hits and every response must match the
-    ref backend — exit 0 on success."""
+    """The CI serve-smoke: two ``serve`` rounds over a tiny multi-
+    tenant mix, then the same mix through the continuous-batching
+    scheduler on manual ticks.  Round 2 must be all cache hits, every
+    response must match the ref backend, and the scheduler's outputs
+    must be bit-identical to the direct rounds — exit 0 on success."""
     from ..core.spmm import spmm
     server = SpmmServer(interpret=True, max_batch=4)
     requests = _smoke_requests()
@@ -335,12 +728,28 @@ def run_spmm_smoke() -> int:
         if not np.allclose(resp.y, np.asarray(ref), atol=1e-4):
             raise AssertionError(f"tenant {req.tenant}: served output "
                                  f"diverges from ref backend")
+    # continuous batching: submit everything, drain on manual ticks —
+    # deterministic (no executor thread), and since the scheduler forms
+    # the same per-bucket chunks, outputs must be bit-identical
+    sched = SpmmScheduler(server, max_queue_per_tenant=8)
+    futures = [sched.submit(r) for r in requests]
+    sched.close(drain=True)
+    for req, fut, direct in zip(requests, futures, second):
+        resp = fut.result(timeout=0)
+        assert isinstance(resp, SpmmResponse), f"rejected: {resp}"
+        if not np.array_equal(resp.y, direct.y):
+            raise AssertionError(
+                f"tenant {req.tenant}: scheduler output diverges "
+                f"bitwise from the direct serve round")
+    cb = sched.stats()
     s = server.stats()
     print(f"[serve] {s['requests_served']} requests in "
           f"{s['batches_dispatched']} fused dispatches "
           f"(cold {warm * 1e3:.1f}ms, warm {hot * 1e3:.1f}ms)")
     print(f"[serve] cache: {s['entries']} entries, {s['hits']} hits / "
           f"{s['misses']} misses, tenants={s['tenants']}")
+    print(f"[serve] scheduler: {cb['dispatched']} dispatched in "
+          f"{cb['ticks']} ticks, {cb['rejected']} rejected")
     print("[serve] smoke OK")
     return 0
 

@@ -159,3 +159,49 @@ def test_device_stage_prefetches_ahead():
     # without look-ahead only item 0 (and maybe 1) would be staged
     assert len(staged) >= 3
     assert list(stage) == [(i, i) for i in range(1, 6)]
+
+
+def test_device_stage_close_joins_abandoned_worker():
+    """Regression: a consumer that abandons iteration early used to
+    leave the look-ahead thread blocked on the bounded queue's put
+    forever — a leaked thread pinning staged buffers for the process
+    lifetime.  close() must unblock and join it."""
+    stage = DeviceStage(range(100), depth=1, transfer=lambda v: v)
+    it = iter(stage)
+    assert next(it) == (0, 0)            # consume one, then walk away
+    stage.close()
+    assert not stage._thread.is_alive()
+    # post-close iteration terminates instead of blocking on get()
+    assert list(it) == []
+
+
+def test_device_stage_close_unblocks_producer_error_path():
+    """Regression twin: the worker's exception put() could ALSO block
+    forever when the queue was already full (error raised while the
+    consumer was gone).  close() must win there too."""
+    def src():
+        yield 1                          # fills the depth-1 queue
+        raise RuntimeError("producer died mid-batch")
+
+    stage = DeviceStage(src(), depth=1, transfer=lambda v: v)
+    # never consume: the worker ends up parked delivering the error
+    stage.close()
+    assert not stage._thread.is_alive()
+
+
+def test_device_stage_context_manager_closes():
+    with DeviceStage(range(50), depth=2, transfer=lambda v: v) as stage:
+        it = iter(stage)
+        assert next(it) == (0, 0)
+    assert not stage._thread.is_alive()
+    # and a fully-consumed stage closes cleanly too
+    with DeviceStage([1, 2], transfer=lambda v: v) as stage2:
+        assert list(stage2) == [(1, 1), (2, 2)]
+    assert not stage2._thread.is_alive()
+
+
+def test_device_stage_close_is_idempotent():
+    stage = DeviceStage(range(10), depth=1, transfer=lambda v: v)
+    stage.close()
+    stage.close()
+    assert not stage._thread.is_alive()

@@ -1,0 +1,485 @@
+"""Continuous-batching scheduler (DESIGN.md §14): admission control,
+DRR fairness, starvation bounds, bit-identity to solo dispatch, the
+batched-autotune knob fold and SLA-aware eviction — all on the
+deterministic harness (tests/harness.py): fake clock, inline ticks, no
+sleeps, no timing sensitivity.
+
+The pure scheduling properties (hypothesis section) run against a stub
+server — the scheduler only needs ``.serve``/``.max_batch`` — so they
+cover hundreds of arrival scripts without paying a kernel compile.
+The dispatch-path tests (bit-identity, stress, clear-mid-stream) use
+the real ``SpmmServer`` in interpret mode.  Hypothesis is a dev-only
+dependency: only the property section skips without it, unlike the
+whole-module skip in test_plan.py, so the stress/regression half still
+gates."""
+import dataclasses
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+    def given(*_a, **_k):                # decorator no-ops so the
+        return lambda f: f               # module still imports; the
+
+    def settings(*_a, **_k):             # skipif marker keeps the
+        return lambda f: f               # undecorated bodies from
+
+    class _StrategyStub:                 # ever running
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()
+
+from harness import FakeClock, InlineExecutor, drive_trace, poisson_trace
+from repro.core import random_csr, spmm
+from repro.core.autotune import (TuneConfig, lookup_tune_result,
+                                 resolve_batch_config)
+from repro.core.jit_cache import JitCache
+from repro.launch.serve import (SpmmRejected, SpmmRequest, SpmmResponse,
+                                SpmmScheduler, SpmmServer, d_bucket)
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+
+
+class StubServer:
+    """The scheduler's server contract (``serve`` + ``max_batch``)
+    without kernels: records every dispatched batch, echoes responses.
+    Lets the fairness/admission properties run at pure-python speed."""
+
+    def __init__(self, max_batch: int = 4):
+        self.max_batch = max_batch
+        self.batches = []                # list of request lists
+
+    def serve(self, requests):
+        self.batches.append(list(requests))
+        return [SpmmResponse(tenant=r.tenant,
+                             y=np.zeros((1, 1), np.float32),
+                             cache_hit=True, batch_size=len(requests),
+                             latency_s=0.0, cache_stats={})
+                for r in requests]
+
+
+def _req(tenant: str, d: int = 12) -> SpmmRequest:
+    return SpmmRequest(tenant=tenant, a=None,
+                       x=np.zeros((2, d), np.float32))
+
+
+def _run_script(n_tenants, max_batch, events, *,
+                max_queue: int = 128, serials: bool = False):
+    """Replay one arrival script on manual ticks; returns
+    (stub, scheduler, [(tenant, future)] admitted in order).
+    ``serials=True`` tags each request's ``deadline_s`` with its
+    admission index so the stub can observe dispatch order."""
+    stub = StubServer(max_batch=max_batch)
+    sched = SpmmScheduler(stub, max_queue_per_tenant=max_queue,
+                          clock=FakeClock())
+    admitted = []
+    for serial, (tenant_i, d, ticks_after) in enumerate(events):
+        tenant = f"t{tenant_i}"
+        req = _req(tenant, d)
+        if serials:
+            req.deadline_s = float(serial)
+        fut = sched.submit(req)
+        if not fut.done():               # not rejected at admission
+            admitted.append((tenant, fut))
+        for _ in range(ticks_after):
+            sched.tick()
+    while sched.tick():
+        pass
+    return stub, sched, admitted
+
+
+_scripts = st.tuples(
+    st.integers(1, 4),                       # n_tenants
+    st.integers(1, 4),                       # max_batch
+    st.lists(st.tuples(st.integers(0, 3),            # tenant index
+                       st.sampled_from((12, 20)),    # bucket 16 / 32
+                       st.integers(0, 2)),           # ticks after
+             min_size=1, max_size=30))
+
+
+# -- scheduling properties (stub server) --------------------------------------
+
+@needs_hypothesis
+@settings(max_examples=60, deadline=None)
+@given(_scripts)
+def test_property_batches_bounded_and_single_bucket(script):
+    """No dispatched batch exceeds max_batch, and every batch is one
+    d-bucket (the stacked artifact is per-bucket by construction)."""
+    n_tenants, max_batch, events = script
+    events = [(t % n_tenants, d, k) for t, d, k in events]
+    stub, sched, admitted = _run_script(n_tenants, max_batch, events)
+    assert sum(len(b) for b in stub.batches) == len(admitted)
+    for batch in stub.batches:
+        assert 1 <= len(batch) <= max_batch
+        assert len({d_bucket(r.x.shape[1]) for r in batch}) == 1
+
+
+@needs_hypothesis
+@settings(max_examples=60, deadline=None)
+@given(_scripts)
+def test_property_fifo_within_tenant(script):
+    """Dispatch order within a tenant == admission order (heads-only
+    dequeue makes this structural; the property pins it)."""
+    n_tenants, max_batch, events = script
+    events = [(t % n_tenants, d, k) for t, d, k in events]
+    stub, sched, admitted = _run_script(n_tenants, max_batch, events,
+                                        serials=True)
+    # requests were tagged with a global admission serial (smuggled in
+    # deadline_s, which the stub ignores): within each tenant the
+    # serials must come back in strictly increasing dispatch order —
+    # per-tenant FIFO, across ticks AND across d-buckets
+    seen = {}
+    for batch in stub.batches:
+        for r in batch:
+            seen.setdefault(r.tenant, []).append(r.deadline_s)
+    for tenant, serials in seen.items():
+        assert serials == sorted(serials), \
+            f"{tenant}: dispatched out of admission order"
+        assert len(serials) == len(set(serials))
+
+
+@needs_hypothesis
+@settings(max_examples=60, deadline=None)
+@given(_scripts)
+def test_property_no_starvation(script):
+    """Every admitted request resolves, and waits at most
+    K = n_admitted + n_tenants scheduler passes: each non-idle tick
+    dispatches >= 1 (the batch bucket is the globally oldest head's, so
+    its tenant always qualifies), and the rotation start advances every
+    tick so a crowded-out tenant reaches the front of the DRR scan
+    within n_tenants ticks."""
+    n_tenants, max_batch, events = script
+    events = [(t % n_tenants, d, k) for t, d, k in events]
+    stub, sched, admitted = _run_script(n_tenants, max_batch, events)
+    K = len(admitted) + n_tenants
+    for tenant, fut in admitted:
+        assert fut.done(), f"{tenant}: admitted request never resolved"
+        resp = fut.result(timeout=0)
+        assert isinstance(resp, SpmmResponse)
+        assert 0 <= resp.queue_wait_ticks <= K
+        assert 0.0 < resp.tenant_share <= 1.0
+
+
+@needs_hypothesis
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 6), st.integers(0, 8))
+def test_property_overflow_is_explicit(limit, extra):
+    """Per-tenant depth bound: the first ``limit`` submissions queue,
+    every one past the bound resolves IMMEDIATELY to SpmmRejected with
+    the observed depth and the configured limit — and the admitted ones
+    still all get served afterwards."""
+    stub = StubServer(max_batch=2)
+    sched = SpmmScheduler(stub, max_queue_per_tenant=limit,
+                          clock=FakeClock())
+    futures = [sched.submit(_req("hot")) for _ in range(limit + extra)]
+    for fut in futures[:limit]:
+        assert not fut.done()
+    for fut in futures[limit:]:
+        assert fut.done() and fut.rejected
+        r = fut.result(timeout=0)
+        assert r.reason == "queue_full"
+        assert r.queue_depth == limit
+        assert r.limit == limit
+    while sched.tick():
+        pass
+    for fut in futures[:limit]:
+        assert isinstance(fut.result(timeout=0), SpmmResponse)
+    assert sched.stats()["rejected"] == extra
+    assert sched.stats()["dispatched"] == limit
+
+
+# -- fairness under a hot tenant ---------------------------------------------
+
+def test_hot_tenant_cannot_starve_cold_tenant():
+    """One tenant floods its queue; a cold tenant submitting one
+    request per tick still gets bounded service — DRR gives it a slot
+    in (almost) every batch its bucket runs in."""
+    stub = StubServer(max_batch=2)
+    sched = SpmmScheduler(stub, max_queue_per_tenant=64,
+                          clock=FakeClock())
+    for _ in range(32):
+        sched.submit(_req("hot"))
+    cold_waits = []
+    for _ in range(16):
+        fut = sched.submit(_req("cold"))
+        sched.tick()
+        sched.tick()
+        resp = fut.result(timeout=0)
+        assert isinstance(resp, SpmmResponse)
+        cold_waits.append(resp.queue_wait_ticks)
+    assert max(cold_waits) <= 2
+    # and the hot tenant still gets the residual capacity
+    while sched.tick():
+        pass
+    assert sched.stats()["dispatched"] == 48
+
+
+def test_fake_clock_stamps_queue_wait():
+    clock = FakeClock()
+    stub = StubServer(max_batch=4)
+    sched = SpmmScheduler(stub, clock=clock)
+    fut = sched.submit(_req("a"))
+    clock.advance(1.5)
+    sched.tick()
+    resp = fut.result(timeout=0)
+    assert resp.queue_wait_s == pytest.approx(1.5)
+    assert resp.queue_wait_ticks == 0
+
+
+def test_inline_executor_drives_scheduler():
+    """The executor protocol end-to-end without a thread: start is
+    called, submit kicks, run_until_idle drains, close stops."""
+    ex = InlineExecutor()
+    stub = StubServer(max_batch=4)
+    sched = SpmmScheduler(stub, executor=ex)
+    assert ex.started
+    futures = [sched.submit(_req("a")) for _ in range(3)]
+    assert ex.kicks == 3
+    assert ex.run_until_idle() == 3
+    assert all(isinstance(f.result(timeout=0), SpmmResponse)
+               for f in futures)
+    sched.close()
+    assert ex.stopped
+
+
+def test_future_timeout_and_shutdown_rejection():
+    stub = StubServer(max_batch=4)
+    sched = SpmmScheduler(stub, clock=FakeClock())
+    fut = sched.submit(_req("a"))
+    with pytest.raises(TimeoutError):
+        fut.result(timeout=0)
+    sched.close(drain=False)             # leftovers -> shutdown reject
+    r = fut.result(timeout=0)
+    assert isinstance(r, SpmmRejected) and r.reason == "shutdown"
+    late = sched.submit(_req("a"))       # post-close submit rejects too
+    assert late.result(timeout=0).reason == "shutdown"
+
+
+def test_dispatch_error_resolves_futures():
+    """A serve() crash must not hang callers or kill the loop: every
+    member future re-raises the error, the next tick still works."""
+    class FlakyServer(StubServer):
+        def __init__(self):
+            super().__init__(max_batch=4)
+            self.boom = True
+
+        def serve(self, requests):
+            if self.boom:
+                self.boom = False
+                raise RuntimeError("transient dispatch failure")
+            return super().serve(requests)
+
+    sched = SpmmScheduler(FlakyServer(), clock=FakeClock())
+    f1 = sched.submit(_req("a"))
+    sched.tick()
+    with pytest.raises(RuntimeError, match="transient"):
+        f1.result(timeout=0)
+    f2 = sched.submit(_req("a"))
+    sched.tick()
+    assert isinstance(f2.result(timeout=0), SpmmResponse)
+
+
+# -- real-dispatch acceptance: bit-identity to solo ---------------------------
+
+def _tenant_mats():
+    rng = np.random.default_rng(7)
+    mats = [random_csr(48, 64, density=0.08, family="powerlaw", seed=11),
+            random_csr(64, 48, density=0.06, family="uniform", seed=12),
+            random_csr(40, 40, density=0.12, family="banded", seed=13)]
+    ds = (20, 17, 24)                    # one shared bucket (32)
+    return [(f"t{i}", a,
+             rng.standard_normal((a.shape[1], d)).astype(np.float32))
+            for i, (a, d) in enumerate(zip(mats, ds))]
+
+
+def test_scheduler_bit_identical_to_solo_dispatch():
+    """Acceptance: every response off the continuous-batching path is
+    bit-identical to serving the same request alone on the same server
+    knobs (the §12 stacking invariant carried through the scheduler)."""
+    tenants = _tenant_mats()
+    server = SpmmServer(interpret=True, max_batch=8, cache=JitCache())
+    reqs = [SpmmRequest(tenant=n, a=a, x=x) for n, a, x in tenants]
+    solo = [server.serve([r])[0] for r in reqs]
+    clock = FakeClock()
+    sched = SpmmScheduler(server, clock=clock)
+    events = poisson_trace(tenants, n_requests=9, mean_gap_s=0.001,
+                           seed=3)
+    futures = drive_trace(sched, clock, events, ticks_between=1)
+    by_name = {n: s for (n, _, _), s in zip(tenants, solo)}
+    assert len(futures) == 9
+    for ev, fut in zip(sorted(events, key=lambda e: e.at), futures):
+        resp = fut.result(timeout=0)
+        assert isinstance(resp, SpmmResponse)
+        assert np.array_equal(resp.y, by_name[ev.request.tenant].y), \
+            f"{ev.request.tenant}: scheduler bits diverge from solo"
+    sched.close()
+
+
+# -- threaded stress regression ----------------------------------------------
+
+def test_threaded_stress_one_miss_per_structure():
+    """N producer threads x M tenants against the production
+    ThreadTickLoop: every future resolves, and the jit cache records
+    exactly one miss per distinct (fingerprint, d-bucket) — the single-
+    flight contract under real concurrency.  max_batch=1 keeps every
+    dispatch solo so the only cache keys are the per-structure ones."""
+    mats = [random_csr(24, 24, density=0.15, seed=41),
+            random_csr(32, 24, density=0.12, seed=42)]
+    xs = [np.ones((24, 12), np.float32), np.ones((24, 20), np.float32)]
+    server = SpmmServer(interpret=True, max_batch=1, cache=JitCache())
+    sched = SpmmScheduler(server, max_queue_per_tenant=64,
+                          executor="thread")
+    futures = []
+    fut_lock = threading.Lock()
+
+    def producer(k):
+        for i in range(6):
+            t = (k + i) % 2
+            f = sched.submit(SpmmRequest(tenant=f"m{t}", a=mats[t],
+                                         x=xs[t]))
+            with fut_lock:
+                futures.append(f)
+
+    threads = [threading.Thread(target=producer, args=(k,))
+               for k in range(3)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    sched.close(drain=True)
+    assert len(futures) == 18
+    for f in futures:
+        resp = f.result(timeout=10)
+        assert isinstance(resp, SpmmResponse)
+    st_ = server.cache.stats()
+    assert st_["misses"] == 2            # one per (fingerprint, bucket)
+    assert st_["entries"] == 2
+    assert sched.stats()["dispatched"] == 18
+
+
+def test_cache_clear_mid_stream_still_satisfies_futures():
+    """clear() between ticks invalidates every artifact; the stream
+    must rebuild transparently and every future still resolve with
+    correct numerics."""
+    tenants = _tenant_mats()
+    server = SpmmServer(interpret=True, max_batch=2, cache=JitCache())
+    sched = SpmmScheduler(server, clock=FakeClock())
+    reqs = [SpmmRequest(tenant=n, a=a, x=x) for n, a, x in tenants]
+    futures = [sched.submit(r) for r in reqs for _ in range(2)]
+    sched.tick()
+    server.cache.clear()                 # mid-stream invalidation
+    while sched.tick():
+        pass
+    for f, r in zip(futures, [r for r in reqs for _ in range(2)]):
+        resp = f.result(timeout=0)
+        assert isinstance(resp, SpmmResponse)
+        ref = spmm(r.a, jnp.asarray(r.x), backend="ref")
+        np.testing.assert_allclose(resp.y, np.asarray(ref), atol=1e-4)
+    assert server.cache.stats()["misses"] > 0   # rebuilt post-clear
+
+
+def test_close_drain_serves_everything_queued():
+    tenants = _tenant_mats()
+    server = SpmmServer(interpret=True, max_batch=4, cache=JitCache())
+    with SpmmScheduler(server, clock=FakeClock()) as sched:
+        futures = [sched.submit(SpmmRequest(tenant=n, a=a, x=x))
+                   for n, a, x in tenants]
+    # context exit == close(drain=True): nothing left pending
+    assert sched.pending == 0
+    for f in futures:
+        assert isinstance(f.result(timeout=0), SpmmResponse)
+
+
+# -- batched-autotune knob resolution (DESIGN.md §14.3) -----------------------
+
+def test_batched_dispatch_uses_resolved_tuned_knobs():
+    """An autotuning server's batched artifact must carry the config
+    resolve_batch_config folds from the members' memoized winners, with
+    each member's own CGCM threshold — not the server's fixed knobs."""
+    tenants = _tenant_mats()
+    cache = JitCache()
+    server = SpmmServer(interpret=True, max_batch=8, autotune=True,
+                        measure=lambda compiled, vals, x: 0.0,
+                        cache=cache)
+    reqs = [SpmmRequest(tenant=n, a=a, x=x) for n, a, x in tenants]
+    responses = server.serve(reqs)
+    for resp, r in zip(responses, reqs):
+        ref = spmm(r.a, jnp.asarray(r.x), backend="ref")
+        np.testing.assert_allclose(resp.y, np.asarray(ref), atol=1e-4)
+    results = [lookup_tune_result(
+        r.a, 32, backend=server.backend, interpret=True,
+        candidates=server._tune_candidates, cache=cache) for r in reqs]
+    assert all(res is not None for res in results), \
+        "solo warmups must have memoized their searches"
+    cfg = resolve_batch_config(results, server._fallback_config)
+    batch_keys = [k for k in cache._entries if k[0] == "spmm_batch"]
+    assert len(batch_keys) == 1
+    artifact = cache.peek(batch_keys[0])
+    assert artifact.strategy == cfg.strategy
+    assert (artifact.bm, artifact.bk) == (cfg.bm, cfg.bk)
+    thresholds = tuple(res.config.merge_threshold for res in results)
+    expected = (thresholds[0] if len(set(thresholds)) == 1
+                else thresholds)
+    assert artifact.merge_threshold == expected
+
+
+def test_resolve_batch_config_majority_and_min():
+    fb = TuneConfig(strategy="nnz_split", bm=8, bk=8, mxu_gain=4.0,
+                    merge_threshold=0, staging="resident")
+
+    def _res(strategy, mt):
+        cfg = dataclasses.replace(fb, strategy=strategy,
+                                  merge_threshold=mt)
+        return type("R", (), {"config": cfg})()
+
+    out = resolve_batch_config(
+        [_res("row_split", 32), _res("row_split", 8), None], fb)
+    assert out.strategy == "row_split"       # 2-of-3 majority
+    assert out.merge_threshold == 0          # min includes fallback's 0
+    assert resolve_batch_config([], fb) is fb
+    tie = resolve_batch_config([_res("row_split", 8),
+                                _res("nnz_split", 8)], fb)
+    assert tie.strategy == "nnz_split"       # ties break to fallback
+
+
+# -- SLA-aware eviction (DESIGN.md §14.4) -------------------------------------
+
+def test_sla_priority_protects_entry_from_lru_eviction():
+    cache = JitCache(capacity=2)
+    cache.get_or_build(("sla",), lambda: "protected", priority=1.0)
+    cache.get_or_build(("a",), lambda: 1)
+    cache.get_or_build(("b",), lambda: 2)    # evicts LRU of priority-0
+    assert cache.peek(("sla",)) == "protected"
+    assert cache.peek(("a",)) is None
+    assert cache.stats()["evictions"] == 1
+    # uniform priorities degrade to plain LRU: protected class evicts
+    # among itself once it IS the lowest class
+    cache.get_or_build(("c",), lambda: 3, priority=1.0)
+    assert cache.peek(("b",)) is None        # 0.0 < 1.0 dies first
+
+
+def test_deadline_hint_sets_artifact_priority():
+    """A request's deadline_s must reach the jit-cache entry as
+    1/deadline, max-merged and sticky for the structure."""
+    cache = JitCache()
+    server = SpmmServer(interpret=True, cache=cache)
+    a = random_csr(24, 24, density=0.2, seed=55)
+    x = np.ones((24, 12), np.float32)
+    server.serve([SpmmRequest(tenant="sla", a=a, x=x, deadline_s=0.01)])
+    pris = [e.priority for k, e in cache._entries.items()
+            if k[0] == "spmm" and k[1] == a.fingerprint]
+    assert pris and max(pris) == pytest.approx(100.0)
+    # a later hint-free request must not loosen the protection
+    server.serve([SpmmRequest(tenant="sla", a=a, x=x)])
+    pris = [e.priority for k, e in cache._entries.items()
+            if k[0] == "spmm" and k[1] == a.fingerprint]
+    assert max(pris) == pytest.approx(100.0)
