@@ -99,6 +99,19 @@ def smoke_records() -> list:
     records.append(bench_record("codegen_build_pack_s", "nnz_split",
                                 "pallas_ell", 0,
                                 ops.BUILD_SECONDS["pack"] * 1e3, 0))
+    # the static verifier (DESIGN.md §15) runs at validate="full" under
+    # interpret mode, so the compile above already paid it — the cell
+    # keeps the honest cost next to plan/pack in the Table IV story
+    records.append(bench_record("codegen_verify_s", "nnz_split",
+                                "pallas_ell", 0,
+                                ops.BUILD_SECONDS["verify"] * 1e3, 0))
+    # ... and validate="off" (the production default on TPU) must
+    # contribute EXACTLY zero host seconds to the dispatch path
+    ops.reset_dispatch_counts()
+    compile_spmm(small, 16, backend="pallas_ell", interpret=True,
+                 validate="off", cache=JitCache())
+    assert ops.BUILD_SECONDS["verify"] == 0.0, \
+        "validate='off' must never touch the verifier"
     # the autotune search cost (DESIGN.md §11) on the same fixture —
     # one predict pass over 4 candidates + 1 measured compile; the
     # point the cell tracks is that the search stays codegen-sized

@@ -118,19 +118,28 @@ def predict_seconds(a: CSRMatrix, d: int, cfg: TuneConfig, *,
 
 def spmm_tune_key(a: CSRMatrix, d: int, *, backend: str, interpret: bool,
                   x_sharding: str, mesh,
-                  candidates: Sequence[TuneConfig]) -> Tuple:
+                  candidates: Sequence[TuneConfig],
+                  top_k: int = 3) -> Tuple:
     """The memoization key for one search — factored out so the batched
     knob resolver (DESIGN.md §14.3) can *peek* a member's winner with
-    exactly the key its solo warmup used."""
+    exactly the key its solo warmup used.
+
+    ``top_k`` is part of the search's identity, not a pass-through
+    detail: it sets which predicted candidates get MEASURED, so two
+    searches over the same candidate list with different ``top_k`` can
+    crown different winners (a mispredicted-but-fast config only wins
+    if the measurement stage reaches it)."""
     return ("spmm_tune", a.fingerprint, d, backend, interpret, x_sharding,
             mesh_fingerprint(mesh),
-            tuple(dataclasses.astuple(c) for c in candidates))
+            tuple(dataclasses.astuple(c) for c in candidates),
+            max(int(top_k), 1))
 
 
 def lookup_tune_result(a: CSRMatrix, d: int, *, backend: str,
                        interpret: bool, x_sharding: str = "replicated",
                        mesh=None,
                        candidates: Sequence[TuneConfig],
+                       top_k: int = 3,
                        cache: JitCache = GLOBAL_CACHE
                        ) -> Optional[TuneResult]:
     """The memoized :class:`TuneResult` for one instance, or ``None``
@@ -139,7 +148,7 @@ def lookup_tune_result(a: CSRMatrix, d: int, *, backend: str,
     path."""
     key = spmm_tune_key(a, d, backend=backend, interpret=interpret,
                         x_sharding=x_sharding, mesh=mesh,
-                        candidates=list(candidates))
+                        candidates=list(candidates), top_k=top_k)
     return cache.peek(key)
 
 
@@ -201,6 +210,7 @@ def autotune_spmm(a: CSRMatrix, d: int, *, backend: str = "auto",
                   mesh=None, n_chips: Optional[int] = None,
                   staging: Optional[str] = None,
                   x_sharding: Optional[str] = None,
+                  validate: Optional[str] = None,
                   candidates: Optional[Sequence[TuneConfig]] = None,
                   measure: Optional[Callable] = None, top_k: int = 3,
                   cache_priority: float = 0.0,
@@ -212,7 +222,8 @@ def autotune_spmm(a: CSRMatrix, d: int, *, backend: str = "auto",
     compiled, _ = autotune_spmm_with_result(
         a, d, backend=backend, bm=bm, bk=bk, mxu_gain=mxu_gain,
         interpret=interpret, mesh=mesh, n_chips=n_chips, staging=staging,
-        x_sharding=x_sharding, candidates=candidates, measure=measure,
+        x_sharding=x_sharding, validate=validate, candidates=candidates,
+        measure=measure,
         top_k=top_k, cache_priority=cache_priority, cache=cache)
     return compiled
 
@@ -223,6 +234,7 @@ def autotune_spmm_with_result(
         interpret: Optional[bool] = None, mesh=None,
         n_chips: Optional[int] = None, staging: Optional[str] = None,
         x_sharding: Optional[str] = None,
+        validate: Optional[str] = None,
         candidates: Optional[Sequence[TuneConfig]] = None,
         measure: Optional[Callable] = None, top_k: int = 3,
         cache_priority: float = 0.0,
@@ -232,6 +244,7 @@ def autotune_spmm_with_result(
     from .spmm import (FUSED_BACKENDS, _resolve_backend,
                        _resolve_staging_for, _resolve_x_sharding_for,
                        compile_spmm, resolve_chip_mesh)
+    from ..analysis.verify import resolve_validate
     from ..kernels.ops import record_build_seconds, resolve_interpret
 
     backend = _resolve_backend(
@@ -242,6 +255,10 @@ def autotune_spmm_with_result(
             f"({'/'.join(FUSED_BACKENDS)}); backend={backend!r} has "
             f"nothing to tune")
     interpret = resolve_interpret(interpret)
+    # validate never joins the tune key: verification cannot change a
+    # search's winner (it only gates compilation), so fragmenting the
+    # memoized TuneResult on it would re-run identical searches
+    validate = resolve_validate(validate, interpret)
     staging_r = _resolve_staging_for(backend, staging, interpret)
     mesh = resolve_chip_mesh(mesh, n_chips)
     x_sharding = _resolve_x_sharding_for(backend, x_sharding, interpret,
@@ -257,7 +274,7 @@ def autotune_spmm_with_result(
 
     key = spmm_tune_key(a, d, backend=backend, interpret=interpret,
                         x_sharding=x_sharding, mesh=mesh,
-                        candidates=candidates)
+                        candidates=candidates, top_k=top_k)
 
     def _search() -> TuneResult:
         t0 = time.perf_counter()
@@ -272,7 +289,8 @@ def autotune_spmm_with_result(
         for c in finalists:
             compiled_c = compile_spmm(
                 a, d, backend=backend, interpret=interpret, mesh=mesh,
-                x_sharding=x_sharding, cache=cache, **c.compile_kwargs())
+                x_sharding=x_sharding, validate=validate, cache=cache,
+                **c.compile_kwargs())
             measured[c] = float(measure(compiled_c, vals, x))
         # stable tie-break: measured time, then predicted rank — a
         # constant fake timer degenerates to the predicted order
@@ -288,6 +306,7 @@ def autotune_spmm_with_result(
                                             priority=cache_priority)
     compiled = compile_spmm(
         a, d, backend=backend, interpret=interpret, mesh=mesh,
-        x_sharding=x_sharding, cache_priority=cache_priority,
+        x_sharding=x_sharding, validate=validate,
+        cache_priority=cache_priority,
         cache=cache, **result.config.compile_kwargs())
     return compiled, result

@@ -381,6 +381,12 @@ class FusedEllWorkspace:
     merge_width: int = 1     # CGCM: descriptors per merged grid step
     pack_seconds: float = 0.0  # host cost of _pack_workspace (satellite
                                # of the Table IV amortization story)
+    # the instance's nonzero count — the gather stream's sentinel value
+    # and upper bound.  Stamped by _pack_workspace so a workspace is
+    # self-describing to the static verifier (analysis/verify.py,
+    # DESIGN.md §15); -1 means unknown (hand-built workspaces), and the
+    # gather-bounds invariant is then skipped rather than guessed.
+    nnz: int = -1
 
     def __post_init__(self):
         # pure-VPU packings (the pre-mixed layout): every block is VPU
@@ -888,7 +894,8 @@ def _pack_workspace(plan: MixedPlan, *, mixed_kernel: bool,
         max_span=max_span,
         max_cspan=max_cspan,
         merge_width=mw,
-        pack_seconds=time.perf_counter() - t_pack0)
+        pack_seconds=time.perf_counter() - t_pack0,
+        nnz=nnz)
     assert ws.ws_rows == ws.num_blocks * bm
     assert ws.num_blocks % mw == 0
     return ws

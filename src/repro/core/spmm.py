@@ -32,6 +32,7 @@ once and baked into the jit-cache key like ``interpret``.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Optional
 
 import jax
@@ -49,7 +50,17 @@ from .plan import (SPARSE_ATTN_EINSUM, SPARSE_ATTN_MIXED_EINSUM,
                    build_fused_workspace, build_mixed_plan, build_plan,
                    build_sharded_workspace, choose_merge_width,
                    sharded_workspace_row_maps, workspace_row_map)
+from ..analysis.verify import (PlanVerificationError, check_workspace,
+                               resolve_validate)
 from ..kernels.ops import resolve_interpret, resolve_staging
+
+__all__ = [
+    "BACKENDS", "FUSED_BACKENDS", "X_SHARDING_MODES",
+    "CompiledSpmm", "CompiledBatchedSpmm", "CompiledSparseAttention",
+    "PlanVerificationError", "chip_mesh", "resolve_chip_mesh",
+    "compile_spmm", "compile_batched_spmm", "compile_sparse_attention",
+    "spmm", "sparse_attention",
+]
 
 BACKENDS = ("pallas_ell", "pallas_bcsr", "ref", "dense", "auto")
 
@@ -166,6 +177,24 @@ def _record_build(plan_seconds: float, pack_seconds: float) -> None:
     record_build_seconds("pack", pack_seconds)
 
 
+def _verify_workspace_timed(ws, *, level: str, context: str,
+                            **kwargs) -> None:
+    """Run the static verifier (DESIGN.md §15) over a freshly packed
+    workspace BEFORE any device constants are built, raising
+    :class:`PlanVerificationError` on a malformed plan.  The host cost
+    lands in ``BUILD_SECONDS["verify"]`` next to plan/pack, so the
+    codegen bench can show ``validate="off"`` contributes exactly 0.0
+    to the dispatch path."""
+    if level == "off":
+        return
+    from ..kernels.ops import record_build_seconds
+    t0 = time.perf_counter()
+    try:
+        check_workspace(ws, level=level, context=context, **kwargs)
+    finally:
+        record_build_seconds("verify", time.perf_counter() - t0)
+
+
 @dataclasses.dataclass
 class _FusedConsts:
     """Device-resident fused-plan constants: ONE descriptor table + flat
@@ -229,6 +258,7 @@ class CompiledSpmm:
                  staging: Optional[str] = None,
                  x_sharding: Optional[str] = None,
                  merge_threshold: int = 0,
+                 validate: Optional[str] = None,
                  cache: JitCache = GLOBAL_CACHE):
         self.backend = _resolve_backend(
             backend, sharded=mesh is not None or n_chips is not None)
@@ -240,6 +270,7 @@ class CompiledSpmm:
         # resolved ONCE: the effective flag is part of the compiled
         # artifact's identity (and of every jit-cache key touching it)
         self.interpret = resolve_interpret(interpret)
+        self.validate = resolve_validate(validate, self.interpret)
         self.staging = _resolve_staging_for(self.backend, staging,
                                             self.interpret)
         self.mesh = resolve_chip_mesh(mesh, n_chips)
@@ -279,6 +310,9 @@ class CompiledSpmm:
                 bk=bk, mxu_gain=mxu_gain, x_sharding=self.x_sharding,
                 merge_threshold=self.merge_threshold)
             self.sharded_workspace = sw
+            _verify_workspace_timed(
+                sw, level=self.validate, n_cols=a.shape[1],
+                context=f"compile_spmm[{self.backend}/sharded]")
             self._sharded = _ShardedConsts(
                 blk_off=jnp.asarray(sw.blk_off),
                 blk_L=jnp.asarray(sw.blk_L),
@@ -325,6 +359,9 @@ class CompiledSpmm:
                                     merge_threshold=self.merge_threshold)
             ws = build_fused_workspace(self.mixed_plan or self.plan,
                                        merge_width=mw)
+            _verify_workspace_timed(
+                ws, level=self.validate, n_cols=a.shape[1],
+                context=f"compile_spmm[{self.backend}]")
             self._fused = _FusedConsts(
                 blk_off=jnp.asarray(ws.blk_off),
                 blk_L=jnp.asarray(ws.blk_L),
@@ -514,7 +551,8 @@ class CompiledSpmm:
             key = ("spmmT", self._fingerprint, self.d, self.strategy,
                    self.backend, self.bm, self.bk, self.mxu_gain,
                    self.interpret, self.staging, self.x_sharding,
-                   self.merge_threshold, mesh_fingerprint(self.mesh))
+                   self.merge_threshold, self.validate,
+                   mesh_fingerprint(self.mesh))
             self._transpose = self.cache.get_or_build(
                 key, lambda: CompiledSpmm(
                     t_struct, self.d, strategy=self.strategy,
@@ -522,6 +560,7 @@ class CompiledSpmm:
                     mxu_gain=self.mxu_gain, interpret=self.interpret,
                     staging=self.staging, x_sharding=self.x_sharding,
                     merge_threshold=self.merge_threshold,
+                    validate=self.validate,
                     mesh=self.mesh, cache=self.cache))
             self._t_order = jnp.asarray(order.astype(np.int32))
         vals_t = vals[self._t_order]
@@ -538,7 +577,8 @@ def compile_spmm(a: CSRMatrix, d: int, *, strategy: str = "nnz_split",
                  bk: int = 8, mxu_gain: float = 4.0,
                  staging: Optional[str] = None,
                  x_sharding: Optional[str] = None,
-                 merge_threshold: int = 0, autotune: bool = False,
+                 merge_threshold: int = 0,
+                 validate: Optional[str] = None, autotune: bool = False,
                  measure=None, candidates=None, top_k: int = 3,
                  cache_priority: float = 0.0,
                  cache: JitCache = GLOBAL_CACHE) -> CompiledSpmm:
@@ -584,13 +624,23 @@ def compile_spmm(a: CSRMatrix, d: int, *, strategy: str = "nnz_split",
     ``cache_priority`` is the artifact's SLA eviction score (DESIGN.md
     §14.4): the serving tier maps a tenant's deadline hint onto it so a
     capacity-bounded cache sheds cold tenants' artifacts before those a
-    tight-SLA tenant would have to rebuild on its critical path."""
+    tight-SLA tenant would have to rebuild on its critical path.
+
+    ``validate`` runs the static plan verifier (DESIGN.md §15) over the
+    packed workspace before any device constants are built:
+    ``"off"`` / ``"cheap"`` / ``"full"``, with ``"auto"``/``None``
+    resolving to ``"full"`` under interpret mode (every test verifies
+    every workspace it builds) and ``"off"`` on a real TPU backend (the
+    zero-cost production setting).  A malformed plan raises
+    :class:`~repro.analysis.verify.PlanVerificationError` naming the
+    violated invariants instead of computing silently wrong numerics."""
     if autotune:
         from .autotune import autotune_spmm
         return autotune_spmm(a, d, backend=backend, bm=bm, bk=bk,
                              mxu_gain=mxu_gain, interpret=interpret,
                              mesh=mesh, n_chips=n_chips, staging=staging,
-                             x_sharding=x_sharding, measure=measure,
+                             x_sharding=x_sharding, validate=validate,
+                             measure=measure,
                              candidates=candidates, top_k=top_k,
                              cache_priority=cache_priority,
                              cache=cache)
@@ -602,8 +652,9 @@ def compile_spmm(a: CSRMatrix, d: int, *, strategy: str = "nnz_split",
     x_sharding = _resolve_x_sharding_for(backend, x_sharding, interpret,
                                          mesh)
     merge_threshold = int(merge_threshold)
+    validate = resolve_validate(validate, interpret)
     key = ("spmm", a.fingerprint, d, strategy, backend, bm, bk, mxu_gain,
-           interpret, staging, x_sharding, merge_threshold,
+           interpret, staging, x_sharding, merge_threshold, validate,
            mesh_fingerprint(mesh))
     return cache.get_or_build(
         key, lambda: CompiledSpmm(a, d, strategy=strategy, backend=backend,
@@ -611,6 +662,7 @@ def compile_spmm(a: CSRMatrix, d: int, *, strategy: str = "nnz_split",
                                   interpret=interpret, staging=staging,
                                   x_sharding=x_sharding,
                                   merge_threshold=merge_threshold,
+                                  validate=validate,
                                   mesh=mesh, cache=cache),
         priority=cache_priority)
 
@@ -633,7 +685,8 @@ class CompiledBatchedSpmm:
                  bm: int = 8, bk: int = 8, mxu_gain: float = 4.0,
                  interpret: Optional[bool] = None,
                  staging: Optional[str] = None,
-                 merge_threshold=0):
+                 merge_threshold=0,
+                 validate: Optional[str] = None):
         # sharded=True resolution: batching stacks descriptor tables, so
         # "auto" must land on a fused backend even on CPU (interpret)
         self.backend = _resolve_backend(backend, sharded=True)
@@ -652,6 +705,7 @@ class CompiledBatchedSpmm:
         self.merge_threshold = _normalize_batch_merge_threshold(
             merge_threshold, len(structures))
         self.interpret = resolve_interpret(interpret)
+        self.validate = resolve_validate(validate, self.interpret)
         self.staging = _resolve_staging_for(self.backend, staging,
                                             self.interpret)
         self.d = int(d)
@@ -664,6 +718,9 @@ class CompiledBatchedSpmm:
             merge_threshold=self.merge_threshold,
             fingerprint="+".join(a.fingerprint[:8] for a in structures))
         self.batched_workspace = bw
+        _verify_workspace_timed(
+            bw, level=self.validate,
+            context=f"compile_batched_spmm[{self.backend}]")
         self._consts = _FusedConsts(
             blk_off=jnp.asarray(bw.blk_off),
             blk_L=jnp.asarray(bw.blk_L),
@@ -764,6 +821,7 @@ def compile_batched_spmm(structures, d: int, *,
                          interpret: Optional[bool] = None,
                          staging: Optional[str] = None,
                          merge_threshold=0,
+                         validate: Optional[str] = None,
                          cache_priority: float = 0.0,
                          cache: JitCache = GLOBAL_CACHE
                          ) -> CompiledBatchedSpmm:
@@ -783,14 +841,16 @@ def compile_batched_spmm(structures, d: int, *,
     staging = _resolve_staging_for(backend, staging, interpret)
     merge_threshold = _normalize_batch_merge_threshold(
         merge_threshold, len(structures))
+    validate = resolve_validate(validate, interpret)
     key = ("spmm_batch", tuple(a.fingerprint for a in structures), d,
            strategy, backend, bm, bk, mxu_gain, interpret, staging,
-           merge_threshold)
+           merge_threshold, validate)
     return cache.get_or_build(
         key, lambda: CompiledBatchedSpmm(
             structures, d, strategy=strategy, backend=backend, bm=bm,
             bk=bk, mxu_gain=mxu_gain, interpret=interpret,
-            staging=staging, merge_threshold=merge_threshold),
+            staging=staging, merge_threshold=merge_threshold,
+            validate=validate),
         priority=cache_priority)
 
 
@@ -803,6 +863,7 @@ def spmm(a: CSRMatrix, x, *, strategy: str = "nnz_split",
          x_sharding: Optional[str] = None,
          merge_threshold: int = 0, autotune: bool = False,
          measure=None, candidates=None, top_k: int = 3,
+         validate: Optional[str] = None,
          cache: JitCache = GLOBAL_CACHE) -> jax.Array:
     """Y = A·X, specialized to A's structure and x's column count."""
     compiled = compile_spmm(a, x.shape[1], strategy=strategy,
@@ -813,7 +874,7 @@ def spmm(a: CSRMatrix, x, *, strategy: str = "nnz_split",
                             merge_threshold=merge_threshold,
                             autotune=autotune, measure=measure,
                             candidates=candidates, top_k=top_k,
-                            cache=cache)
+                            validate=validate, cache=cache)
     return compiled(jnp.asarray(a.vals), x)
 
 
@@ -852,6 +913,7 @@ class CompiledSparseAttention:
                  mxu_gain: float = 4.0, staging: Optional[str] = None,
                  merge_threshold: int = 0,
                  sm_scale: Optional[float] = None,
+                 validate: Optional[str] = None,
                  cache: JitCache = GLOBAL_CACHE):
         self.backend = _resolve_backend(
             backend, sharded=mesh is not None or n_chips is not None)
@@ -865,6 +927,7 @@ class CompiledSparseAttention:
         self.mxu_gain = mxu_gain
         self.merge_threshold = int(merge_threshold)
         self.interpret = resolve_interpret(interpret)
+        self.validate = resolve_validate(validate, self.interpret)
         self.staging = _resolve_staging_for(self.backend, staging,
                                             self.interpret)
         self.mesh = resolve_chip_mesh(mesh, n_chips)
@@ -902,6 +965,15 @@ class CompiledSparseAttention:
                 bk=bk, mxu_gain=mxu_gain, x_sharding="replicated",
                 merge_threshold=self.merge_threshold)
             self.sharded_workspace = sw
+            row_maps = sharded_workspace_row_maps(sw)
+            _verify_workspace_timed(
+                sw, level=self.validate, n_cols=a.shape[1],
+                spec=(SPARSE_ATTN_MIXED_EINSUM
+                      if self.backend == "pallas_bcsr"
+                      else SPARSE_ATTN_EINSUM),
+                vals=np.asarray(a.vals), row_map=row_maps,
+                context=f"compile_sparse_attention[{self.backend}"
+                        f"/sharded]")
             self._sharded = _ShardedConsts(
                 blk_off=jnp.asarray(sw.blk_off),
                 blk_L=jnp.asarray(sw.blk_L),
@@ -919,7 +991,7 @@ class CompiledSparseAttention:
                 chip_span=tuple(int(s) for s in sw.chip_span),
                 chip_cspan=tuple(int(s) for s in sw.chip_cspan),
                 merge_width=sw.merge_width)
-            self._row_map = jnp.asarray(sharded_workspace_row_maps(sw))
+            self._row_map = jnp.asarray(row_maps)
             _record_build(
                 sum(p.plan_seconds for p in sw.shard_plans),
                 sw.pack_seconds)
@@ -933,6 +1005,14 @@ class CompiledSparseAttention:
                 mxu_gain=mxu_gain, merge_threshold=self.merge_threshold,
                 fingerprint=a.fingerprint)
             self.workspace = ws
+            # verify the SAME forward map the Q gather will ship (the
+            # perm_roundtrip invariant guards the staged constant, not
+            # a re-derivation)
+            row_map = workspace_row_map(ws.inv_perm, ws.ws_rows)
+            _verify_workspace_timed(
+                ws, level=self.validate, n_cols=a.shape[1], spec=spec,
+                vals=np.asarray(a.vals), row_map=row_map,
+                context=f"compile_sparse_attention[{self.backend}]")
             self._fused = _FusedConsts(
                 blk_off=jnp.asarray(ws.blk_off),
                 blk_L=jnp.asarray(ws.blk_L),
@@ -945,8 +1025,7 @@ class CompiledSparseAttention:
                 max_span=ws.max_span,
                 max_cspan=ws.max_cspan,
                 merge_width=ws.merge_width)
-            self._row_map = jnp.asarray(
-                workspace_row_map(ws.inv_perm, ws.ws_rows))
+            self._row_map = jnp.asarray(row_map)
             _record_build(0.0, ws.pack_seconds)
         elif self.backend != "ref":
             raise ValueError(self.backend)
@@ -1076,6 +1155,7 @@ def compile_sparse_attention(a: CSRMatrix, dh: int,
                              staging: Optional[str] = None,
                              merge_threshold: int = 0,
                              sm_scale: Optional[float] = None,
+                             validate: Optional[str] = None,
                              cache: JitCache = GLOBAL_CACHE
                              ) -> CompiledSparseAttention:
     """Build (or fetch) the structure-specialized sparse-attention
@@ -1092,15 +1172,17 @@ def compile_sparse_attention(a: CSRMatrix, dh: int,
     merge_threshold = int(merge_threshold)
     dv = int(dh) if dv is None else int(dv)
     sm_scale = float(dh) ** -0.5 if sm_scale is None else float(sm_scale)
+    validate = resolve_validate(validate, interpret)
     key = ("attn", a.fingerprint, int(dh), dv, strategy, backend, bm,
            bk, mxu_gain, interpret, staging, merge_threshold, sm_scale,
-           mesh_fingerprint(mesh))
+           validate, mesh_fingerprint(mesh))
     return cache.get_or_build(
         key, lambda: CompiledSparseAttention(
             a, dh, dv, strategy=strategy, backend=backend, bm=bm,
             bk=bk, mxu_gain=mxu_gain, interpret=interpret,
             staging=staging, merge_threshold=merge_threshold,
-            sm_scale=sm_scale, mesh=mesh, cache=cache))
+            sm_scale=sm_scale, validate=validate, mesh=mesh,
+            cache=cache))
 
 
 def sparse_attention(a: CSRMatrix, q, k, v, *,
@@ -1112,6 +1194,7 @@ def sparse_attention(a: CSRMatrix, q, k, v, *,
                      staging: Optional[str] = None,
                      merge_threshold: int = 0,
                      sm_scale: Optional[float] = None,
+                     validate: Optional[str] = None,
                      cache: JitCache = GLOBAL_CACHE) -> jax.Array:
     """One-shot convenience: softmax(mask ⊙ (Q·Kᵀ)) · V specialized to
     the mask's structure and the runtime head/value widths."""
@@ -1119,5 +1202,6 @@ def sparse_attention(a: CSRMatrix, q, k, v, *,
         a, q.shape[1], v.shape[1], strategy=strategy, backend=backend,
         bm=bm, interpret=interpret, mesh=mesh, n_chips=n_chips, bk=bk,
         mxu_gain=mxu_gain, staging=staging,
-        merge_threshold=merge_threshold, sm_scale=sm_scale, cache=cache)
+        merge_threshold=merge_threshold, sm_scale=sm_scale,
+        validate=validate, cache=cache)
     return compiled(jnp.asarray(a.vals), q, k, v)

@@ -30,10 +30,31 @@ from .spmm_bcsr_fused import (spmm_bcsr_fused, spmm_bcsr_fused_sharded,
 # reuses the compiled kernel but each op wrapper call is one dispatch)
 DISPATCH_COUNTS: "collections.Counter[str]" = collections.Counter()
 
+# The registry of every dispatch-count key any kernel entry point may
+# increment.  tools/lint_invariants.py statically cross-checks the two
+# directions: every ``DISPATCH_COUNTS[...] += `` site in src/ uses a
+# literal key registered here, and every key here has at least one
+# increment site — so a new kernel wrapper cannot ship an accounting
+# key the Table IV tests (and the smoke-bench cells) don't know about,
+# and a renamed wrapper cannot leave a stale key behind.
+DISPATCH_KEYS = frozenset({
+    # per-pallas_call invariant keys (one per plan, n_chips when sharded)
+    "ell_segment", "ell_fused", "bcsr", "bcsr_fused", "attn_fused",
+    "sddmm",
+    # lowering-variant keys: WHICH path served a forward
+    "ell_fused_merged", "ell_fused_dma", "ell_fused_sharded",
+    "ell_fused_xshard",
+    "bcsr_fused_merged", "bcsr_fused_dma", "bcsr_fused_sharded",
+    "bcsr_fused_xshard",
+    "attn_fused_merged", "attn_fused_dma", "attn_fused_sharded",
+})
+
 # kind -> accumulated host seconds spent building plans/packings (the
 # paper's Table IV JIT-cost side, measurable per phase: "plan" covers
 # build/merge/tag, "pack" the descriptor-table packing, "tune" the
-# autotuner's search loop).  Reset together with DISPATCH_COUNTS.
+# autotuner's search loop, "verify" the static plan verifier — §15's
+# honest-cost cell; exactly 0.0 under validate="off").  Reset together
+# with DISPATCH_COUNTS.
 BUILD_SECONDS: "collections.Counter[str]" = collections.Counter()
 
 

@@ -57,11 +57,12 @@ import numpy as np
 from ..configs import get_config, reduced
 from ..core.autotune import (TuneConfig, default_candidates,
                              lookup_tune_result, resolve_batch_config)
+from ..analysis.verify import resolve_validate
 from ..core.csr import CSRMatrix, random_csr
 from ..core.jit_cache import GLOBAL_CACHE, JitCache
-from ..core.spmm import (FUSED_BACKENDS, _resolve_backend,
-                         _resolve_staging_for, compile_batched_spmm,
-                         compile_spmm)
+from ..core.spmm import (FUSED_BACKENDS, PlanVerificationError,
+                         _resolve_backend, _resolve_staging_for,
+                         compile_batched_spmm, compile_spmm)
 from ..data.pipeline import DeviceStage
 from ..kernels.ops import resolve_interpret
 from ..models.model import Model
@@ -186,7 +187,9 @@ class SpmmServer:
                  mxu_gain: float = 4.0,
                  interpret: Optional[bool] = None,
                  staging: Optional[str] = None, merge_threshold: int = 0,
-                 autotune: bool = False, measure=None, max_batch: int = 8,
+                 validate: Optional[str] = None,
+                 autotune: bool = False, measure=None, top_k: int = 3,
+                 max_batch: int = 8,
                  stage_depth: int = 2,
                  cache: Optional[JitCache] = None):
         # sharded=True resolution: batching needs the fused descriptor-
@@ -203,6 +206,13 @@ class SpmmServer:
         self.bk = bk
         self.mxu_gain = mxu_gain
         self.interpret = resolve_interpret(interpret)
+        # admission control for generated plans (DESIGN.md §15): every
+        # artifact this server compiles runs the static verifier at
+        # this level, so a malformed plan surfaces as a
+        # PlanVerificationError at admission — which the scheduler maps
+        # to SpmmRejected("invalid_plan") — never as wrong numerics
+        # inside a shared batch
+        self.validate = resolve_validate(validate, self.interpret)
         self.staging = _resolve_staging_for(self.backend, staging,
                                             self.interpret)
         self.merge_threshold = int(merge_threshold)
@@ -214,6 +224,11 @@ class SpmmServer:
         # the server's fixed knobs as the fallback vote
         self.autotune = bool(autotune)
         self.measure = measure
+        # the measured-finalist count the solo warmup searches use; the
+        # batched knob resolver peeks with EXACTLY this value or the
+        # memoized winners miss (top_k is part of the tune key — it
+        # decides which candidates get measured, hence the winner)
+        self.top_k = int(top_k)
         self.max_batch = int(max_batch)
         self.stage_depth = int(stage_depth)
         self.cache = GLOBAL_CACHE if cache is None else cache
@@ -260,7 +275,9 @@ class SpmmServer:
             bm=self.bm, bk=self.bk, mxu_gain=self.mxu_gain,
             interpret=self.interpret, staging=self.staging,
             merge_threshold=self.merge_threshold,
+            validate=self.validate,
             autotune=self.autotune, measure=self.measure,
+            top_k=self.top_k,
             cache_priority=pri, cache=self.cache)
         with self._lock:
             self._seen.add((a.fingerprint, b))
@@ -276,7 +293,8 @@ class SpmmServer:
             return self._fallback_config, self.merge_threshold
         results = [lookup_tune_result(
             r.a, b, backend=self.backend, interpret=self.interpret,
-            candidates=self._tune_candidates, cache=self.cache)
+            candidates=self._tune_candidates, top_k=self.top_k,
+            cache=self.cache)
             for r in members]
         cfg = resolve_batch_config(results, self._fallback_config)
         thresholds = tuple(
@@ -333,6 +351,7 @@ class SpmmServer:
                 backend=self.backend, bm=cfg.bm, bk=cfg.bk,
                 mxu_gain=cfg.mxu_gain, interpret=self.interpret,
                 staging=cfg.staging, merge_threshold=thresholds,
+                validate=self.validate,
                 cache_priority=pri, cache=self.cache)
             vals = np.concatenate(
                 [np.asarray(r.a.vals, np.float32).ravel()
@@ -387,7 +406,7 @@ class SpmmRejected:
     caller that forgets to special-case overflow fails loudly on the
     missing ``.y`` rather than hanging on a dropped request."""
     tenant: str
-    reason: str                    # "queue_full" | "shutdown"
+    reason: str        # "queue_full" | "shutdown" | "invalid_plan"
     queue_depth: int               # tenant's depth at the decision
     limit: int                     # the configured bound
 
@@ -610,11 +629,42 @@ class SpmmScheduler:
             self._rr = (self._rr + 1) % max(n, 1)
             return batch
 
+    def _reject_invalid(self, batch: List["_Queued"]) -> List["_Queued"]:
+        """Admission triage after a batch failed plan verification
+        (DESIGN.md §15): probe each member's SOLO artifact, resolve the
+        culprits to ``SpmmRejected("invalid_plan")``, and return the
+        survivors for a re-dispatch — one tenant's malformed plan never
+        poisons the co-batched tenants or takes the loop down."""
+        survivors: List[_Queued] = []
+        rejected = 0
+        for qd in batch:
+            r = qd.request
+            try:
+                self.server.warmup(r.a, r.x.shape[1],
+                                   deadline_s=r.deadline_s)
+            except PlanVerificationError:
+                qd.future._resolve(SpmmRejected(
+                    tenant=r.tenant, reason="invalid_plan",
+                    queue_depth=0, limit=0))
+                rejected += 1
+            except BaseException as e:
+                qd.future._fail(e)
+                rejected += 1
+            else:
+                survivors.append(qd)
+        if rejected:
+            with self._lock:
+                self.rejected += rejected
+        return survivors
+
     def tick(self) -> int:
         """One scheduling pass: form one batch and dispatch it.
         Returns the number of requests dispatched (0 = idle tick).  A
-        dispatch error resolves every member future with the exception
-        — the loop survives, the callers see the failure."""
+        :class:`PlanVerificationError` triages the batch — culprit
+        members resolve to ``SpmmRejected("invalid_plan")`` and the
+        rest re-dispatch this same tick; any other dispatch error
+        resolves every member future with the exception — the loop
+        survives, the callers see the failure."""
         with self._tick_lock:
             batch = self._form_batch()
             if not batch:
@@ -624,6 +674,18 @@ class SpmmScheduler:
             try:
                 responses = self.server.serve(
                     [qd.request for qd in batch])
+            except PlanVerificationError:
+                n_formed = len(batch)
+                batch = self._reject_invalid(batch)
+                if not batch:
+                    return n_formed
+                try:
+                    responses = self.server.serve(
+                        [qd.request for qd in batch])
+                except BaseException as e:
+                    for qd in batch:
+                        qd.future._fail(e)
+                    return n_formed
             except BaseException as e:
                 for qd in batch:
                     qd.future._fail(e)

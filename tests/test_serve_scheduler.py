@@ -483,3 +483,73 @@ def test_deadline_hint_sets_artifact_priority():
     pris = [e.priority for k, e in cache._entries.items()
             if k[0] == "spmm" and k[1] == a.fingerprint]
     assert max(pris) == pytest.approx(100.0)
+
+
+# -- invalid-plan admission control (DESIGN.md §15) ---------------------------
+
+def _invalid_csr(m=16, n=16, nnz=8, seed=7):
+    """A structurally plausible CSRMatrix whose column ids overrun n —
+    CSRMatrix asserts row_ptr consistency but NOT column bounds, so
+    this is the natural producer bug the verifier must catch at
+    admission instead of poisoning a whole batch."""
+    from repro.core.csr import CSRMatrix
+    rng = np.random.default_rng(seed)
+    row_ptr = np.zeros(m + 1, np.int64)
+    row_ptr[1:] = np.cumsum(np.bincount(
+        rng.integers(0, m, nnz), minlength=m))
+    cols = rng.integers(0, n, nnz).astype(np.int32)
+    cols[0] = n + 4
+    return CSRMatrix((m, n), row_ptr, cols, jnp.ones(nnz))
+
+
+def test_invalid_plan_rejected_batchmates_survive():
+    """A malformed structure in a formed batch must resolve ITS future
+    to SpmmRejected(reason="invalid_plan") while every batch-mate is
+    re-served in the same tick with correct numerics."""
+    server = SpmmServer(interpret=True, max_batch=8, cache=JitCache())
+    assert server.validate == "full"     # interpret mode forces it on
+    sched = SpmmScheduler(server, clock=FakeClock())
+    bad = _invalid_csr()
+    good = random_csr(16, 16, density=0.2, seed=8)
+    x = np.ones((16, 12), np.float32)
+    f_good1 = sched.submit(SpmmRequest(tenant="ok", a=good, x=x))
+    f_bad = sched.submit(SpmmRequest(tenant="ok", a=bad, x=x))
+    f_good2 = sched.submit(SpmmRequest(tenant="ok", a=good, x=x))
+    while sched.tick():
+        pass
+    rej = f_bad.result(timeout=0)
+    assert isinstance(rej, SpmmRejected)
+    assert rej.reason == "invalid_plan"
+    for f in (f_good1, f_good2):
+        resp = f.result(timeout=0)
+        assert isinstance(resp, SpmmResponse)
+        ref = spmm(good, jnp.asarray(x), backend="ref")
+        np.testing.assert_allclose(resp.y, np.asarray(ref), atol=1e-4)
+    assert sched.stats()["rejected"] >= 1
+    sched.close()
+
+
+def test_all_invalid_batch_still_progresses_and_closes():
+    """close(drain=True) over a queue of ONLY malformed requests must
+    terminate: every future resolves to invalid_plan, none hang."""
+    server = SpmmServer(interpret=True, max_batch=4, cache=JitCache())
+    with SpmmScheduler(server, clock=FakeClock()) as sched:
+        futures = [sched.submit(SpmmRequest(
+            tenant="bad", a=_invalid_csr(seed=20 + i),
+            x=np.ones((16, 12), np.float32))) for i in range(3)]
+    assert sched.pending == 0
+    for f in futures:
+        rej = f.result(timeout=0)
+        assert isinstance(rej, SpmmRejected)
+        assert rej.reason == "invalid_plan"
+
+
+def test_direct_serve_raises_on_invalid_plan():
+    """The unbatched front door keeps raising: only the scheduler path
+    converts PlanVerificationError into an admission rejection."""
+    from repro.core.spmm import PlanVerificationError
+    server = SpmmServer(interpret=True, cache=JitCache())
+    with pytest.raises(PlanVerificationError):
+        server.serve([SpmmRequest(
+            tenant="bad", a=_invalid_csr(),
+            x=np.ones((16, 12), np.float32))])

@@ -1,0 +1,450 @@
+#!/usr/bin/env python
+"""Repo invariant linter: the meta-contracts the dispatch stack relies
+on, enforced statically over src/ (DESIGN.md §15, gating in CI next to
+ruff).  Stdlib-only — pure AST, no imports of the package under lint.
+
+The plan verifier (analysis/verify.py) checks the artifacts the JIT
+pipeline EMITS; this pass checks the repo's own generator code for the
+contracts no runtime test pins reliably:
+
+  cache-key        every knob parameter a ``compile_*`` function
+  completeness     accepts appears in its JitCache ``key = (...)``
+                   tuple — a knob missing from the key silently serves
+                   one configuration's artifact to another's callers.
+                   ``autotune_*`` functions are held to the same rule
+                   against their ``*_key(...)`` helper call.
+
+  dispatch-count   every ``DISPATCH_COUNTS[...] += `` site uses a
+  registry         string literal registered in ``ops.DISPATCH_KEYS``,
+                   every registered key has an increment site, and
+                   every ``*_op`` kernel entry point in ops.py
+                   increments at least once — so the Table IV
+                   accounting can't drift from the wrappers.
+
+  lock discipline  inside classes that build a ``self._lock``, no
+                   mutation of the protected attributes
+                   (``JitCache._entries`` et al.) happens outside a
+                   ``with self._lock:`` block, ``__init__``, or a
+                   ``*_locked``-suffixed method.
+
+Run: ``python tools/lint_invariants.py [--root src]``; exit 1 on any
+finding.  tests/test_lint_invariants.py runs each rule on synthetic
+snippets (proving the rules can fire) and on the real tree (proving it
+is clean).
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import dataclasses
+import sys
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+DEFAULT_SRC = REPO_ROOT / "src"
+
+# compile_* params that legitimately stay out of the cache key: cache
+# plumbing, search pass-throughs (they join the TUNE key instead), and
+# n_chips (normalized into the mesh fingerprint before keying)
+COMPILE_KEY_ALLOW = {
+    "cache", "cache_priority", "autotune", "measure", "candidates",
+    "top_k", "n_chips",
+}
+# autotune_* params that stay out of the tune key: cache plumbing and
+# the knobs that fold into the candidate grid (default_candidates) —
+# plus validate, which gates compilation but cannot change a winner
+AUTOTUNE_KEY_ALLOW = {
+    "cache", "cache_priority", "measure", "bm", "bk", "mxu_gain",
+    "staging", "n_chips", "validate",
+}
+# attributes the lock-discipline rule protects when a class owns a
+# self._lock (the JitCache internal state; harmless elsewhere — a
+# class without these names simply has nothing to flag)
+LOCK_PROTECTED = {
+    "_entries", "_inflight", "_generation", "hits", "misses",
+    "evictions",
+}
+# container method calls that mutate their receiver
+MUTATING_METHODS = {
+    "pop", "popitem", "clear", "update", "setdefault", "append",
+    "extend", "move_to_end", "add", "remove", "discard", "insert",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+def _names_in(node: ast.AST) -> Set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def _param_names(fn) -> List[str]:
+    a = fn.args
+    params = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+    return [p for p in params if p != "self"]
+
+
+def _is_data_param(fn, name: str) -> bool:
+    """The leading positional params of a compile/autotune function are
+    the instance data (a/structures, d/dh/dv) — identified by position,
+    not a hardcoded name list, so a renamed data arg stays exempt."""
+    a = fn.args
+    positional = [p.arg for p in a.posonlyargs + a.args
+                  if p.arg != "self"]
+    return name in positional
+
+
+# -- rule 1: cache-key completeness ------------------------------------------
+
+def _key_tuple_names(fn) -> Optional[Set[str]]:
+    """Names referenced by the function's ``key = (...)`` assignment
+    (None when the function never builds a key)."""
+    for node in ast.walk(fn):
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and node.targets[0].id == "key"):
+            return _names_in(node.value)
+    return None
+
+
+def _key_call_names(fn) -> Optional[Set[str]]:
+    """Names passed to a ``*_key(...)`` helper call (the autotune
+    spelling of rule 1 — the helper owns the tuple)."""
+    for node in ast.walk(fn):
+        if (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+                and node.func.id.endswith("_key")):
+            names: Set[str] = set()
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                names |= _names_in(arg)
+            return names
+    return None
+
+
+def lint_cache_keys(tree: ast.AST, path: str) -> List[Finding]:
+    out: List[Finding] = []
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if fn.name.startswith("compile_"):
+            allow, keyed = COMPILE_KEY_ALLOW, _key_tuple_names(fn)
+        elif fn.name.startswith("autotune_"):
+            allow, keyed = AUTOTUNE_KEY_ALLOW, _key_call_names(fn)
+        else:
+            continue
+        if keyed is None:
+            continue        # no key built here (a delegating wrapper)
+        for p in _param_names(fn):
+            if p in allow or _is_data_param(fn, p):
+                # data args still must key their identity, but they do
+                # it via attributes (a.fingerprint) — the Name check
+                # below covers them when present, never requires them
+                if p in keyed or p in allow:
+                    continue
+            if p not in keyed:
+                out.append(Finding(
+                    "cache-key", path, fn.lineno,
+                    f"{fn.name}() accepts knob {p!r} but its cache key "
+                    f"never references it — two calls differing only "
+                    f"in {p!r} would share one artifact"))
+    return out
+
+
+# -- rule 2: dispatch-count registry -----------------------------------------
+
+def _registry_from(tree: ast.AST, path: str
+                   ) -> Tuple[Optional[Set[str]], Optional[int]]:
+    """The DISPATCH_KEYS frozenset literal (names + line), parsed — not
+    imported — so the linter never executes package code."""
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and node.targets[0].id == "DISPATCH_KEYS"):
+            try:
+                val = node.value
+                if (isinstance(val, ast.Call)
+                        and isinstance(val.func, ast.Name)
+                        and val.func.id == "frozenset" and val.args):
+                    return set(ast.literal_eval(val.args[0])), node.lineno
+                return set(ast.literal_eval(val)), node.lineno
+            except (ValueError, SyntaxError):
+                return None, node.lineno
+    return None, None
+
+
+def _has_dispatch_increment(tree: ast.AST) -> bool:
+    return any(
+        isinstance(n, ast.AugAssign)
+        and isinstance(n.target, ast.Subscript)
+        and isinstance(n.target.value, ast.Name)
+        and n.target.value.id == "DISPATCH_COUNTS"
+        for n in ast.walk(tree))
+
+
+def lint_dispatch_counts(trees: Dict[str, ast.AST],
+                         ops_path: str) -> List[Finding]:
+    out: List[Finding] = []
+    ops_tree = trees.get(ops_path)
+    registry, reg_line = ((None, None) if ops_tree is None
+                          else _registry_from(ops_tree, ops_path))
+    if registry is None and not any(
+            _has_dispatch_increment(t) for t in trees.values()):
+        return out      # tree never touches the counters: rule is moot
+    if ops_tree is None:
+        return [Finding("dispatch-count", ops_path, 1,
+                        "ops.py not found — no DISPATCH_KEYS registry")]
+    if registry is None:
+        return [Finding(
+            "dispatch-count", ops_path, reg_line or 1,
+            "no literal DISPATCH_KEYS frozenset in ops.py — the "
+            "dispatch-count registry is the linter's ground truth")]
+    used: Set[str] = set()
+    for path, tree in trees.items():
+        for node in ast.walk(tree):
+            if not (isinstance(node, ast.AugAssign)
+                    and isinstance(node.target, ast.Subscript)
+                    and isinstance(node.target.value, ast.Name)
+                    and node.target.value.id == "DISPATCH_COUNTS"):
+                continue
+            key_node = node.target.slice
+            if not (isinstance(key_node, ast.Constant)
+                    and isinstance(key_node.value, str)):
+                out.append(Finding(
+                    "dispatch-count", path, node.lineno,
+                    "DISPATCH_COUNTS incremented with a non-literal "
+                    "key — the registry (and the tests reading it) "
+                    "cannot see dynamic keys"))
+                continue
+            used.add(key_node.value)
+            if key_node.value not in registry:
+                out.append(Finding(
+                    "dispatch-count", path, node.lineno,
+                    f"DISPATCH_COUNTS[{key_node.value!r}] is not "
+                    f"registered in ops.DISPATCH_KEYS"))
+    for stale in sorted(registry - used):
+        out.append(Finding(
+            "dispatch-count", ops_path, reg_line or 1,
+            f"DISPATCH_KEYS entry {stale!r} has no increment site — "
+            f"stale registry entry (renamed or removed wrapper?)"))
+    # rule 2b: every kernel entry point accounts for itself
+    for fn in ast.walk(ops_tree):
+        if not (isinstance(fn, ast.FunctionDef)
+                and fn.name.endswith("_op")):
+            continue
+        has_inc = any(
+            isinstance(n, ast.AugAssign)
+            and isinstance(n.target, ast.Subscript)
+            and isinstance(n.target.value, ast.Name)
+            and n.target.value.id == "DISPATCH_COUNTS"
+            for n in ast.walk(fn))
+        if not has_inc:
+            out.append(Finding(
+                "dispatch-count", ops_path, fn.lineno,
+                f"kernel entry point {fn.name}() never increments "
+                f"DISPATCH_COUNTS — its dispatches are invisible to "
+                f"the Table IV accounting"))
+    return out
+
+
+# -- rule 3: lock discipline -------------------------------------------------
+
+def _creates_lock(cls: ast.ClassDef) -> bool:
+    for node in ast.walk(cls):
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Attribute)
+                and node.targets[0].attr == "_lock"
+                and isinstance(node.targets[0].value, ast.Name)
+                and node.targets[0].value.id == "self"):
+            return True
+    return False
+
+
+def _is_self_lock_with(node: ast.With) -> bool:
+    for item in node.items:
+        e = item.context_expr
+        if (isinstance(e, ast.Attribute) and e.attr == "_lock"
+                and isinstance(e.value, ast.Name)
+                and e.value.id == "self"):
+            return True
+    return False
+
+
+def _protected_attr(node: ast.AST) -> Optional[str]:
+    """The protected ``self.X`` attribute this expression resolves to,
+    unwrapping subscripts (``self._entries[key]``)."""
+    while isinstance(node, ast.Subscript):
+        node = node.value
+    if (isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "self"
+            and node.attr in LOCK_PROTECTED):
+        return node.attr
+    return None
+
+
+def _mutations_in(stmt: ast.AST) -> Iterable[Tuple[str, int]]:
+    for node in ast.walk(stmt):
+        targets: List[ast.AST] = []
+        if isinstance(node, ast.Assign):
+            targets = list(node.targets)
+        elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+            targets = [node.target]
+        elif isinstance(node, ast.Delete):
+            targets = list(node.targets)
+        elif (isinstance(node, ast.Call)
+              and isinstance(node.func, ast.Attribute)
+              and node.func.attr in MUTATING_METHODS):
+            attr = _protected_attr(node.func.value)
+            if attr is not None:
+                yield attr, node.lineno
+            continue
+        for t in targets:
+            attr = _protected_attr(t)
+            if attr is not None:
+                yield attr, node.lineno
+
+
+def _walk_unlocked(body: List[ast.stmt]) -> Iterable[Tuple[str, int]]:
+    """Mutations of protected attributes reachable OUTSIDE any
+    ``with self._lock`` block."""
+    for stmt in body:
+        if isinstance(stmt, ast.With) and _is_self_lock_with(stmt):
+            continue
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue   # nested defs get their own method-level pass
+        yield from _mutations_in_shallow(stmt)
+
+
+def _mutations_in_shallow(stmt: ast.stmt) -> Iterable[Tuple[str, int]]:
+    """Like :func:`_mutations_in` but does not descend into locked
+    ``with`` blocks or nested function definitions."""
+    if isinstance(stmt, ast.With) and _is_self_lock_with(stmt):
+        return
+    if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        return
+    yield from _mutations_in_node_only(stmt)
+    for child in ast.iter_child_nodes(stmt):
+        if isinstance(child, ast.stmt):
+            yield from _mutations_in_shallow(child)
+        elif isinstance(child, ast.expr):
+            # expression children (call args, comprehensions) can hold
+            # mutating calls but never locked with-blocks
+            for node in ast.walk(child):
+                if (isinstance(node, ast.Call)
+                        and isinstance(node.func, ast.Attribute)
+                        and node.func.attr in MUTATING_METHODS):
+                    attr = _protected_attr(node.func.value)
+                    if attr is not None:
+                        yield attr, node.lineno
+
+
+def _mutations_in_node_only(stmt: ast.stmt) -> Iterable[Tuple[str, int]]:
+    targets: List[ast.AST] = []
+    if isinstance(stmt, ast.Assign):
+        targets = list(stmt.targets)
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        targets = [stmt.target]
+    elif isinstance(stmt, ast.Delete):
+        targets = list(stmt.targets)
+    elif isinstance(stmt, ast.Expr):
+        node = stmt.value
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in MUTATING_METHODS):
+            attr = _protected_attr(node.func.value)
+            if attr is not None:
+                yield attr, node.lineno
+    for t in targets:
+        attr = _protected_attr(t)
+        if attr is not None:
+            yield attr, stmt.lineno
+
+
+def lint_lock_discipline(tree: ast.AST, path: str) -> List[Finding]:
+    out: List[Finding] = []
+    for cls in ast.walk(tree):
+        if not isinstance(cls, ast.ClassDef) or not _creates_lock(cls):
+            continue
+        for meth in cls.body:
+            if not isinstance(meth, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                continue
+            if meth.name == "__init__" or meth.name.endswith("_locked"):
+                continue
+            seen: Set[Tuple[str, int]] = set()
+            for attr, line in _walk_unlocked(meth.body):
+                if (attr, line) in seen:
+                    continue
+                seen.add((attr, line))
+                out.append(Finding(
+                    "lock-discipline", path, line,
+                    f"{cls.name}.{meth.name}() mutates self.{attr} "
+                    f"outside a `with self._lock:` block (and is not "
+                    f"*_locked-suffixed)"))
+    return out
+
+
+# -- driver ------------------------------------------------------------------
+
+def lint_source(source: str, path: str = "<snippet>",
+                ops_source: Optional[str] = None) -> List[Finding]:
+    """Lint one source string (the synthetic-snippet test entry point).
+    ``ops_source`` supplies the registry file when the snippet under
+    test increments DISPATCH_COUNTS."""
+    tree = ast.parse(source, filename=path)
+    findings = lint_cache_keys(tree, path)
+    findings += lint_lock_discipline(tree, path)
+    ops_path = "<ops>" if ops_source is not None else path
+    trees = {path: tree}
+    if ops_source is not None:
+        trees[ops_path] = ast.parse(ops_source, filename=ops_path)
+    findings += lint_dispatch_counts(trees, ops_path)
+    return findings
+
+
+def lint_tree(root: Path) -> List[Finding]:
+    findings: List[Finding] = []
+    trees: Dict[str, ast.AST] = {}
+    ops_path = ""
+    for py in sorted(root.rglob("*.py")):
+        rel = (str(py.relative_to(REPO_ROOT))
+               if py.is_relative_to(REPO_ROOT) else str(py))
+        try:
+            tree = ast.parse(py.read_text(), filename=rel)
+        except SyntaxError as e:
+            findings.append(Finding("parse", rel, e.lineno or 1, str(e)))
+            continue
+        trees[rel] = tree
+        if py.name == "ops.py" and py.parent.name == "kernels":
+            ops_path = rel
+        findings += lint_cache_keys(tree, rel)
+        findings += lint_lock_discipline(tree, rel)
+    findings += lint_dispatch_counts(trees, ops_path)
+    return findings
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", type=Path, default=DEFAULT_SRC,
+                    help="tree to lint (default: src/)")
+    args = ap.parse_args(argv)
+    findings = lint_tree(args.root)
+    for f in findings:
+        print(f)
+    if findings:
+        print(f"lint_invariants: {len(findings)} finding(s)")
+        return 1
+    print("lint_invariants: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
